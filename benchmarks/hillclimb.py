@@ -1,0 +1,89 @@
+"""§Perf hillclimbing driver — hypothesis → change → re-lower → verdict.
+
+Each experiment re-runs the dry-run for one (arch, shape) pair with a config
+or option delta and reports the three roofline terms vs the baseline.  The
+narrative log (napkin math + verdicts) lives in EXPERIMENTS.md §Perf; this
+script is the measurement harness that produced it.
+
+  PYTHONPATH=src python -m benchmarks.hillclimb --pair llama3-405b:train_4k
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Any, Dict, List, Optional
+
+# NOTE: importing repro.launch.dryrun sets XLA_FLAGS to 512 host devices —
+# this module is dry-run-only, exactly like repro.launch.dryrun itself.
+from repro.launch import dryrun
+
+
+def experiment(arch: str, shape: str, tag: str,
+               opts: Optional[dict] = None,
+               overrides: Optional[dict] = None,
+               multi_pod: bool = False) -> Dict[str, Any]:
+    rec = dryrun.run_one(arch, shape, multi_pod, opts=opts,
+                         cfg_overrides=overrides, verbose=False)
+    out = {"tag": tag, "arch": arch, "shape": shape,
+           "opts": opts or {}, "overrides": overrides or {},
+           "status": rec.get("status")}
+    if rec.get("status") == "ok":
+        out["roofline"] = rec["roofline"]
+        out["bytes_per_device"] = rec["bytes_per_device"]
+        out["collectives"] = rec.get("collectives_scan_hlo")
+        r = rec["roofline"]
+        print(f"[{tag}] compute={r['compute_s']*1e3:.1f}ms "
+              f"mem={r['memory_s']*1e3:.1f}ms coll={r['collective_s']*1e3:.1f}ms "
+              f"dom={r['dominant']} useful={r['useful_ratio']:.3f} "
+              f"hbm/dev={out['bytes_per_device']/2**30:.2f}GiB", flush=True)
+    else:
+        print(f"[{tag}] {rec.get('status')}: {rec.get('error','')[:200]}",
+              flush=True)
+    return out
+
+
+PAIRS: Dict[str, List[Dict[str, Any]]] = {
+    # 1. worst memory pressure: 405B training on 256 chips (19.1 GiB/dev > 16)
+    "llama3-405b:train_4k": [
+        dict(tag="baseline_remat_full", opts={"remat": "full"}),
+        dict(tag="remat_dots", opts={"remat": "dots"}),
+        dict(tag="remat_none", opts={"remat": "none"}),
+        dict(tag="fused_head", opts={"remat": "full", "fused_head": True}),
+        dict(tag="fused_head_bf16_moments",
+             opts={"remat": "full", "fused_head": True,
+                   "adam_bf16_moments": True}),
+    ],
+    # 2. MoE decode: worst useful_ratio — dispatch strategy comparison
+    "llama4-maverick-400b-a17b:decode_32k": [
+        dict(tag="baseline_scatter", opts={"moe_dispatch": "scatter"}),
+        dict(tag="dense_dispatch", opts={"moe_dispatch": "dense"}),
+    ],
+    "granite-moe-3b-a800m:train_4k": [
+        dict(tag="baseline_scatter", opts={"moe_dispatch": "scatter"}),
+        dict(tag="dense_dispatch", opts={"moe_dispatch": "dense"}),
+        dict(tag="dense_fused_head",
+             opts={"moe_dispatch": "dense", "fused_head": True}),
+    ],
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", default=None,
+                    help="arch:shape (default: all predefined)")
+    ap.add_argument("--out", default="results/hillclimb.jsonl")
+    args = ap.parse_args()
+
+    pairs = {args.pair: PAIRS[args.pair]} if args.pair else PAIRS
+    for pair, experiments in pairs.items():
+        arch, shape = pair.split(":")
+        print(f"=== hillclimb {arch} x {shape} ===", flush=True)
+        for ex in experiments:
+            rec = experiment(arch, shape, ex["tag"], ex.get("opts"),
+                             ex.get("overrides"), ex.get("multi_pod", False))
+            with open(args.out, "a") as f:
+                f.write(json.dumps(rec) + "\n")
+
+
+if __name__ == "__main__":
+    main()

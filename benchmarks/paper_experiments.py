@@ -1,0 +1,115 @@
+"""Paper-figure reproductions — one function per panel of Fig. 3.
+
+Each returns a list of result dicts; benchmarks/run.py prints the CSV and
+EXPERIMENTS.md records the full-scale numbers.  Claims under test (DESIGN.md
+§1): C1 OPT>Async (accuracy + stability), C2 b=1->2 jump, C3 b sweep knee,
+C4 τ_max cliff, C5 iid robustness.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.hsfl import HSFLConfig, run_hsfl
+
+
+def _run(tag: str, rounds: int, seeds=(0,), **kw) -> Dict:
+    t0 = time.time()
+    finals, comms, tail_stds, curves = [], [], [], []
+    rescues = drops = 0
+    for seed in seeds:
+        log = run_hsfl(HSFLConfig(rounds=rounds, seed=seed, **kw))
+        s = log.summary()
+        finals.append(s["final_acc"])
+        comms.append(s["avg_comm_mb"])
+        accs = [a for a in log.acc_curve if a == a]
+        tail_stds.append(float(np.std(accs[-10:])))
+        curves.append(accs)
+        rescues += s["snapshot_rescues"]
+        drops += s["drops"]
+    n_rounds_total = rounds * len(seeds)
+    return {
+        "name": tag,
+        "us_per_call": (time.time() - t0) / n_rounds_total * 1e6,
+        "final_acc": float(np.mean(finals)),
+        "acc_std": float(np.std(finals)),
+        "avg_comm_mb": float(np.mean(comms)),
+        "tail_std": float(np.mean(tail_stds)),
+        "rescues": rescues,
+        "drops": drops,
+        "curve": [round(float(np.mean([c[i] for c in curves])), 4)
+                  for i in range(0, rounds, max(1, rounds // 20))],
+    }
+
+
+def fig3a_loss_by_distribution(rounds: int = 60, seeds=(0, 1)) -> List[Dict]:
+    """Fig. 3(a): OPT (b=2) vs discard across iid / non-iid / imbalanced."""
+    out = []
+    for dist in ("iid", "noniid", "imbalanced"):
+        out.append(_run(f"fig3a_{dist}_opt_b2", rounds, seeds,
+                        scheme="opt", b=2, distribution=dist))
+        out.append(_run(f"fig3a_{dist}_discard_b1", rounds, seeds,
+                        scheme="discard", b=1, distribution=dist))
+    return out
+
+
+def fig3b_opt_vs_async(rounds: int = 60, seeds=(0, 1)) -> List[Dict]:
+    """Fig. 3(b): OPT-HSFL vs Async-HSFL (staleness-weighted) on non-iid."""
+    return [
+        _run("fig3b_opt_b2", rounds, seeds, scheme="opt", b=2),
+        _run("fig3b_async", rounds, seeds, scheme="async", b=1),
+        _run("fig3b_discard_b1", rounds, seeds, scheme="discard", b=1),
+    ]
+
+
+def fig3c_budget_sweep(rounds: int = 60, seeds=(0,)) -> List[Dict]:
+    """Fig. 3(c): accuracy & comm overhead vs transmission budget b."""
+    return [_run(f"fig3c_b{b}", rounds, seeds, scheme="opt", b=b)
+            for b in (1, 2, 3, 4, 5, 6)]
+
+
+def fig3d_tau_sweep(rounds: int = 60, seeds=(0,)) -> List[Dict]:
+    """Fig. 3(d): accuracy & comm overhead vs one-round latency cap τ_max."""
+    return [_run(f"fig3d_tau{tau}", rounds, seeds, scheme="opt", b=2,
+                 tau_max=float(tau)) for tau in (7, 8, 9, 10, 11)]
+
+
+def ablation_schedule_placement(rounds: int = 40, seeds=(0,)) -> List[Dict]:
+    """Beyond-paper ablation: WHEN to snapshot (Sec. III-B notes the epoch
+    can be 'manually set by the system').  Later snapshots are fresher when
+    they rescue, but have fewer retry opportunities under outages."""
+    return [
+        _run("abl_sched_default_e3", rounds, seeds, scheme="opt", b=2),
+        _run("abl_sched_early_e1", rounds, seeds, scheme="opt", b=2,
+             schedule_override=(1,)),
+        _run("abl_sched_late_e5", rounds, seeds, scheme="opt", b=2,
+             schedule_override=(5,)),
+    ]
+
+
+def ablation_local_epochs(rounds: int = 40, seeds=(0,)) -> List[Dict]:
+    """Paper's conclusion: 'advantages more evident with longer local
+    training'.  Compare the OPT-vs-discard gap at e=6 vs e=12."""
+    out = []
+    for e in (6, 12):
+        out.append(_run(f"abl_e{e}_opt_b2", rounds, seeds, scheme="opt", b=2,
+                        local_epochs=e))
+        out.append(_run(f"abl_e{e}_discard", rounds, seeds, scheme="discard",
+                        b=1, local_epochs=e))
+    return out
+
+
+def beyond_paper_delta_codec(rounds: int = 60, seeds=(0,)) -> List[Dict]:
+    """Beyond-paper: int8 delta-codec compressed snapshots (kernels/delta_codec)
+    shrink eq. 15's payload ~4x -> more opportunistic windows affordable at
+    the same wireless budget."""
+    from repro.kernels.delta_codec import COMPRESS_RATIO
+    return [
+        _run("beyond_codec_off_b2", rounds, seeds, scheme="opt", b=2),
+        _run("beyond_codec_on_b2", rounds, seeds, scheme="opt", b=2,
+             compress_ratio=COMPRESS_RATIO),
+        _run("beyond_codec_on_b4", rounds, seeds, scheme="opt", b=4,
+             compress_ratio=COMPRESS_RATIO),
+    ]

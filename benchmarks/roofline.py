@@ -1,0 +1,91 @@
+"""Roofline table builder — reads dry-run JSONL records (deliverable g).
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.roofline results/dryrun_singlepod.jsonl
+"""
+from __future__ import annotations
+
+import json
+import sys
+from typing import Dict, List
+
+
+def load(path: str) -> List[Dict]:
+    recs = []
+    with open(path) as f:
+        for line in f:
+            recs.append(json.loads(line))
+    # keep the latest record per (arch, shape, mesh, opts)
+    latest = {}
+    for r in recs:
+        key = (r["arch"], r["shape"], r.get("multi_pod"),
+               json.dumps(r.get("opts", {}), sort_keys=True),
+               json.dumps(r.get("overrides", {}), sort_keys=True))
+        latest[key] = r
+    return list(latest.values())
+
+
+def markdown_table(recs: List[Dict]) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant | "
+           "useful | mem/dev GiB |\n|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        if r.get("status") == "skip_documented":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skip (encoder-only) | — | — |")
+            continue
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | FAIL | | | | | |")
+            continue
+        if "roofline" not in r:     # --no-calibrate lowering-proof records
+            lines.append(f"| {r['arch']} | {r['shape']} | ✓ lowered+compiled "
+                         f"| | | | | {per_device_gib(r):.2f} |")
+            continue
+        t = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.4f} | "
+            f"{t['memory_s']:.4f} | {t['collective_s']:.4f} | "
+            f"{t['dominant'].replace('_s','')} | {t['useful_ratio']:.2f} | "
+            f"{per_device_gib(r):.2f} |")
+    return "\n".join(lines)
+
+
+def per_device_gib(rec: Dict) -> float:
+    """argument_size is per-device; temp_size aggregates the host's devices."""
+    m = rec.get("memory", {})
+    n = rec.get("n_chips", 256)
+    return (m.get("argument_size_in_bytes", 0)
+            + m.get("temp_size_in_bytes", 0) / n) / 2**30
+
+
+def csv_rows(recs: List[Dict]) -> List[Dict]:
+    rows = []
+    for r in recs:
+        if r.get("status") != "ok" or "roofline" not in r:
+            continue
+        t = r["roofline"]
+        dom = t["dominant"]
+        rows.append({
+            "name": f"roofline_{r['arch']}_{r['shape']}"
+                    + ("_mp" if r.get("multi_pod") else ""),
+            "us_per_call": t[dom] * 1e6,          # the binding roofline term
+            "dominant": dom,
+            "useful_ratio": round(t["useful_ratio"], 3),
+        })
+    return rows
+
+
+def main() -> None:
+    path = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun_singlepod.jsonl"
+    recs = load(path)
+    print(markdown_table(recs))
+    ok = [r for r in recs if r.get("status") == "ok"]
+    fails = [r for r in recs if r.get("status") == "fail"]
+    print(f"\n{len(ok)} ok, {len(fails)} failed, "
+          f"{sum(r.get('status') == 'skip_documented' for r in recs)} documented skips")
+    for r in fails:
+        print("FAIL:", r["arch"], r["shape"], r.get("error", "")[:200])
+
+
+if __name__ == "__main__":
+    main()

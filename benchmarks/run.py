@@ -1,0 +1,79 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Default scale is CI-friendly
+(short sims); EXPERIMENTS.md's full-scale numbers come from
+``--rounds 100 --seeds 3`` runs (same code).
+
+  PYTHONPATH=src python -m benchmarks.run                 # everything, short
+  PYTHONPATH=src python -m benchmarks.run --only fig3b --rounds 100
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def _print_csv(rows) -> None:
+    for r in rows:
+        derived = {k: v for k, v in r.items()
+                   if k not in ("name", "us_per_call", "curve")}
+        print(f"{r['name']},{r['us_per_call']:.1f},"
+              f"\"{json.dumps(derived, sort_keys=True)}\"")
+        sys.stdout.flush()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=30)
+    ap.add_argument("--seeds", type=int, default=1)
+    ap.add_argument("--only", default=None,
+                    choices=[None, "fig3a", "fig3b", "fig3c", "fig3d",
+                             "beyond", "kernels", "roofline", "ablations"])
+    ap.add_argument("--out", default=None, help="also append JSON rows here")
+    args = ap.parse_args()
+    seeds = tuple(range(args.seeds))
+
+    from benchmarks import kernel_bench
+    from benchmarks import paper_experiments as pe
+
+    print("name,us_per_call,derived")
+    all_rows = []
+
+    def emit(rows):
+        _print_csv(rows)
+        all_rows.extend(rows)
+
+    if args.only in (None, "fig3a"):
+        emit(pe.fig3a_loss_by_distribution(args.rounds, seeds))
+    if args.only in (None, "fig3b"):
+        emit(pe.fig3b_opt_vs_async(args.rounds, seeds))
+    if args.only in (None, "fig3c"):
+        emit(pe.fig3c_budget_sweep(args.rounds, seeds))
+    if args.only in (None, "fig3d"):
+        emit(pe.fig3d_tau_sweep(args.rounds, seeds))
+    if args.only in (None, "beyond"):
+        emit(pe.beyond_paper_delta_codec(args.rounds, seeds))
+    if args.only == "ablations":     # beyond-paper ablations (EXPERIMENTS.md)
+        emit(pe.ablation_schedule_placement(args.rounds, seeds))
+        emit(pe.ablation_local_epochs(args.rounds, seeds))
+    if args.only in (None, "kernels"):
+        emit(kernel_bench.all_benches())
+    if args.only in (None, "roofline"):
+        path = "results/dryrun_singlepod.jsonl"
+        if os.path.exists(path):
+            from benchmarks import roofline
+            emit(roofline.csv_rows(roofline.load(path)))
+        else:
+            print("# roofline: results/dryrun_singlepod.jsonl not found "
+                  "(run repro.launch.dryrun --all first)", file=sys.stderr)
+
+    if args.out:
+        with open(args.out, "a") as f:
+            for r in all_rows:
+                f.write(json.dumps(r) + "\n")
+
+
+if __name__ == "__main__":
+    main()

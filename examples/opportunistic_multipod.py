@@ -1,0 +1,69 @@
+"""OpportunisticSync across simulated pods — the paper's scheme as a
+distributed-training feature (DESIGN.md §2).
+
+Four forced host devices stand in for four pods.  Each pod runs local SGD
+(DiLoCo-style) on its shard; at scheduled inner steps it opportunistically
+snapshots params to the aggregator when the simulated cross-pod link is good
+(eqs. 14-16 verbatim); at the round boundary, pods whose final update was
+lost contribute their snapshot instead (masked psum over the pod axis).
+
+Run:  PYTHONPATH=src python examples/opportunistic_multipod.py
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.core.opportunistic_sync import (OppSyncConfig, channel_trace,
+                                           make_opp_sync_round)
+from repro.data import make_token_stream
+from repro.models import build_model
+from repro.optim import sgd
+from repro.training import create_train_state, make_train_step
+
+N_PODS, ROUNDS = 4, 6
+cfg = OppSyncConfig(inner_steps=6, budget=2, outage_prob=0.3, rate0=1.0)
+mesh = jax.make_mesh((N_PODS,), ("pod",))
+
+model = build_model(get_config("llama3.2-1b").reduced())
+params = model.init(jax.random.PRNGKey(0))
+opt = sgd(5e-2)
+train_step = make_train_step(model, opt)
+state0 = create_train_state(params, opt, with_opt_sync=True,
+                            tau_extra0=cfg.tau_extra0)
+stack = lambda t: jax.tree_util.tree_map(
+    lambda a: jnp.broadcast_to(a[None], (N_PODS,) + a.shape), t)
+state = stack(state0)
+
+B, S = 4, 32
+ds = make_token_stream(N_PODS * cfg.inner_steps * B * ROUNDS, S,
+                       vocab=model.cfg.vocab_size, seed=0)
+state_spec = jax.tree_util.tree_map(lambda _: P("pod"), state)
+batch_spec = {"tokens": P("pod"), "labels": P("pod")}
+one_round = make_opp_sync_round(cfg, train_step, mesh, state_spec, batch_spec)
+
+rates, outages, arrived = channel_trace(cfg, jax.random.PRNGKey(7),
+                                        N_PODS, ROUNDS)
+with mesh:
+    for r in range(ROUNDS):
+        lo = r * N_PODS * cfg.inner_steps * B
+        tok = ds.x[lo:lo + N_PODS * cfg.inner_steps * B].reshape(
+            N_PODS, cfg.inner_steps, B, S)
+        lab = ds.y[lo:lo + N_PODS * cfg.inner_steps * B].reshape(
+            N_PODS, cfg.inner_steps, B, S)
+        batches = {"tokens": jnp.asarray(tok), "labels": jnp.asarray(lab)}
+        state, losses = one_round(
+            state, batches, rates[r].reshape(cfg.inner_steps + 1, N_PODS),
+            outages[r].reshape(cfg.inner_steps + 1, N_PODS), arrived[r])
+        l = np.asarray(losses)
+        print(f"round {r+1}: mean inner loss {l.mean():.4f}  "
+              f"arrived={np.asarray(arrived[r]).tolist()}")
+
+# all pods end the round with identical (aggregated) params
+leaf = jax.tree_util.tree_leaves(state.params)[3]
+assert np.allclose(np.asarray(leaf[0]), np.asarray(leaf[-1]), atol=1e-6)
+print("pods converged to a common aggregate — OpportunisticSync OK")

@@ -1,0 +1,29 @@
+"""Batched serving example: prefill + decode with per-family state.
+
+Serves three different architecture families (dense KV-cache, attention-free
+RWKV6 state, hybrid attn+mamba) through the same public API.
+
+Run:  PYTHONPATH=src python examples/serve_batched.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serving import generate
+
+for arch in ("llama3.2-1b", "rwkv6-7b", "hymba-1.5b"):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 12)), jnp.int32)
+    t0 = time.time()
+    out = generate(model, params, prompt, max_new=16, context_len=32)
+    jax.block_until_ready(out)
+    print(f"{arch:12s} [{cfg.family:6s}] 4 requests x 16 tokens "
+          f"in {time.time()-t0:.2f}s -> {np.asarray(out[0])[:8].tolist()}...")
+print("batched serving OK")

@@ -1,0 +1,41 @@
+"""End-to-end driver: the paper's full experiment at its native scale.
+
+Reproduces the Fig. 3(b) comparison — OPT-HSFL (b=2) vs Async-HSFL vs
+discard — over 30 UAVs with the Rician channel, greedy selection, bursty
+interruptions, and FedAvg aggregation.  ~2 s/round on one CPU core.
+
+Run:  PYTHONPATH=src python examples/uav_fl_sim.py [--rounds 100]
+"""
+import argparse
+
+import numpy as np
+
+from repro.core.hsfl import HSFLConfig, run_hsfl
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--rounds", type=int, default=30)
+ap.add_argument("--distribution", default="noniid",
+                choices=["iid", "noniid", "imbalanced"])
+ap.add_argument("--seed", type=int, default=0)
+args = ap.parse_args()
+
+results = {}
+for scheme, b in (("opt", 2), ("async", 1), ("discard", 1)):
+    print(f"--- {scheme} (b={b}) on {args.distribution} ---")
+    log = run_hsfl(HSFLConfig(scheme=scheme, b=b, rounds=args.rounds,
+                              distribution=args.distribution,
+                              seed=args.seed), verbose=True)
+    results[scheme] = log
+
+print("\n=== summary (Fig. 3b) ===")
+for scheme, log in results.items():
+    s = log.summary()
+    accs = [a for a in log.acc_curve if a == a]
+    print(f"{scheme:8s}: final={s['final_acc']:.4f} "
+          f"tail_std={np.std(accs[-10:]):.4f} "
+          f"comm={s['avg_comm_mb']:.1f} MB/round "
+          f"rescued={s['snapshot_rescues']} dropped={s['drops']}")
+opt_acc = results["opt"].final_acc
+async_acc = results["async"].final_acc
+print(f"\nOPT - Async accuracy delta: {100*(opt_acc-async_acc):+.2f} pp "
+      f"(paper: +3.98 pp at 100 rounds)")

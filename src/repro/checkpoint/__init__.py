@@ -1,0 +1,4 @@
+from repro.checkpoint.msgpack_ckpt import (latest_step, restore_checkpoint,
+                                           save_checkpoint)
+
+__all__ = ["latest_step", "restore_checkpoint", "save_checkpoint"]

@@ -1,0 +1,71 @@
+"""Checkpointing: msgpack-serialized pytrees with dtype/shape manifest.
+
+Layout: <dir>/<step>/checkpoint.msgpack + MANIFEST.json; ``latest_step``
+resolves the newest complete save (a COMMIT marker finalizes a save, so a
+crashed writer never yields a half-read checkpoint).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _encode_leaf(x) -> Dict[str, Any]:
+    arr = np.asarray(x)
+    if arr.dtype == jnp.bfloat16:
+        return {"dtype": "bfloat16", "shape": list(arr.shape),
+                "data": arr.view(np.uint16).tobytes()}
+    return {"dtype": str(arr.dtype), "shape": list(arr.shape),
+            "data": arr.tobytes()}
+
+
+def _decode_leaf(d: Dict[str, Any]) -> np.ndarray:
+    if d["dtype"] == "bfloat16":
+        raw = np.frombuffer(d["data"], np.uint16).reshape(d["shape"])
+        return raw.view(jnp.bfloat16)
+    return np.frombuffer(d["data"], np.dtype(d["dtype"])).reshape(d["shape"])
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any) -> str:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    path = os.path.join(ckpt_dir, str(step))
+    os.makedirs(path, exist_ok=True)
+    payload = msgpack.packb([_encode_leaf(x) for x in leaves], use_bin_type=True)
+    with open(os.path.join(path, "checkpoint.msgpack"), "wb") as f:
+        f.write(payload)
+    with open(os.path.join(path, "MANIFEST.json"), "w") as f:
+        json.dump({"step": step, "num_leaves": len(leaves),
+                   "treedef": str(treedef)}, f)
+    open(os.path.join(path, "COMMIT"), "w").close()
+    return path
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d) for d in os.listdir(ckpt_dir)
+             if d.isdigit() and os.path.exists(os.path.join(ckpt_dir, d, "COMMIT"))]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, step: int, like: Any) -> Any:
+    """Restore into the structure of ``like`` (shape/dtype validated)."""
+    path = os.path.join(ckpt_dir, str(step), "checkpoint.msgpack")
+    with open(path, "rb") as f:
+        enc = msgpack.unpackb(f.read(), raw=False)
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    if len(enc) != len(leaves):
+        raise ValueError(f"checkpoint has {len(enc)} leaves, expected {len(leaves)}")
+    decoded = []
+    for d, ref in zip(enc, leaves):
+        arr = _decode_leaf(d)
+        if tuple(arr.shape) != tuple(np.shape(ref)):
+            raise ValueError(f"shape mismatch {arr.shape} vs {np.shape(ref)}")
+        decoded.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, decoded)

@@ -1,0 +1,14 @@
+"""The paper's primary contribution: opportunistic-proactive transmission of
+distributed learning model updates (OPT-HSFL), plus the multi-pod
+OpportunisticSync generalization."""
+from repro.core.aggregation import aggregate_round, fedavg, fedasync_weight
+from repro.core.channel import ChannelParams, UAVFleet, rate_bps
+from repro.core.hsfl import HSFLConfig, HSFLSimulation, run_hsfl
+from repro.core.opportunistic_sync import OppSyncConfig
+from repro.core.transmission import OppTransmitter, scheduled_epochs
+
+__all__ = [
+    "ChannelParams", "HSFLConfig", "HSFLSimulation", "OppSyncConfig",
+    "OppTransmitter", "UAVFleet", "aggregate_round", "fedavg",
+    "fedasync_weight", "rate_bps", "run_hsfl", "scheduled_epochs",
+]

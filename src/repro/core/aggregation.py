@@ -1,0 +1,68 @@
+"""Global aggregation schemes — FedAvg + the two comparison baselines.
+
+- ``fedavg``: Alg. 1 line 15 / Alg. 2 line 15 (uniform over received).
+- ``fedasync_weight``: the polynomial staleness weight α(t−τ+1)^(−a) from
+  Xie et al. [3], as configured in Sec. IV (α=0.4, a=0.5, max delay 1).
+- discard is expressed by simply not including a client (b=1 baseline).
+"""
+from __future__ import annotations
+
+from typing import Any, List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import module as m
+
+
+def fedavg(updates: Sequence[Any], weights: Sequence[float] | None = None) -> Any:
+    """Weighted average of parameter pytrees (uniform when weights None)."""
+    assert updates, "fedavg needs at least one update"
+    if weights is None:
+        weights = [1.0] * len(updates)
+    total = float(sum(weights))
+    ws = [w / total for w in weights]
+    out = m.tree_scale(updates[0], ws[0])
+    for upd, w in zip(updates[1:], ws[1:]):
+        out = m.tree_add(out, m.tree_scale(upd, w))
+    return out
+
+
+def fedasync_weight(staleness: int, alpha: float = 0.4, a: float = 0.5) -> float:
+    """α(t−τ+1)^(−a): weight for a model update delayed by ``staleness``."""
+    return alpha * float(staleness + 1) ** (-a)
+
+
+def fedasync_merge(global_params: Any, delayed_update: Any, staleness: int,
+                   alpha: float = 0.4, a: float = 0.5) -> Any:
+    """Server-side async merge: ω ← (1−α_t)·ω + α_t·ω_delayed."""
+    w = fedasync_weight(staleness, alpha, a)
+    return m.tree_lerp(global_params, delayed_update, w)
+
+
+def aggregate_round(arrived: List[Any], delayed: List[tuple],
+                    global_params: Any, scheme: str,
+                    alpha: float = 0.4, a: float = 0.5) -> Any:
+    """One round of global aggregation.
+
+    arrived:  fresh updates received this round (final or OPT snapshots).
+    delayed:  [(update, staleness), ...] — only used by the 'async' scheme.
+    scheme:   'opt' | 'discard' — FedAvg over ``arrived`` (OPT already
+              substituted snapshots for missing finals upstream);
+              'async' — FedAvg over timely + staleness-weighted delayed
+              (weights α(s+1)^(−a) vs 1.0 for timely, Sec. IV).
+    """
+    if scheme in ("opt", "discard"):
+        if not arrived:
+            return global_params
+        return fedavg(arrived)
+    if scheme == "async":
+        updates = list(arrived)
+        weights = [1.0] * len(arrived)
+        for upd, staleness in delayed:
+            updates.append(upd)
+            weights.append(fedasync_weight(staleness, alpha, a))
+        if not updates:
+            return global_params
+        return fedavg(updates, weights)
+    raise ValueError(f"unknown aggregation scheme {scheme!r}")

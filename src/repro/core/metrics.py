@@ -1,0 +1,58 @@
+"""Round-level bookkeeping: comms overhead (MB), staleness, participation."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+
+@dataclass
+class RoundLog:
+    round: int
+    selected: int = 0
+    arrived_final: int = 0
+    used_snapshot: int = 0
+    dropped: int = 0
+    delayed: int = 0
+    bytes_sent: float = 0.0
+    test_loss: float = float("nan")
+    test_acc: float = float("nan")
+
+
+@dataclass
+class SimLog:
+    rounds: List[RoundLog] = field(default_factory=list)
+
+    def add(self, r: RoundLog) -> None:
+        self.rounds.append(r)
+
+    @property
+    def avg_comm_mb(self) -> float:
+        """Mean data transmitted to the server per communication round (MB)."""
+        if not self.rounds:
+            return 0.0
+        return sum(r.bytes_sent for r in self.rounds) / len(self.rounds) / 1e6
+
+    @property
+    def final_acc(self) -> float:
+        tail = [r.test_acc for r in self.rounds[-5:] if r.test_acc == r.test_acc]
+        return sum(tail) / len(tail) if tail else float("nan")
+
+    @property
+    def acc_curve(self) -> List[float]:
+        return [r.test_acc for r in self.rounds]
+
+    @property
+    def loss_curve(self) -> List[float]:
+        return [r.test_loss for r in self.rounds]
+
+    def summary(self) -> Dict[str, float]:
+        n = max(1, len(self.rounds))
+        return {
+            "rounds": len(self.rounds),
+            "final_acc": self.final_acc,
+            "avg_comm_mb": self.avg_comm_mb,
+            "mean_participation": sum(r.arrived_final + r.used_snapshot
+                                      for r in self.rounds) / n,
+            "snapshot_rescues": sum(r.used_snapshot for r in self.rounds),
+            "drops": sum(r.dropped for r in self.rounds),
+        }

@@ -1,0 +1,82 @@
+"""User selection + FL/SL scheduling — Alg. 1 lines 3–5 (greedy, after [6]).
+
+[6]'s exact greedy is not reprinted in this paper; the criteria it names are
+"one-round latency, diversity of user resources and energy consumption".  We
+implement that as: per UAV compute both the FL and SL one-round latencies
+under the relaxed budget (eq. 13); a mode is feasible if its latency ≤ τ_max;
+among feasible users greedily pick the K with the best energy-per-sample
+utility, assigning each user the cheaper feasible mode (computing-limited
+UAVs land on SL exactly as HSFL intends).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Sequence
+
+import numpy as np
+
+from repro.core import latency as lat
+
+
+@dataclass
+class ScheduledUser:
+    index: int
+    mode: str                  # "FL" | "SL"
+    latency_s: float
+    energy_j: float
+    rate0_bps: float
+
+
+def schedule_users(rates0: Sequence[float],
+                   devices: Sequence[lat.DeviceProfile],
+                   workloads: Sequence[lat.WorkloadProfile],
+                   model_bytes: float, ue_model_bytes: float,
+                   b: int, tau_max: float, k_select: int,
+                   bs_rate_bps: float = 400e6,
+                   max_sl: int | None = None) -> List[ScheduledUser]:
+    """Greedy selection of ≤ k_select users with FL/SL assignment.
+
+    ``max_sl`` caps SL slots (the BS server co-computes for SL users, so its
+    capacity bounds them; [6] balances this — default: half of k_select).
+    """
+    if max_sl is None:
+        max_sl = k_select // 2
+    candidates = []
+    for i, (r0, dev, wl) in enumerate(zip(rates0, devices, workloads)):
+        fl_lat = lat.one_round_latency_fl(dev, wl, b, model_bytes, r0)
+        sl_lat = lat.one_round_latency_sl(dev, wl, b, ue_model_bytes, r0,
+                                          bs_rate_bps)
+        fl_en = lat.energy_fl(dev, wl, lat.uplink_fl(b, model_bytes, r0))
+        act = wl.act_bytes_per_sample * wl.samples
+        sl_en = lat.energy_sl(dev, wl, lat.uplink_sl(b, ue_model_bytes, act, r0))
+        options = {}
+        if fl_lat <= tau_max:
+            options["FL"] = (fl_lat, fl_en)
+        if sl_lat <= tau_max:
+            options["SL"] = (sl_lat, sl_en)
+        if not options:
+            continue
+        candidates.append((i, r0, options))
+
+    # utility: samples per joule at the user's cheapest mode (energy
+    # efficiency, the paper's stated goal)
+    def best_energy(c):
+        return min(en for _, en in c[2].values())
+
+    candidates.sort(key=lambda c: workloads[c[0]].samples / max(best_energy(c), 1e-9),
+                    reverse=True)
+
+    out: List[ScheduledUser] = []
+    sl_used = 0
+    for i, r0, options in candidates:
+        if len(out) == k_select:
+            break
+        # prefer the energy-cheaper mode, respecting the SL capacity cap
+        order = sorted(options.items(), key=lambda kv: kv[1][1])
+        for mode, (l, en) in order:
+            if mode == "SL" and sl_used >= max_sl:
+                continue
+            out.append(ScheduledUser(i, mode, l, en, r0))
+            sl_used += mode == "SL"
+            break
+    return out

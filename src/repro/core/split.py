@@ -1,0 +1,46 @@
+"""Split-learning partition of model parameters (HSFL's SL mode).
+
+Two model shapes are supported:
+- the paper CNN: stage-name split (models/cnn.py split_params)
+- any scanned transformer: the stacked (L, ...) layer leaves are sliced at a
+  cut index — UE side gets embedding + layers [0, cut), BS side gets layers
+  [cut, L) + final norm + head.  The cut-layer activation (B, S, d_model) is
+  the SL payload; for recurrent families the carried state at the cut layer
+  travels with it (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def split_stacked(params: Dict[str, Any], cut: int) -> Tuple[Dict, Dict]:
+    """Split a transformer param tree at stacked-layer index ``cut``."""
+    layers = params["layers"]
+    ue_layers = jax.tree_util.tree_map(lambda a: a[:cut], layers)
+    bs_layers = jax.tree_util.tree_map(lambda a: a[cut:], layers)
+    ue = {"layers": ue_layers}
+    if "embed" in params:
+        ue["embed"] = params["embed"]
+    bs = {"layers": bs_layers,
+          "final_norm": params["final_norm"],
+          "head": params["head"]}
+    return ue, bs
+
+
+def merge_stacked(ue: Dict[str, Any], bs: Dict[str, Any]) -> Dict[str, Any]:
+    layers = jax.tree_util.tree_map(
+        lambda a, b: jnp.concatenate([a, b], axis=0),
+        ue["layers"], bs["layers"])
+    out = {"layers": layers, "final_norm": bs["final_norm"], "head": bs["head"]}
+    if "embed" in ue:
+        out["embed"] = ue["embed"]
+    return out
+
+
+def ue_param_bytes(params: Dict[str, Any], cut: int) -> int:
+    """m_i^l: size of the UE-side model for eq. (12)/(13)."""
+    ue, _ = split_stacked(params, cut) if "layers" in params else (params, None)
+    return sum(a.size * a.dtype.itemsize for a in jax.tree_util.tree_leaves(ue))

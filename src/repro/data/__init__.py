@@ -1,0 +1,5 @@
+from repro.data.partition import partition
+from repro.data.pipeline import batches
+from repro.data.synthetic import Dataset, make_digits, make_token_stream
+
+__all__ = ["Dataset", "batches", "make_digits", "make_token_stream", "partition"]

@@ -1,0 +1,67 @@
+"""int8 delta codec Pallas TPU kernel — blockwise absmax quantization.
+
+Paper-adjacent hot spot: the OPT scheme transmits model snapshots (m_i in
+eqs. 14–15); quantizing the *delta* vs the last-distributed global model to
+int8 shrinks the payload ~3.6x (int8 + f32 scale per 512 lanes), which
+directly scales down τ^{e_t} and makes more opportunistic windows affordable.
+
+Grid: (num_tiles,) over rows of a (M, block) view; each tile quantizes
+(tile_rows, block) in VMEM: absmax per row -> scale -> round/clip to int8.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 512          # lanes per quantization group
+TILE_ROWS = 256      # rows per grid step
+
+
+def _quant_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)
+    scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(x / scale), -127, 127)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scale
+
+
+def _dequant_kernel(q_ref, s_ref, x_ref, *, dtype):
+    x_ref[...] = (q_ref[...].astype(jnp.float32) * s_ref[...]).astype(dtype)
+
+
+def quantize_blocks(x: jnp.ndarray, interpret: bool = False):
+    """x: (M, BLOCK) -> (q int8 (M, BLOCK), scales f32 (M, 1))."""
+    M, B = x.shape
+    assert B == BLOCK, (B, BLOCK)
+    rows = min(TILE_ROWS, M)
+    assert M % rows == 0
+    return pl.pallas_call(
+        _quant_kernel,
+        grid=(M // rows,),
+        in_specs=[pl.BlockSpec((rows, B), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((rows, B), lambda i: (i, 0)),
+                   pl.BlockSpec((rows, 1), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((M, B), jnp.int8),
+                   jax.ShapeDtypeStruct((M, 1), jnp.float32)],
+        interpret=interpret,
+    )(x)
+
+
+def dequantize_blocks(q: jnp.ndarray, scales: jnp.ndarray,
+                      dtype=jnp.float32, interpret: bool = False):
+    M, B = q.shape
+    rows = min(TILE_ROWS, M)
+    assert M % rows == 0
+    return pl.pallas_call(
+        functools.partial(_dequant_kernel, dtype=dtype),
+        grid=(M // rows,),
+        in_specs=[pl.BlockSpec((rows, B), lambda i: (i, 0)),
+                  pl.BlockSpec((rows, 1), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((rows, B), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((M, B), dtype),
+        interpret=interpret,
+    )(q, scales)

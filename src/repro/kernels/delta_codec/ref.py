@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the int8 delta codec."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quantize_ref(x: jnp.ndarray):
+    """x: (M, block) float -> (q int8 (M, block), scale f32 (M, 1))."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_ref(q: jnp.ndarray, scale: jnp.ndarray, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale).astype(dtype)

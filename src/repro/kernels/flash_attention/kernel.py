@@ -1,0 +1,117 @@
+"""Flash attention Pallas TPU kernel — online-softmax, VMEM-tiled.
+
+Grid: (BH, num_q_blocks, num_k_blocks); the k dimension is innermost, so the
+(acc, m, l) running state lives in VMEM scratch across k steps (TPU grids
+execute minor-most sequentially).  Block sizes default to 128/256 — MXU-
+aligned multiples of 128.  GQA is handled without materializing repeated
+K/V: the k/v index_map folds the q-head onto its kv-head (b // group_size).
+
+Masking covers causal and sliding-window attention; fully-masked k blocks
+are skipped via @pl.when on the block index bound (the causal/window wavefront),
+so the kernel does O(S·W) work for windowed attention, not O(S²).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                 scale: float, causal: bool, window: int,
+                 block_q: int, block_k: int, num_k_blocks: int, seq_q: int,
+                 seq_k: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # absolute positions; q/k ends aligned (supports Sq < Sk decode windows)
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0) \
+        + (seq_k - seq_q)
+    k_pos = kj * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+
+    # wavefront test: is any (q, k) pair in this block pair live?
+    block_live = jnp.asarray(True)
+    if causal:
+        block_live &= (kj * block_k) <= (qi * block_q + block_q - 1 + (seq_k - seq_q))
+    if window > 0:
+        block_live &= (qi * block_q + (seq_k - seq_q)) - (kj * block_k + block_k - 1) < window
+
+    @pl.when(block_live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+        mask = jnp.ones((block_q, block_k), bool)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window > 0:
+            mask &= (q_pos - k_pos) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + p @ v
+        m_ref[...] = m_cur
+
+    @pl.when(kj == num_k_blocks - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-20)[:, None]
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_bh(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                       group_size: int = 1, causal: bool = True,
+                       window: int = 0, block_q: int = 128,
+                       block_k: int = 128, interpret: bool = False
+                       ) -> jnp.ndarray:
+    """q: (BH, Sq, D); k, v: (BKV, Sk, D) with BH = BKV * group_size."""
+    BH, Sq, D = q.shape
+    BKV, Sk, _ = k.shape
+    assert BH == BKV * group_size, (BH, BKV, group_size)
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    nq = math.ceil(Sq / block_q)
+    nk = math.ceil(Sk / block_k)
+    assert Sq % block_q == 0 and Sk % block_k == 0, "pad seq to block multiple"
+
+    kernel = functools.partial(
+        _attn_kernel, scale=D ** -0.5, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, num_k_blocks=nk,
+        seq_q=Sq, seq_k=Sk)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, D),
+                         lambda b, i, j, g=group_size: (b // g, j, 0)),
+            pl.BlockSpec((1, block_k, D),
+                         lambda b, i, j, g=group_size: (b // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, D), q.dtype),
+        scratch_shapes=[
+            # VMEM scratch: running accumulator / max / normalizer
+            pltpu.VMEM((block_q, D), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,33 @@
+"""Jit-friendly wrapper: (B, S, H, D) GQA layout -> kernel layout."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_bh
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k",
+                                   "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q: (B, S, H, D); k, v: (B, S, KV, D).  Returns (B, S, H, D).
+
+    Heads are folded into the batch grid dim; GQA group mapping happens in
+    the kernel's k/v index_map (no repeated K/V materialization).
+    """
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    # (B, S, H, D) -> (B*H, S, D) with h-major so b*H + h // G == b*KV + h//G
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * KV, k.shape[1], D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * KV, v.shape[1], D)
+    out = flash_attention_bh(qf, kf, vf, group_size=G, causal=causal,
+                             window=window, block_q=block_q, block_k=block_k,
+                             interpret=interpret)
+    return out.reshape(B, H, Sq, D).transpose(0, 2, 1, 3)

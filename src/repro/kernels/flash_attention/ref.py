@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  causal: bool = True, window: int = 0) -> jnp.ndarray:
+    """q: (BH, Sq, D); k, v: (BH, Sk, D) (kv heads already aligned).
+
+    Returns (BH, Sq, D).  window > 0 additionally masks keys further than
+    ``window`` positions behind the query (sliding-window attention).
+    """
+    Sq, Sk = q.shape[1], k.shape[1]
+    scores = jnp.einsum("bqd,bkd->bqk", q, k).astype(jnp.float32)
+    scores = scores * (q.shape[-1] ** -0.5)
+    qpos = jnp.arange(Sq)[:, None] + (Sk - Sq)     # align ends (decode-style)
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= (qpos - kpos) < window
+    scores = jnp.where(mask[None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bqk,bkd->bqd", probs, v)

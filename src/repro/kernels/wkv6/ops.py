@@ -1,0 +1,23 @@
+"""Jit wrapper: (B, S, H, D) layout -> kernel layout.  S0 must be zeros (the
+kernel owns state init); non-zero S0 falls back to the reference scan."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.wkv6.kernel import wkv6_bh
+from repro.kernels.wkv6.ref import wkv6_ref
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(r, k, v, w, u, S0=None, chunk: int = 256, interpret: bool = False):
+    """r,k,v,w: (B, S, H, D); u: (H, D).  Returns (y (B,S,H,D), S (B,H,D,D))."""
+    B, S, H, D = r.shape
+    fold = lambda a: a.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    uf = jnp.broadcast_to(u[None], (B, H, D)).reshape(B * H, D)
+    y, sf = wkv6_bh(fold(r), fold(k), fold(v), fold(w), uf,
+                    chunk=chunk, interpret=interpret)
+    return (y.reshape(B, H, S, D).transpose(0, 2, 1, 3),
+            sf.reshape(B, H, D, D))

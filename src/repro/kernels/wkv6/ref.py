@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the WKV6 recurrence (same math as models/rwkv6)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, w, u, S0):
+    """r,k,v,w: (B, S, H, D); u: (H, D); S0: (B, H, D, D) f32.
+
+        y_t = r_t . (S_{t-1} + diag(u) k_t v_t^T)
+        S_t = diag(w_t) S_{t-1} + k_t v_t^T
+
+    Returns (y (B,S,H,D) in r.dtype, S_final (B,H,D,D) f32)."""
+    rf, kf, vf, wf = (a.astype(jnp.float32) for a in (r, k, v, w))
+
+    def step(S, t):
+        r_t, k_t, v_t, w_t = t
+        kv = k_t[..., :, None] * v_t[..., None, :]
+        y = jnp.einsum("bhi,bhij->bhj", r_t, S + u[..., :, None] * kv)
+        S = w_t[..., :, None] * S + kv
+        return S, y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (rf, kf, vf, wf))
+    S, ys = jax.lax.scan(step, S0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(r.dtype), S

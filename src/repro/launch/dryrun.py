@@ -1,0 +1,313 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes and extract the roofline terms.
+
+The two lines above MUST stay first: jax locks the device count on first
+init, and only the dry-run may see 512 placeholder devices (smoke tests and
+benches keep seeing 1).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun.jsonl
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod ...
+
+Per program it records: bytes-per-device (memory_analysis), HLO FLOPs/bytes
+(cost_analysis), the collective schedule (parsed from compiled HLO — see
+utils/hlo.py), and the three §Roofline terms.
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, InputShape, ModelConfig, get_config
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
+                               make_production_mesh)
+from repro.models import build_model
+from repro.models import transformer as tf
+from repro.models.inputs import input_specs
+from repro.optim import adamw
+from repro.sharding import rules
+from repro.training import create_train_state, make_prefill_step, make_train_step
+from repro.utils.hlo import collective_stats
+
+DRYRUN_OPTS = {"impl": "xla", "moe_dispatch": "scatter", "remat": "none"}
+
+
+def make_opts(shape_kind: str, multi_pod: bool, moe_dispatch: str = "scatter",
+              remat: str = "full") -> dict:
+    """Dry-run model options: activation sharding map + production remat."""
+    return {
+        "impl": "xla",
+        "moe_dispatch": moe_dispatch,
+        # per-layer remat is the production default for training; forward-only
+        # programs have no backward pass to rematerialize
+        "remat": remat if shape_kind == "train" else "none",
+        "act_sharding": {
+            "batch": ("pod", "data") if multi_pod else ("data",),
+            "model": "model",
+            "model_size": 16,
+            "batch_size": (2 if multi_pod else 1) * 16,
+        },
+    }
+
+
+def adapt_config(arch: str, shape_name: str,
+                 overrides: Optional[dict] = None) -> Optional[ModelConfig]:
+    """Resolve the (arch, shape) pair; None = documented skip (DESIGN.md §5)."""
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    if shape.kind == "decode" and cfg.is_encoder_only:
+        return None                               # hubert: no decode
+    if shape_name == "long_500k" and not cfg.is_subquadratic:
+        cfg = cfg.with_sliding_window(8192)       # dense long-ctx variant
+    # dry-run numerics policy: bf16 storage + f32 AdamW moments
+    cfg = cfg.replace(param_dtype="bfloat16", dtype="bfloat16")
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    return cfg
+
+
+def _shardings(mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+
+
+def build_program(cfg: ModelConfig, shape: InputShape, mesh, multi_pod: bool,
+                  opts: Optional[dict] = None):
+    """Returns (jitted_fn, example_args abstract) ready to .lower()."""
+    model = build_model(cfg)
+    opts = {**DRYRUN_OPTS, **(opts or {})}
+    params_struct = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pspecs = rules.param_specs(cfg, params_struct)
+    in_specs = input_specs(cfg, shape)
+    in_sharding_specs = rules.input_sharding_specs(cfg, shape, multi_pod)
+
+    if shape.kind == "train":
+        opt = adamw(1e-4, moment_dtype=jnp.bfloat16
+                    if opts.get("adam_bf16_moments") else jnp.float32)
+        state_struct = jax.eval_shape(
+            lambda p: create_train_state(p, opt), params_struct)
+        state_specs = rules.train_state_specs(cfg, params_struct)
+        step = make_train_step(model, opt, opts)
+        fn = jax.jit(step,
+                     in_shardings=(_shardings(mesh, state_specs),
+                                   _shardings(mesh, in_sharding_specs)),
+                     out_shardings=(_shardings(mesh, state_specs), None))
+        return fn, (state_struct, in_specs)
+
+    if shape.kind == "prefill":
+        step = make_prefill_step(model, opts)
+        fn = jax.jit(step,
+                     in_shardings=(_shardings(mesh, pspecs),
+                                   _shardings(mesh, in_sharding_specs)),
+                     out_shardings=NamedSharding(
+                         mesh, rules.logits_spec(multi_pod, shape.global_batch)))
+        return fn, (params_struct, in_specs)
+
+    # decode: one token against a seq_len-deep cache
+    dt = jnp.bfloat16
+    state_struct = jax.eval_shape(
+        lambda: tf.init_decode_state(cfg, shape.global_batch, shape.seq_len, dt))
+    dstate_specs = rules.decode_state_specs(cfg, shape.global_batch, multi_pod)
+
+    def serve_step(params, token, state, position):
+        return model.decode(params, token, state, position, opts)
+
+    fn = jax.jit(serve_step,
+                 in_shardings=(_shardings(mesh, pspecs),
+                               _shardings(mesh, in_sharding_specs)["token"],
+                               _shardings(mesh, dstate_specs),
+                               _shardings(mesh, in_sharding_specs)["position"]),
+                 out_shardings=(None, _shardings(mesh, dstate_specs)))
+    return fn, (params_struct, in_specs["token"], state_struct,
+                in_specs["position"])
+
+
+def roofline_terms(cfg: ModelConfig, shape: InputShape, flops: float,
+                   hbm_bytes: float, coll_bytes: float, n_chips: int) -> Dict[str, float]:
+    compute_s = flops / (n_chips * PEAK_FLOPS_BF16)
+    memory_s = hbm_bytes / (n_chips * HBM_BW)
+    collective_s = coll_bytes / (n_chips * ICI_BW)
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    terms["dominant"] = max(terms, key=terms.get)
+    # MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D for MoE; decode: D = batch*1
+    n_active = cfg.param_count(active_only=True)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind == "train" else
+                                   (shape.seq_len if shape.kind == "prefill" else 1))
+    mult = 6 if shape.kind == "train" else 2
+    terms["model_flops"] = mult * n_active * tokens
+    terms["useful_ratio"] = terms["model_flops"] / max(flops, 1.0)
+    return terms
+
+
+def _compile_stats(cfg, shape, mesh, multi_pod, opts) -> Dict[str, Any]:
+    """Lower+compile one program and pull raw stats off the artifact."""
+    fn, args = build_program(cfg, shape, mesh, multi_pod, opts)
+    with mesh:
+        lowered = fn.lower(*args)
+        compiled = lowered.compile()
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+    hlo = compiled.as_text()
+    coll = collective_stats(hlo)
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": coll,
+        "coll_bytes": sum(v["bytes"] for v in coll.values()),
+        "memory": {k: int(getattr(mem, k, 0)) for k in
+                   ("argument_size_in_bytes", "output_size_in_bytes",
+                    "temp_size_in_bytes", "peak_memory_in_bytes")},
+    }
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool,
+            opts: Optional[dict] = None, cfg_overrides: Optional[dict] = None,
+            verbose: bool = True, calibrate: bool = True) -> Optional[Dict[str, Any]]:
+    """Dry-run one (arch, shape, mesh) triple.
+
+    Two-stage measurement (DESIGN/EXPERIMENTS §Dry-run):
+    1. the PRODUCTION program (scan-over-layers) proves lowering/compilation
+       and gives the memory analysis;
+    2. cost_analysis counts while-loop bodies ONCE, so FLOPs / HBM bytes /
+       collective bytes come from a calibration pair — the same program
+       unrolled at num_layers=1 and 2 — extrapolated affinely:
+       X(L) = X(1) + (L-1) * (X(2) - X(1)).
+    """
+    cfg = adapt_config(arch, shape_name, cfg_overrides)
+    shape = INPUT_SHAPES[shape_name]
+    if cfg is None:
+        if verbose:
+            print(f"SKIP {arch} x {shape_name} (documented: encoder-only)")
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "status": "skip_documented"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    t0 = time.time()
+    base_opts = make_opts(shape.kind, multi_pod,
+                          (opts or {}).get("moe_dispatch", "scatter"),
+                          (opts or {}).get("remat", "full"))
+    for k, v in (opts or {}).items():     # extra hillclimb knobs pass through
+        if k not in ("moe_dispatch", "remat"):
+            base_opts[k] = v
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape_name,
+                           "multi_pod": multi_pod, "n_chips": n_chips,
+                           "opts": {k: v for k, v in base_opts.items()
+                                    if k != "act_sharding"},
+                           "overrides": cfg_overrides or {}}
+    try:
+        stats = _compile_stats(cfg, shape, mesh, multi_pod, base_opts)
+        rec["lower_compile_s"] = round(time.time() - t0, 1)
+        rec["memory"] = stats["memory"]
+        rec["collectives_scan_hlo"] = stats["coll"]
+        # memory_analysis on the forced-host backend: argument_size is
+        # per-device (post-SPMD shards), temp_size aggregates all devices
+        per_dev_bytes = (stats["memory"]["argument_size_in_bytes"]
+                         + stats["memory"]["temp_size_in_bytes"] / n_chips)
+        rec["bytes_per_device"] = per_dev_bytes
+
+        if not calibrate:
+            rec["total_compile_s"] = rec["lower_compile_s"]
+            rec["status"] = "ok"
+            if verbose:
+                print(f"OK {arch} x {shape_name} mesh={'2x16x16' if multi_pod else '16x16'} "
+                      f"compile={rec['lower_compile_s']}s "
+                      f"mem/dev={per_dev_bytes/2**30:.2f}GiB (lowering proof only)",
+                      flush=True)
+            return rec
+        # calibration pair: unrolled 1- and 2-layer replicas of the config
+        cal_opts = dict(base_opts, unroll_layers=True)
+        s1 = _compile_stats(cfg.replace(num_layers=1), shape, mesh, multi_pod,
+                            cal_opts)
+        s2 = _compile_stats(cfg.replace(num_layers=2), shape, mesh, multi_pod,
+                            cal_opts)
+        L = cfg.num_layers
+
+        def extrap(k1, k2=None):
+            a, b = (s1[k1], s2[k1])
+            return max(a + (L - 1) * (b - a), 0.0)
+
+        flops = extrap("flops")              # per-device post-SPMD
+        hbm = extrap("bytes")
+        coll_bytes = extrap("coll_bytes")
+        rec["per_layer"] = {"flops": s2["flops"] - s1["flops"],
+                            "bytes": s2["bytes"] - s1["bytes"],
+                            "coll_bytes": s2["coll_bytes"] - s1["coll_bytes"]}
+        rec["hlo_flops_per_device"] = flops
+        rec["hlo_bytes_per_device"] = hbm
+        rec["coll_bytes_per_device"] = coll_bytes
+        rec["roofline"] = roofline_terms(cfg, shape, flops * n_chips,
+                                         hbm * n_chips, coll_bytes * n_chips,
+                                         n_chips)
+        rec["total_compile_s"] = round(time.time() - t0, 1)
+        rec["status"] = "ok"
+        if verbose:
+            r = rec["roofline"]
+            print(f"OK {arch} x {shape_name} mesh={'2x16x16' if multi_pod else '16x16'} "
+                  f"compile={rec['total_compile_s']}s "
+                  f"mem/dev={per_dev_bytes/2**30:.2f}GiB "
+                  f"compute={r['compute_s']*1e3:.2f}ms mem={r['memory_s']*1e3:.2f}ms "
+                  f"coll={r['collective_s']*1e3:.2f}ms dom={r['dominant']} "
+                  f"useful={r['useful_ratio']:.2f}", flush=True)
+    except Exception as e:  # noqa: BLE001 — a failure here is a finding
+        rec["status"] = "fail"
+        rec["error"] = f"{type(e).__name__}: {e}"[:500]
+        if verbose:
+            print(f"FAIL {arch} x {shape_name}: {rec['error']}", flush=True)
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_IDS), default=None)
+    ap.add_argument("--shape", choices=list(INPUT_SHAPES), default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None, help="append JSONL records here")
+    ap.add_argument("--moe-dispatch", default="scatter",
+                    choices=["scatter", "dense"])
+    ap.add_argument("--remat", default="full", choices=["none", "full", "dots"])
+    ap.add_argument("--no-calibrate", action="store_true",
+                    help="lowering/memory proof only (multi-pod pass)")
+    ap.add_argument("--tuned", action="store_true",
+                    help="per-arch production opts from the §Perf hillclimbs")
+    args = ap.parse_args(argv)
+
+    pairs = []
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for mp in meshes:
+        for a in archs:
+            for s in shapes:
+                pairs.append((a, s, mp))
+
+    failures = 0
+    for a, s, mp in pairs:
+        opts = {"moe_dispatch": args.moe_dispatch, "remat": args.remat}
+        if args.tuned:
+            from repro.configs.base import tuned_opts
+            opts.update(tuned_opts(get_config(a), INPUT_SHAPES[s].kind))
+        rec = run_one(a, s, mp, opts, calibrate=not args.no_calibrate)
+        failures += rec.get("status") == "fail"
+        if args.out and rec:
+            with open(args.out, "a") as f:
+                f.write(json.dumps(rec) + "\n")
+    print(f"done: {len(pairs)} programs, {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

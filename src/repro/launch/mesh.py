@@ -1,0 +1,23 @@
+"""Production mesh definitions (functions only — importing this module never
+touches jax device state; see the dry-run brief)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2x16x16 = 512 chips across two pods."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_pods: int = 2, n_data: int = 2, n_model: int = 2):
+    """Small mesh for CI-scale dry-run tests (8 forced host devices)."""
+    return jax.make_mesh((n_pods, n_data, n_model), ("pod", "data", "model"))
+
+
+# TPU v5e hardware constants for the roofline (per chip)
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s
+HBM_BW = 819e9                    # bytes/s
+ICI_BW = 50e9                     # bytes/s per link

@@ -1,0 +1,89 @@
+"""Training launcher — single-host data-parallel (CPU-runnable) driver.
+
+Production path: pick an assigned arch (full or --reduced), build the
+synthetic LM pipeline, train with AdamW + cosine schedule, checkpoint
+periodically.  The multi-pod OpportunisticSync variant lives in
+examples/opportunistic_multipod.py (needs forced host devices).
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --reduced \
+      --steps 100 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.configs import ARCH_IDS, get_config
+from repro.data import make_token_stream
+from repro.models import build_model
+from repro.optim import adamw, cosine
+from repro.training import create_train_state, make_train_step
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_IDS), default="llama3.2-1b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU-scale variant of the same family")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    print(f"arch={cfg.name} reduced={args.reduced} "
+          f"layers={cfg.num_layers} d_model={cfg.d_model} "
+          f"params~{cfg.param_count()/1e6:.1f}M")
+
+    params = model.init(jax.random.PRNGKey(args.seed))
+    opt = adamw(cosine(args.lr, warmup=max(1, args.steps // 10),
+                       total=args.steps))
+    state = create_train_state(params, opt)
+
+    start = 0
+    if args.ckpt_dir and (s := latest_step(args.ckpt_dir)) is not None:
+        state = restore_checkpoint(args.ckpt_dir, s, state)
+        start = int(state.step)
+        print(f"restored checkpoint at step {start}")
+
+    ds = make_token_stream(args.batch * 64, args.seq,
+                           vocab=cfg.vocab_size, seed=args.seed)
+    step_fn = jax.jit(make_train_step(model, opt, grad_clip=1.0))
+    rng = np.random.default_rng(args.seed)
+
+    t0 = time.time()
+    for i in range(start, args.steps):
+        take = rng.integers(0, len(ds.x), args.batch)
+        batch = {"tokens": jnp.asarray(ds.x[take]),
+                 "labels": jnp.asarray(ds.y[take])}
+        if cfg.family == "vlm":
+            batch["patch_embeds"] = jnp.zeros(
+                (args.batch, cfg.num_patches, cfg.d_model),
+                jnp.float32 if cfg.dtype == "float32" else jnp.bfloat16)
+        state, metrics = step_fn(state, batch)
+        if (i + 1) % args.log_every == 0 or i == start:
+            sps = (i + 1 - start) / (time.time() - t0)
+            print(f"step {i+1}/{args.steps} loss={float(metrics['loss']):.4f} "
+                  f"ce={float(metrics['ce']):.4f} ({sps:.2f} steps/s)")
+        if args.ckpt_dir and (i + 1) % args.ckpt_every == 0:
+            save_checkpoint(args.ckpt_dir, i + 1, state)
+            print(f"saved checkpoint at step {i+1}")
+    print(f"done: final loss {float(metrics['loss']):.4f}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,3 @@
+from repro.models.registry import Model, build_model, get_model, get_reduced_model
+
+__all__ = ["Model", "build_model", "get_model", "get_reduced_model"]

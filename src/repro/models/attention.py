@@ -1,0 +1,207 @@
+"""GQA attention: full-sequence (train/prefill) and single-token decode.
+
+Supports: grouped KV heads, optional QKV bias (qwen2), causal or bidirectional
+masking, sliding-window masking (dense long-context variant), RoPE/M-RoPE
+applied at write time (the KV cache stores rotated keys), and a ring-buffer
+cache for windowed decode.
+
+``impl='xla'`` is the GSPMD-partitionable einsum path used by the dry-run;
+``impl='flash'`` dispatches to the Pallas flash-attention kernel (TPU target,
+interpret-validated on CPU — see repro.kernels.flash_attention).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import module as m
+from repro.models.rope import apply_rope, rope_angles
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def init_attention(key, cfg: ModelConfig):
+    pdt = m.dtype_of(cfg.param_dtype)
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": m.dense_init(kq, cfg.d_model, cfg.q_dim, pdt),
+        "wk": m.dense_init(kk, cfg.d_model, cfg.kv_dim, pdt),
+        "wv": m.dense_init(kv, cfg.d_model, cfg.kv_dim, pdt),
+        "wo": m.dense_init(ko, cfg.q_dim, cfg.d_model, pdt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = m.zeros((cfg.q_dim,), pdt)
+        p["bk"] = m.zeros((cfg.kv_dim,), pdt)
+        p["bv"] = m.zeros((cfg.kv_dim,), pdt)
+    return p
+
+
+def _project_qkv(params, cfg: ModelConfig, x: jnp.ndarray):
+    dt = x.dtype
+    B, S, _ = x.shape
+    q = x @ params["wq"].astype(dt)
+    k = x @ params["wk"].astype(dt)
+    v = x @ params["wv"].astype(dt)
+    if "bq" in params:
+        q = q + params["bq"].astype(dt)
+        k = k + params["bk"].astype(dt)
+        v = v + params["bv"].astype(dt)
+    q = q.reshape(B, S, cfg.num_heads, cfg.head_dim)
+    k = k.reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    v = v.reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    return q, k, v
+
+
+def _sdpa(cfg: ModelConfig, q, k, v, mask) -> jnp.ndarray:
+    """Grouped scaled-dot-product attention.
+
+    q: (B, Sq, H, D); k, v: (B, Sk, KV, D); mask: broadcastable to
+    (B, KV, G, Sq, Sk) with True = attend.
+    """
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, D)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32)
+    scores = scores * (D ** -0.5)
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(B, Sq, H * D)
+
+
+def full_mask(cfg: ModelConfig, seq: int) -> jnp.ndarray:
+    """(1, 1, 1, S, S) boolean mask for full-sequence attention."""
+    qpos = jnp.arange(seq)[:, None]
+    kpos = jnp.arange(seq)[None, :]
+    mask = jnp.ones((seq, seq), bool)
+    if cfg.causal:
+        mask &= kpos <= qpos
+    if cfg.sliding_window:
+        mask &= (qpos - kpos) < cfg.sliding_window
+    return mask[None, None, None]
+
+
+CHUNK_THRESHOLD = 1024     # beyond this, use the q-chunked flash-style path
+Q_CHUNK = 256
+
+
+def _sdpa_chunked(cfg: ModelConfig, q, k, v, act=None) -> jnp.ndarray:
+    """Memory-efficient attention: scan over query chunks, KV repeated to
+    (B, Sk, H, D), chunk body rematerialized (flash-style linear memory).
+
+    This is the XLA/GSPMD production path for long sequences — the full
+    (S, S) score tensor is never materialized (e.g. qwen2-72b prefill_32k
+    would otherwise allocate ~0.5 TB of scores per device)."""
+    from repro.sharding.apply import constrain, heads_shardable
+
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    if KV != H:
+        k = jnp.repeat(k, H // KV, axis=2)
+        v = jnp.repeat(v, H // KV, axis=2)
+    # canonical layout: batch over data(+pod); heads over model when they
+    # divide it, else replicated (DESIGN.md §4 — hymba/qwen2-vl/granite/llama4)
+    h_ax = "M" if heads_shardable(act, H) else None
+    q = constrain(q, act, "B", None, h_ax, None)
+    k = constrain(k, act, "B", None, h_ax, None)
+    v = constrain(v, act, "B", None, h_ax, None)
+    nq = Sq // Q_CHUNK
+    assert Sq % Q_CHUNK == 0, (Sq, Q_CHUNK)
+    scale = D ** -0.5
+    kpos = jnp.arange(k.shape[1])[None, :]
+
+    @jax.checkpoint
+    def chunk_body(carry, qc_idx):
+        qc = jax.lax.dynamic_slice_in_dim(q, qc_idx * Q_CHUNK, Q_CHUNK, axis=1)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qc, k).astype(jnp.float32) * scale
+        qpos = qc_idx * Q_CHUNK + jnp.arange(Q_CHUNK)[:, None]
+        mask = jnp.ones((Q_CHUNK, k.shape[1]), bool)
+        if cfg.causal:
+            mask &= kpos <= qpos
+        if cfg.sliding_window:
+            mask &= (qpos - kpos) < cfg.sliding_window
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+        o = jnp.einsum("bhqk,bkhd->bqhd", p, v)
+        return carry, o
+
+    _, outs = jax.lax.scan(chunk_body, (), jnp.arange(nq))
+    # outs: (nq, B, Q_CHUNK, H, D) -> (B, Sq, H*D)
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, Sq, H * D)
+    return out
+
+
+def attend_full(params, cfg: ModelConfig, x: jnp.ndarray,
+                positions: jnp.ndarray, impl: str = "xla",
+                act=None) -> jnp.ndarray:
+    """Full-sequence attention for train/prefill.  x: (B, S, d)."""
+    from repro.sharding.apply import constrain
+
+    q, k, v = _project_qkv(params, cfg, x)
+    angles = rope_angles(positions, cfg.head_dim, cfg.rope_theta,
+                         cfg.mrope_sections)
+    q = apply_rope(q, angles)
+    k = apply_rope(k, angles)
+    S = x.shape[1]
+    if impl == "flash":
+        from repro.kernels.flash_attention import ops as fa_ops
+        out = fa_ops.flash_attention(
+            q, k, v, causal=cfg.causal, window=cfg.sliding_window or 0)
+        out = out.reshape(*x.shape[:2], cfg.q_dim)
+    elif S > CHUNK_THRESHOLD and S % Q_CHUNK == 0:
+        out = _sdpa_chunked(cfg, q, k, v, act)
+    else:
+        out = _sdpa(cfg, q, k, v, full_mask(cfg, S))
+    out = constrain(out, act, "B", None, None)
+    return out @ params["wo"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# decode with KV cache
+# ---------------------------------------------------------------------------
+
+def cache_len(cfg: ModelConfig, context_len: int) -> int:
+    """Physical cache length: window ring buffer if windowed, else context."""
+    if cfg.sliding_window and cfg.sliding_window < context_len:
+        return cfg.sliding_window
+    return context_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, context_len: int, dtype) -> Dict[str, jnp.ndarray]:
+    C = cache_len(cfg, context_len)
+    shape = (batch, C, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def attend_decode(params, cfg: ModelConfig, x: jnp.ndarray,
+                  cache: Dict[str, jnp.ndarray], position: jnp.ndarray
+                  ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """One-token decode.  x: (B, 1, d); position: (B,) absolute positions of
+    the new token; cache stores rotated keys.  Returns (out (B,1,d), cache')."""
+    B = x.shape[0]
+    q, k, v = _project_qkv(params, cfg, x)                    # S == 1
+    pos = position[:, None]                                   # (B, 1)
+    if cfg.mrope_sections:
+        pos = jnp.broadcast_to(pos[:, None], (B, 3, 1))
+    angles = rope_angles(pos, cfg.head_dim, cfg.rope_theta, cfg.mrope_sections)
+    q = apply_rope(q, angles)
+    k = apply_rope(k, angles)
+
+    C = cache["k"].shape[1]
+    slot = (position % C).astype(jnp.int32)                   # ring index (B,)
+    onehot = jax.nn.one_hot(slot, C, dtype=cache["k"].dtype)  # (B, C)
+    new_k = cache["k"] * (1 - onehot)[:, :, None, None] + onehot[:, :, None, None] * k
+    new_v = cache["v"] * (1 - onehot)[:, :, None, None] + onehot[:, :, None, None] * v
+
+    # validity: entries written so far; windowed cache recycles all slots
+    idx = jnp.arange(C)[None, :]                              # (1, C)
+    n_valid = jnp.minimum(position + 1, C)[:, None]           # (B, 1)
+    valid = idx < n_valid                                     # (B, C)
+    mask = valid[:, None, None, None, :]                      # (B,1,1,1,C)
+    out = _sdpa(cfg, q, new_k, new_v, mask)
+    out = out @ params["wo"].astype(x.dtype)
+    return out, {"k": new_k, "v": new_v}

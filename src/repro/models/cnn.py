@@ -1,0 +1,78 @@
+"""The paper's model: 5-layer MNIST CNN (2 conv + 3 fc), Section IV.
+
+Exposed as an ordered stage list so HSFL split learning (DESIGN.md §2) can
+cut at any stage boundary: stages [conv1, conv2, fc1, fc2, fc3]; the
+activation at the cut is the SL payload (its byte size feeds eq. 12's m_a).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import module as m
+
+STAGES = ("conv1", "conv2", "fc1", "fc2", "fc3")
+NUM_STAGES = len(STAGES)
+
+
+def init_cnn(key, num_classes: int = 10, image_side: int = 28):
+    ks = jax.random.split(key, 5)
+    side = image_side // 4                        # two 2x2 pools
+    flat = side * side * 16
+    return {
+        "conv1": {"w": (jax.random.normal(ks[0], (3, 3, 1, 8)) * (9 ** -0.5)).astype(jnp.float32),
+                  "b": m.zeros((8,))},
+        "conv2": {"w": (jax.random.normal(ks[1], (3, 3, 8, 16)) * (72 ** -0.5)).astype(jnp.float32),
+                  "b": m.zeros((16,))},
+        "fc1": {"w": m.dense_init(ks[2], flat, 128), "b": m.zeros((128,))},
+        "fc2": {"w": m.dense_init(ks[3], 128, 64), "b": m.zeros((64,))},
+        "fc3": {"w": m.dense_init(ks[4], 64, num_classes), "b": m.zeros((num_classes,))},
+    }
+
+
+def _conv(p, x):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    y = jax.nn.relu(y + p["b"])
+    return jax.lax.reduce_window(
+        y, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def _fc(p, x, act=True):
+    y = x @ p["w"] + p["b"]
+    return jax.nn.relu(y) if act else y
+
+
+def apply_stage(params, stage: str, x: jnp.ndarray) -> jnp.ndarray:
+    if stage == "conv1":
+        return _conv(params["conv1"], x)
+    if stage == "conv2":
+        y = _conv(params["conv2"], x)
+        return y.reshape(y.shape[0], -1)
+    if stage == "fc1":
+        return _fc(params["fc1"], x)
+    if stage == "fc2":
+        return _fc(params["fc2"], x)
+    return _fc(params["fc3"], x, act=False)
+
+
+def forward(params, images: jnp.ndarray, start: int = 0, stop: int = NUM_STAGES) -> jnp.ndarray:
+    """images: (B, 28, 28, 1) (or the cut activation when start > 0)."""
+    x = images
+    for stage in STAGES[start:stop]:
+        x = apply_stage(params, stage, x)
+    return x
+
+
+def split_params(params, cut: int) -> Tuple[Dict, Dict]:
+    """UE-side stages [0, cut), BS-side stages [cut, 5)."""
+    ue = {s: params[s] for s in STAGES[:cut]}
+    bs = {s: params[s] for s in STAGES[cut:]}
+    return ue, bs
+
+
+def merge_params(ue: Dict, bs: Dict) -> Dict:
+    return {**ue, **bs}

@@ -1,0 +1,92 @@
+"""Input pytrees per (architecture × input shape), in two renderings:
+
+- ``input_specs``: jax.ShapeDtypeStruct stand-ins (weak-type-correct, no
+  allocation) — what the multi-pod dry-run lowers against.
+- ``materialize``: small real arrays with the same structure — what smoke
+  tests and examples feed.
+
+This is also where the modality-frontend STUB carve-out lives: audio gets
+precomputed frame embeddings (B, S, d); VLM gets patch embeddings
+(B, P, d) + M-RoPE (B, 3, S) positions.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import module as m
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_specs(cfg: ModelConfig, B: int, S: int) -> Dict[str, Any]:
+    dt = m.dtype_of(cfg.dtype)
+    if cfg.family == "audio":
+        return {
+            "embeds": _sds((B, S, cfg.d_model), dt),
+            "labels": _sds((B, S), jnp.int32),
+            "mask": _sds((B, S), jnp.bool_),
+        }
+    spec = {
+        "tokens": _sds((B, S), jnp.int32),
+        "labels": _sds((B, S), jnp.int32),
+    }
+    if cfg.family == "vlm":
+        spec["patch_embeds"] = _sds((B, cfg.num_patches, cfg.d_model), dt)
+        spec["positions"] = _sds((B, 3, S), jnp.int32)
+    return spec
+
+
+def prefill_specs(cfg: ModelConfig, B: int, S: int) -> Dict[str, Any]:
+    spec = train_specs(cfg, B, S)
+    spec.pop("labels", None)
+    spec.pop("mask", None)
+    return spec
+
+
+def decode_specs(cfg: ModelConfig, B: int, S: int) -> Dict[str, Any]:
+    assert not cfg.is_encoder_only, f"{cfg.name} is encoder-only: no decode"
+    return {
+        "token": _sds((B, 1), jnp.int32),
+        "position": _sds((B,), jnp.int32),
+    }
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return train_specs(cfg, B, S)
+    if shape.kind == "prefill":
+        return prefill_specs(cfg, B, S)
+    return decode_specs(cfg, B, S)
+
+
+# ---------------------------------------------------------------------------
+# real arrays with the same structure (smoke tests / examples)
+# ---------------------------------------------------------------------------
+
+def materialize(spec: Dict[str, Any], cfg: ModelConfig, seed: int = 0) -> Dict[str, Any]:
+    rng = np.random.default_rng(seed)
+    out: Dict[str, Any] = {}
+    for name, s in spec.items():
+        if name in ("tokens", "labels", "token"):
+            out[name] = jnp.asarray(
+                rng.integers(0, cfg.vocab_size, s.shape), jnp.int32)
+        elif name == "position":
+            out[name] = jnp.zeros(s.shape, jnp.int32)
+        elif name == "positions":
+            B, _, S = s.shape
+            pos = np.broadcast_to(np.arange(S, dtype=np.int32), (B, S))
+            out[name] = jnp.asarray(np.broadcast_to(pos[:, None], (B, 3, S)))
+        elif name == "mask":
+            out[name] = jnp.asarray(rng.random(s.shape) < 0.3)
+        else:  # embeds / patch_embeds
+            out[name] = jnp.asarray(
+                rng.standard_normal(s.shape) * 0.02, s.dtype)
+    return out

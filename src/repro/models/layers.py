@@ -1,0 +1,77 @@
+"""Shared layers: RMSNorm, SwiGLU MLP, padded embeddings / LM head."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import module as m
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(dim: int, dtype=jnp.float32):
+    return {"scale": m.ones((dim,), dtype)}
+
+
+def rmsnorm(params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, d_ff: int | None = None):
+    d_ff = d_ff or cfg.d_ff
+    pdt = m.dtype_of(cfg.param_dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": m.dense_init(k1, cfg.d_model, d_ff, pdt),
+        "w_up": m.dense_init(k2, cfg.d_model, d_ff, pdt),
+        "w_down": m.dense_init(k3, d_ff, cfg.d_model, pdt),
+    }
+
+
+def mlp(params, x: jnp.ndarray) -> jnp.ndarray:
+    dt = x.dtype
+    gate = x @ params["w_gate"].astype(dt)
+    up = x @ params["w_up"].astype(dt)
+    return (jax.nn.silu(gate) * up) @ params["w_down"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Embeddings (vocab padded to shardable width; see DESIGN.md §4)
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, cfg: ModelConfig):
+    pdt = m.dtype_of(cfg.param_dtype)
+    return {"table": m.embed_init(key, cfg.vocab_padded, cfg.d_model, pdt)}
+
+
+def embed(params, tokens: jnp.ndarray, dtype) -> jnp.ndarray:
+    return params["table"].astype(dtype)[tokens]
+
+
+def init_lm_head(key, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return {}
+    pdt = m.dtype_of(cfg.param_dtype)
+    return {"w": m.dense_init(key, cfg.d_model, cfg.vocab_padded, pdt)}
+
+
+def lm_logits(head_params, embed_params, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """Logits over the padded vocab; padded slots masked to a large negative."""
+    if cfg.tie_embeddings:
+        logits = x @ embed_params["table"].astype(x.dtype).T
+    else:
+        logits = x @ head_params["w"].astype(x.dtype)
+    if cfg.vocab_padded != cfg.vocab_size:
+        mask = jnp.arange(cfg.vocab_padded) < cfg.vocab_size
+        logits = jnp.where(mask, logits, jnp.asarray(-1e9, logits.dtype))
+    return logits

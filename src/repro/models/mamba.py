@@ -1,0 +1,108 @@
+"""Mamba selective-SSM branch (used by the Hymba hybrid block).
+
+Selective scan (Mamba-1 style):  h_t = exp(dt_t * A) h_{t-1} + dt_t B_t x_t,
+y_t = C_t . h_t + D x_t,  with input-dependent (dt, B, C) and a causal
+depthwise conv front.  Full-sequence mode uses ``lax.scan`` over time (O(1)
+compile in seq len); decode carries ``(conv_state, ssm_state)``.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import module as m
+
+
+def dt_rank(cfg: ModelConfig) -> int:
+    return max(1, cfg.d_model // 16)
+
+
+def init_mamba(key, cfg: ModelConfig):
+    pdt = m.dtype_of(cfg.param_dtype)
+    di, N, R = cfg.d_inner, cfg.ssm_state, dt_rank(cfg)
+    ks = jax.random.split(key, 6)
+    A = jnp.broadcast_to(jnp.arange(1, N + 1, dtype=jnp.float32), (di, N))
+    return {
+        "w_in": m.dense_init(ks[0], cfg.d_model, 2 * di, pdt),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, di)) * 0.1).astype(pdt),
+        "w_xproj": m.dense_init(ks[2], di, R + 2 * N, pdt),
+        "w_dt": m.dense_init(ks[3], R, di, pdt),
+        "log_A": jnp.log(A),                       # keeps A negative: -exp(log_A)
+        "D": m.ones((di,), jnp.float32),
+        "w_out": m.dense_init(ks[4], di, cfg.d_model, pdt),
+    }
+
+
+def _split_proj(params, cfg: ModelConfig, xc: jnp.ndarray):
+    """xc: (..., di) post-conv activations -> (dt (..,di), B (..,N), C (..,N))."""
+    N, R = cfg.ssm_state, dt_rank(cfg)
+    proj = xc @ params["w_xproj"].astype(xc.dtype)
+    dtr, Bm, Cm = proj[..., :R], proj[..., R:R + N], proj[..., R + N:]
+    dt = jax.nn.softplus(dtr @ params["w_dt"].astype(xc.dtype)).astype(jnp.float32)
+    return dt, Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+
+
+def _causal_conv(params, x: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv.  x: (B, S, di)."""
+    K = params["conv_w"].shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    w = params["conv_w"].astype(x.dtype)
+    out = sum(pad[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    return jax.nn.silu(out)
+
+
+def mamba_full(params, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """Full-sequence selective scan.  x: (B, S, d) -> (B, S, d)."""
+    dt_ = x.dtype
+    B_, S, _ = x.shape
+    di, N = cfg.d_inner, cfg.ssm_state
+    xz = x @ params["w_in"].astype(dt_)
+    xs, z = xz[..., :di], xz[..., di:]
+    xc = _causal_conv(params, xs)
+    dt, Bm, Cm = _split_proj(params, cfg, xc)                 # (B,S,di) (B,S,N)
+    A = -jnp.exp(params["log_A"])                             # (di, N)
+    xf = xc.astype(jnp.float32)
+
+    def step(h, t):
+        dt_t, B_t, C_t, x_t = t                               # (B,di) (B,N) (B,N) (B,di)
+        decay = jnp.exp(dt_t[..., None] * A)                  # (B, di, N)
+        h = decay * h + (dt_t * x_t)[..., None] * B_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, C_t)
+        return h, y
+
+    h0 = jnp.zeros((B_, di, N), jnp.float32)
+    xs_t = (jnp.moveaxis(dt, 1, 0), jnp.moveaxis(Bm, 1, 0),
+            jnp.moveaxis(Cm, 1, 0), jnp.moveaxis(xf, 1, 0))
+    _, ys = jax.lax.scan(step, h0, xs_t)
+    y = jnp.moveaxis(ys, 0, 1) + xf * params["D"]             # (B,S,di)
+    y = (y.astype(dt_) * jax.nn.silu(z))
+    return y @ params["w_out"].astype(dt_)
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype) -> Dict[str, jnp.ndarray]:
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+        "ssm": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+    }
+
+
+def mamba_decode(params, cfg: ModelConfig, x: jnp.ndarray,
+                 state: Dict[str, jnp.ndarray]) -> Tuple[jnp.ndarray, Dict]:
+    """One-token step.  x: (B, 1, d)."""
+    dt_ = x.dtype
+    di = cfg.d_inner
+    xz = x[:, 0] @ params["w_in"].astype(dt_)
+    xs, z = xz[..., :di], xz[..., di:]
+    window = jnp.concatenate([state["conv"], xs[:, None]], axis=1)  # (B,K,di)
+    w = params["conv_w"].astype(dt_)
+    xc = jax.nn.silu(jnp.einsum("bkd,kd->bd", window, w))
+    dt, Bm, Cm = _split_proj(params, cfg, xc)
+    A = -jnp.exp(params["log_A"])
+    decay = jnp.exp(dt[..., None] * A)
+    h = decay * state["ssm"] + (dt * xc.astype(jnp.float32))[..., None] * Bm[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, Cm) + xc.astype(jnp.float32) * params["D"]
+    y = (y.astype(dt_) * jax.nn.silu(z)) @ params["w_out"].astype(dt_)
+    return y[:, None], {"conv": window[:, 1:], "ssm": h}

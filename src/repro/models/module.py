@@ -1,0 +1,100 @@
+"""Minimal pure-JAX module substrate (no flax).
+
+Params are plain nested dicts of jnp arrays.  Every layer is a pair of
+functions: ``init_*(key, cfg) -> params`` and ``apply_*(params, x, ...)``.
+Stacked decoder layers are initialised with ``jax.vmap`` over per-layer keys,
+giving every leaf a leading ``(num_layers, ...)`` axis that ``lax.scan``
+consumes — compile time is O(1) in depth.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# initialisers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, in_dim: int, out_dim: int, dtype=jnp.float32, scale: float | None = None):
+    """Fan-in scaled truncated-normal (LeCun) weight (in_dim, out_dim)."""
+    std = scale if scale is not None else in_dim ** -0.5
+    w = jax.random.truncated_normal(key, -2.0, 2.0, (in_dim, out_dim)) * std
+    return w.astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype=jnp.float32):
+    return (jax.random.normal(key, (vocab, dim)) * 0.02).astype(dtype)
+
+
+def zeros(shape, dtype=jnp.float32):
+    return jnp.zeros(shape, dtype)
+
+
+def ones(shape, dtype=jnp.float32):
+    return jnp.ones(shape, dtype)
+
+
+def stack_layers(init_fn: Callable[[jax.Array], Params], key, num_layers: int) -> Params:
+    """vmap a single-layer init over per-layer keys -> stacked leaves (L, ...)."""
+    keys = jax.random.split(key, num_layers)
+    return jax.vmap(init_fn)(keys)
+
+
+# ---------------------------------------------------------------------------
+# pytree helpers
+# ---------------------------------------------------------------------------
+
+def param_count(params: Params) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(params))
+
+
+def param_bytes(params: Params) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(params))
+
+
+def tree_cast(params: Params, dtype) -> Params:
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        params)
+
+
+def tree_zeros_like(params: Params) -> Params:
+    return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+
+def tree_add(a: Params, b: Params) -> Params:
+    return jax.tree_util.tree_map(jnp.add, a, b)
+
+
+def tree_sub(a: Params, b: Params) -> Params:
+    return jax.tree_util.tree_map(jnp.subtract, a, b)
+
+
+def tree_scale(a: Params, s) -> Params:
+    return jax.tree_util.tree_map(lambda x: x * s, a)
+
+
+def tree_lerp(a: Params, b: Params, w) -> Params:
+    """(1-w)*a + w*b, leafwise; w may be a scalar tracer."""
+    return jax.tree_util.tree_map(lambda x, y: (1.0 - w) * x + w * y, a, b)
+
+
+def tree_where(pred, a: Params, b: Params) -> Params:
+    """Select whole trees by a scalar predicate (used by opportunistic sync)."""
+    return jax.tree_util.tree_map(lambda x, y: jnp.where(pred, x, y), a, b)
+
+
+def global_norm(params: Params) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(params)]
+    return jnp.sqrt(sum(leaves))

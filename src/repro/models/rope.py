@@ -1,0 +1,62 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL M-RoPE.
+
+M-RoPE [arXiv:2409.12191]: the head_dim/2 rotary frequencies are split into
+(t, h, w) sections; each section reads its position id from the matching row
+of a (B, 3, S) position tensor.  For pure text, t == h == w == arange(S).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    """(head_dim/2,) inverse frequencies."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def rope_angles(positions: jnp.ndarray, head_dim: int, theta: float,
+                mrope_sections: Tuple[int, ...] = ()) -> jnp.ndarray:
+    """Angles (..., S, head_dim/2) from positions.
+
+    positions: (B, S) int32 for standard RoPE, or (B, 3, S) for M-RoPE.
+    """
+    inv = rope_freqs(head_dim, theta)                        # (half,)
+    if not mrope_sections:
+        if positions.ndim == 3:                              # tolerate (B,3,S)
+            positions = positions[:, 0]
+        return positions[..., None].astype(jnp.float32) * inv
+    assert positions.ndim == 3 and positions.shape[1] == 3, (
+        "M-RoPE needs (B, 3, S) positions")
+    half = head_dim // 2
+    assert sum(mrope_sections) == half, (mrope_sections, half)
+    # angle per (section row, freq): pick t/h/w position per frequency band
+    sec_id = jnp.repeat(jnp.arange(3), jnp.asarray(mrope_sections),
+                        total_repeat_length=half)            # (half,)
+    pos = jnp.take_along_axis(
+        positions.astype(jnp.float32),                       # (B, 3, S)
+        jnp.broadcast_to(sec_id[None, :, None], (positions.shape[0], half, positions.shape[2])).astype(jnp.int32),
+        axis=1)                                              # (B, half, S)
+    return jnp.swapaxes(pos, 1, 2) * inv                     # (B, S, half)
+
+
+def apply_rope(x: jnp.ndarray, angles: jnp.ndarray) -> jnp.ndarray:
+    """Rotate x (..., S, H, D) by angles (..., S, D/2) (broadcast over heads)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    cos = jnp.cos(angles)[..., None, :].astype(x.dtype)      # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def text_positions(batch: int, seq: int, mrope: bool = False,
+                   offset: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Default positions; offset (B,) shifts (decode).  Returns (B,S) or (B,3,S)."""
+    pos = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32)[None], (batch, seq))
+    if offset is not None:
+        pos = pos + offset[:, None].astype(jnp.int32)
+    if mrope:
+        pos = jnp.broadcast_to(pos[:, None], (batch, 3, seq))
+    return pos

@@ -1,0 +1,183 @@
+"""RWKV6 "Finch" time-mix + channel-mix [arXiv:2404.05892].
+
+Headline Finch feature implemented faithfully: **data-dependent decay**
+w_t = exp(-exp(w0 + tanh(x W_a) W_b)) per key channel, per step.  Token-shift
+interpolation uses static per-channel mixes (the full ddlerp low-rank mix is a
+recorded simplification; decay *is* data-dependent).  The WKV recurrence per
+head (state S in R^{DxD}):
+
+    y_t = r_t . (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+
+Full-sequence mode is a lax.scan over time (the Pallas `wkv6` kernel is the
+TPU hot-path; kernels/wkv6/ref.py wraps the same math).  Decode carries
+(shift_t, shift_c, S).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import module as m
+
+DECAY_RANK = 64
+
+
+def init_time_mix(key, cfg: ModelConfig):
+    pdt = m.dtype_of(cfg.param_dtype)
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    return {
+        "mu": (jax.random.uniform(ks[0], (5, d)) * 0.5 + 0.25).astype(jnp.float32),
+        "w_r": m.dense_init(ks[1], d, d, pdt),
+        "w_k": m.dense_init(ks[2], d, d, pdt),
+        "w_v": m.dense_init(ks[3], d, d, pdt),
+        "w_g": m.dense_init(ks[4], d, d, pdt),
+        "w_o": m.dense_init(ks[5], d, d, pdt),
+        "decay_a": m.dense_init(ks[6], d, DECAY_RANK, pdt, scale=0.01),
+        "decay_b": m.dense_init(ks[7], DECAY_RANK, d, pdt, scale=0.01),
+        "decay_w0": (jnp.linspace(-6.0, -1.0, d)).astype(jnp.float32),
+        "bonus_u": (jnp.zeros((d,))).astype(jnp.float32),
+        "ln_scale": m.ones((d,), jnp.float32),      # per-head groupnorm scale
+    }
+
+
+def _mix(x, xx, mu):
+    return x + (xx - x) * mu.astype(x.dtype)
+
+
+def _decay(params, xw: jnp.ndarray) -> jnp.ndarray:
+    """Data-dependent decay in (0,1).  xw: (..., d) mixed input."""
+    dt = xw.dtype
+    lo = jnp.tanh(xw @ params["decay_a"].astype(dt)) @ params["decay_b"].astype(dt)
+    return jnp.exp(-jnp.exp(params["decay_w0"] + lo.astype(jnp.float32)))
+
+
+def _group_norm(y: jnp.ndarray, scale: jnp.ndarray, H: int, eps: float = 64e-5):
+    """Per-head groupnorm over head_dim.  y: (..., d)."""
+    shp = y.shape
+    yh = y.reshape(*shp[:-1], H, shp[-1] // H).astype(jnp.float32)
+    mean = yh.mean(axis=-1, keepdims=True)
+    var = yh.var(axis=-1, keepdims=True)
+    yh = (yh - mean) * jax.lax.rsqrt(var + eps)
+    return (yh.reshape(shp) * scale).astype(y.dtype)
+
+
+def _wkv_inputs(params, cfg: ModelConfig, x: jnp.ndarray, xx: jnp.ndarray):
+    """Project mixed inputs to per-head r,k,v,w,g.  x, xx: (B, S, d)."""
+    dt = x.dtype
+    mu = params["mu"]
+    r = _mix(x, xx, mu[0]) @ params["w_r"].astype(dt)
+    k = _mix(x, xx, mu[1]) @ params["w_k"].astype(dt)
+    v = _mix(x, xx, mu[2]) @ params["w_v"].astype(dt)
+    g = _mix(x, xx, mu[3]) @ params["w_g"].astype(dt)
+    w = _decay(params, _mix(x, xx, mu[4]))
+    return r, k, v, w, g
+
+
+def wkv_scan(r, k, v, w, u, S0):
+    """Reference WKV recurrence.  r,k,v,w: (B, S, H, D); u: (H, D);
+    S0: (B, H, D, D).  Returns (y (B,S,H,D), S_final)."""
+    rf, kf, vf, wf = (a.astype(jnp.float32) for a in (r, k, v, w))
+
+    def step(S, t):
+        r_t, k_t, v_t, w_t = t                                # (B, H, D)
+        kv = k_t[..., :, None] * v_t[..., None, :]            # (B,H,D,D)
+        y = jnp.einsum("bhi,bhij->bhj", r_t, S + u[..., :, None] * kv)
+        S = w_t[..., :, None] * S + kv
+        return S, y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (rf, kf, vf, wf))
+    S, ys = jax.lax.scan(step, S0, xs)
+    return jnp.moveaxis(ys, 0, 1), S
+
+
+def time_mix_full(params, cfg: ModelConfig, x: jnp.ndarray,
+                  impl: str = "xla") -> jnp.ndarray:
+    """Full-sequence time-mix.  x: (B, S, d)."""
+    B, S, d = x.shape
+    D = cfg.head_dim
+    H = d // D
+    xx = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]         # token shift
+    r, k, v, w, g = _wkv_inputs(params, cfg, x, xx)
+    rh, kh, vh, wh = (a.reshape(B, S, H, D) for a in (r, k, v, w))
+    u = params["bonus_u"].reshape(H, D)
+    S0 = jnp.zeros((B, H, D, D), jnp.float32)
+    if impl == "wkv6_kernel":
+        from repro.kernels.wkv6 import ops as wkv_ops
+        y, _ = wkv_ops.wkv6(rh, kh, vh, wh, u, S0)
+    else:
+        y, _ = wkv_scan(rh, kh, vh, wh, u, S0)
+    y = y.reshape(B, S, d).astype(x.dtype)
+    y = _group_norm(y, params["ln_scale"], H)
+    return (y * jax.nn.silu(g)) @ params["w_o"].astype(x.dtype)
+
+
+def init_channel_mix(key, cfg: ModelConfig):
+    pdt = m.dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    return {
+        "mu": (jax.random.uniform(ks[2], (2, cfg.d_model)) * 0.5 + 0.25).astype(jnp.float32),
+        "w_k": m.dense_init(ks[0], cfg.d_model, cfg.d_ff, pdt),
+        "w_v": m.dense_init(ks[1], cfg.d_ff, cfg.d_model, pdt),
+        "w_r": m.dense_init(jax.random.fold_in(ks[0], 1), cfg.d_model, cfg.d_model, pdt),
+    }
+
+
+def channel_mix_full(params, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    dt = x.dtype
+    xx = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    k = _mix(x, xx, params["mu"][0]) @ params["w_k"].astype(dt)
+    r = _mix(x, xx, params["mu"][1]) @ params["w_r"].astype(dt)
+    v = jnp.square(jax.nn.relu(k)) @ params["w_v"].astype(dt)
+    return jax.nn.sigmoid(r) * v
+
+
+# ---------------------------------------------------------------------------
+# decode (single token, carried state)
+# ---------------------------------------------------------------------------
+
+def init_rwkv_state(cfg: ModelConfig, batch: int, dtype) -> Dict[str, jnp.ndarray]:
+    D = cfg.head_dim
+    H = cfg.d_model // D
+    return {
+        "shift_t": jnp.zeros((batch, cfg.d_model), dtype),
+        "shift_c": jnp.zeros((batch, cfg.d_model), dtype),
+        "wkv": jnp.zeros((batch, H, D, D), jnp.float32),
+    }
+
+
+def time_mix_decode(params, cfg: ModelConfig, x: jnp.ndarray,
+                    state: Dict[str, jnp.ndarray]) -> Tuple[jnp.ndarray, Dict]:
+    """x: (B, 1, d)."""
+    B, _, d = x.shape
+    D = cfg.head_dim
+    H = d // D
+    x1 = x[:, 0]
+    xx = state["shift_t"]
+    r, k, v, w, g = _wkv_inputs(params, cfg, x1, xx)
+    rh, kh, vh, wh = (a.reshape(B, H, D).astype(jnp.float32)
+                      for a in (r, k, v, w))
+    u = params["bonus_u"].reshape(H, D)
+    kv = kh[..., :, None] * vh[..., None, :]
+    y = jnp.einsum("bhi,bhij->bhj", rh, state["wkv"] + u[..., :, None] * kv)
+    S = wh[..., :, None] * state["wkv"] + kv
+    y = _group_norm(y.reshape(B, d).astype(x.dtype), params["ln_scale"], H)
+    out = (y * jax.nn.silu(g)) @ params["w_o"].astype(x.dtype)
+    new_state = dict(state, shift_t=x1, wkv=S)
+    return out[:, None], new_state
+
+
+def channel_mix_decode(params, cfg: ModelConfig, x: jnp.ndarray,
+                       state: Dict[str, jnp.ndarray]) -> Tuple[jnp.ndarray, Dict]:
+    dt = x.dtype
+    x1 = x[:, 0]
+    xx = state["shift_c"]
+    k = _mix(x1, xx, params["mu"][0]) @ params["w_k"].astype(dt)
+    r = _mix(x1, xx, params["mu"][1]) @ params["w_r"].astype(dt)
+    v = jnp.square(jax.nn.relu(k)) @ params["w_v"].astype(dt)
+    out = jax.nn.sigmoid(r) * v
+    return out[:, None], dict(state, shift_c=x1)

@@ -1,0 +1,258 @@
+"""Universal scanned-transformer spine for every assigned family.
+
+One block definition covers:
+  dense / vlm / audio : norm -> GQA attention -> res ; norm -> SwiGLU -> res
+  moe                 : ... ; norm -> top-k MoE FFN -> res (aux accumulated)
+  ssm (rwkv6)         : norm -> WKV6 time-mix -> res ; norm -> channel-mix -> res
+  hybrid (hymba)      : norm -> (attention || mamba) branch-normed mean -> res ;
+                        norm -> SwiGLU -> res
+
+Per-layer weights are stacked on a leading (L, ...) axis and consumed by
+``lax.scan`` — compile time is O(1) in depth (essential for llama3-405b's
+126 layers under the dry-run).  ``opts``:
+  impl          'xla' | 'flash'       (attention path)
+  wkv_impl      'xla' | 'wkv6_kernel' (rwkv6 path)
+  moe_dispatch  'scatter' | 'dense'
+  remat         'none' | 'full' | 'dots'
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models import mamba as mb
+from repro.models import module as m
+from repro.models import moe as moe_mod
+from repro.models import rwkv6 as rk
+from repro.models.rope import text_positions
+
+DEFAULT_OPTS = {"impl": "xla", "wkv_impl": "xla",
+                "moe_dispatch": "scatter", "remat": "none",
+                # activation sharding map (sharding/apply.py); None = no-op
+                "act_sharding": None,
+                # unroll the layer scan (dry-run FLOPs calibration only)
+                "unroll_layers": False}
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_layer(key, cfg: ModelConfig) -> Dict[str, Any]:
+    ks = jax.random.split(key, 8)
+    p: Dict[str, Any] = {
+        "norm1": L.init_rmsnorm(cfg.d_model),
+        "norm2": L.init_rmsnorm(cfg.d_model),
+    }
+    if cfg.family == "ssm":
+        p["time"] = rk.init_time_mix(ks[0], cfg)
+        p["channel"] = rk.init_channel_mix(ks[1], cfg)
+        return p
+    p["attn"] = attn.init_attention(ks[0], cfg)
+    if cfg.family == "hybrid":
+        p["mamba"] = mb.init_mamba(ks[1], cfg)
+        p["bnorm_attn"] = L.init_rmsnorm(cfg.d_model)
+        p["bnorm_mamba"] = L.init_rmsnorm(cfg.d_model)
+    if cfg.num_experts:
+        p["moe"] = moe_mod.init_moe(ks[2], cfg)
+    else:
+        p["mlp"] = L.init_mlp(ks[2], cfg)
+    return p
+
+
+def init_model(key, cfg: ModelConfig) -> Dict[str, Any]:
+    k_emb, k_layers, k_head, k_fin = jax.random.split(key, 4)
+    params: Dict[str, Any] = {}
+    if not (cfg.family == "audio" and cfg.frontend_stub):
+        params["embed"] = L.init_embedding(k_emb, cfg)
+    params["layers"] = m.stack_layers(
+        lambda k: _init_layer(k, cfg), k_layers, cfg.num_layers)
+    params["final_norm"] = L.init_rmsnorm(cfg.d_model)
+    params["head"] = L.init_lm_head(k_head, cfg)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# block bodies
+# ---------------------------------------------------------------------------
+
+def _mixer_full(p, cfg: ModelConfig, h: jnp.ndarray, positions, opts) -> jnp.ndarray:
+    act = opts["act_sharding"]
+    if cfg.family == "ssm":
+        return rk.time_mix_full(p["time"], cfg, h, impl=opts["wkv_impl"])
+    if cfg.family == "hybrid":
+        a = attn.attend_full(p["attn"], cfg, h, positions, impl=opts["impl"],
+                             act=act)
+        s = mb.mamba_full(p["mamba"], cfg, h)
+        return 0.5 * (L.rmsnorm(p["bnorm_attn"], a, cfg.norm_eps)
+                      + L.rmsnorm(p["bnorm_mamba"], s, cfg.norm_eps))
+    return attn.attend_full(p["attn"], cfg, h, positions, impl=opts["impl"],
+                            act=act)
+
+
+def _ffn_full(p, cfg: ModelConfig, h: jnp.ndarray, opts) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    if cfg.family == "ssm":
+        return rk.channel_mix_full(p["channel"], cfg, h), jnp.zeros((), jnp.float32)
+    if cfg.num_experts:
+        return moe_mod.moe_ffn(p["moe"], cfg, h, dispatch=opts["moe_dispatch"],
+                               act=opts["act_sharding"])
+    return L.mlp(p["mlp"], h), jnp.zeros((), jnp.float32)
+
+
+def _layer_full(p, cfg: ModelConfig, x: jnp.ndarray, positions, opts):
+    from repro.sharding.apply import constrain
+
+    h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+    x = x + _mixer_full(p, cfg, h, positions, opts)
+    h = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+    y, aux = _ffn_full(p, cfg, h, opts)
+    out = constrain(x + y, opts["act_sharding"], "B", None, None)
+    return out, aux
+
+
+# ---------------------------------------------------------------------------
+# full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def embed_inputs(params, cfg: ModelConfig, inputs: Dict[str, jnp.ndarray],
+                 dtype) -> jnp.ndarray:
+    """Resolve the input embedding for every modality (stub carve-out)."""
+    if cfg.family == "audio" and cfg.frontend_stub:
+        return inputs["embeds"].astype(dtype)          # precomputed frames
+    x = L.embed(params["embed"], inputs["tokens"], dtype)
+    if cfg.family == "vlm" and "patch_embeds" in inputs:
+        pe = inputs["patch_embeds"].astype(dtype)      # (B, P, d) early fusion
+        P = pe.shape[1]
+        x = jax.lax.dynamic_update_slice(x, pe, (0, 0, 0)) if P == x.shape[1] \
+            else x.at[:, :P].set(pe)
+    return x
+
+
+def forward_full(params, cfg: ModelConfig, inputs: Dict[str, jnp.ndarray],
+                 opts: Optional[dict] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (logits (B, S, vocab_padded), moe_aux scalar)."""
+    from repro.sharding.apply import constrain
+
+    opts = {**DEFAULT_OPTS, **(opts or {})}
+    dtype = m.dtype_of(cfg.dtype)
+    x = embed_inputs(params, cfg, inputs, dtype)
+    x = constrain(x, opts["act_sharding"], "B", None, None)
+    B, S = x.shape[:2]
+    positions = inputs.get("positions")
+    if positions is None:
+        positions = text_positions(B, S, mrope=bool(cfg.mrope_sections))
+
+    def body(x, layer_p):
+        return _layer_full(layer_p, cfg, x, positions, opts)
+
+    if opts["remat"] == "full":
+        body = jax.checkpoint(body)
+    elif opts["remat"] == "dots":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+    if opts["unroll_layers"]:
+        auxs = []
+        for i in range(cfg.num_layers):
+            layer_p = jax.tree_util.tree_map(lambda a: a[i], params["layers"])
+            x, aux = body(x, layer_p)
+            auxs.append(aux)
+        auxs = jnp.stack(auxs)
+    else:
+        x, auxs = jax.lax.scan(body, x, params["layers"])
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if opts.get("return_hidden"):
+        return x, jnp.sum(auxs)          # fused-head loss path (§Perf)
+    logits = L.lm_logits(params["head"], params.get("embed"), cfg, x)
+    return logits, jnp.sum(auxs)
+
+
+# ---------------------------------------------------------------------------
+# decode (single new token against carried per-layer state)
+# ---------------------------------------------------------------------------
+
+def init_decode_state(cfg: ModelConfig, batch: int, context_len: int,
+                      dtype) -> Dict[str, Any]:
+    """Stacked (L, ...) per-layer state pytree for lax.scan consumption."""
+    Lr = cfg.num_layers
+
+    def rep(tree):
+        return jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (Lr,) + a.shape), tree)
+
+    st: Dict[str, Any] = {}
+    if cfg.family == "ssm":
+        st["rwkv"] = rep(rk.init_rwkv_state(cfg, batch, dtype))
+        return st
+    st["kv"] = rep(attn.init_cache(cfg, batch, context_len, dtype))
+    if cfg.family == "hybrid":
+        st["mamba"] = rep(mb.init_mamba_state(cfg, batch, dtype))
+    return st
+
+
+def _layer_decode(p, cfg: ModelConfig, x, state, position, opts):
+    h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+    new_state = dict(state)
+    if cfg.family == "ssm":
+        y, rst = rk.time_mix_decode(p["time"], cfg, h, state["rwkv"])
+        new_state["rwkv"] = rst
+        x = x + y
+        h = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+        y, rst = rk.channel_mix_decode(p["channel"], cfg, h, new_state["rwkv"])
+        new_state["rwkv"] = rst
+        return x + y, new_state
+    if cfg.family == "hybrid":
+        a, kv = attn.attend_decode(p["attn"], cfg, h, state["kv"], position)
+        s, mst = mb.mamba_decode(p["mamba"], cfg, h, state["mamba"])
+        new_state["kv"], new_state["mamba"] = kv, mst
+        y = 0.5 * (L.rmsnorm(p["bnorm_attn"], a, cfg.norm_eps)
+                   + L.rmsnorm(p["bnorm_mamba"], s, cfg.norm_eps))
+    else:
+        y, kv = attn.attend_decode(p["attn"], cfg, h, state["kv"], position)
+        new_state["kv"] = kv
+    x = x + y
+    h = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+    if cfg.num_experts:
+        y, _ = moe_mod.moe_ffn(p["moe"], cfg, h, dispatch=opts["moe_dispatch"])
+    else:
+        y = L.mlp(p["mlp"], h)
+    return x + y, new_state
+
+
+def decode_step(params, cfg: ModelConfig, token: jnp.ndarray,
+                state: Dict[str, Any], position: jnp.ndarray,
+                opts: Optional[dict] = None) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """token: (B, 1) int32; position: (B,) absolute index of the new token.
+    Returns (logits (B, 1, vocab_padded), new_state)."""
+    from repro.sharding.apply import constrain
+
+    opts = {**DEFAULT_OPTS, **(opts or {})}
+    dtype = m.dtype_of(cfg.dtype)
+    x = L.embed(params["embed"], token, dtype)
+    x = constrain(x, opts["act_sharding"], "B", None, None)
+
+    def body(x, xs):
+        layer_p, st = xs
+        x, new_st = _layer_decode(layer_p, cfg, x, st, position, opts)
+        x = constrain(x, opts["act_sharding"], "B", None, None)
+        return x, new_st
+
+    if opts["unroll_layers"]:
+        new_states = []
+        for i in range(cfg.num_layers):
+            xs_i = jax.tree_util.tree_map(lambda a: a[i],
+                                          (params["layers"], state))
+            x, st_i = body(x, xs_i)
+            new_states.append(st_i)
+        new_state = jax.tree_util.tree_map(
+            lambda *leaves: jnp.stack(leaves), *new_states)
+    else:
+        x, new_state = jax.lax.scan(body, x, (params["layers"], state))
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.lm_logits(params["head"], params.get("embed"), cfg, x)
+    return logits, new_state

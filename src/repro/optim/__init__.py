@@ -1,0 +1,6 @@
+from repro.optim.adamw import adamw
+from repro.optim.schedule import constant, cosine
+from repro.optim.sgd import Optimizer, apply_updates, clip_by_global_norm, sgd
+
+__all__ = ["Optimizer", "adamw", "apply_updates", "clip_by_global_norm",
+           "constant", "cosine", "sgd"]

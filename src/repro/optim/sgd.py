@@ -1,0 +1,50 @@
+"""SGD (+ optional momentum) — mini-optax style (init/update pairs)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Tuple[Any, Any]]   # (grads, state, params)
+
+
+def apply_updates(params: Any, updates: Any) -> Any:
+    return jax.tree_util.tree_map(lambda p, u: (p + u).astype(p.dtype),
+                                  params, updates)
+
+
+def sgd(learning_rate: float | Callable[[jnp.ndarray], jnp.ndarray],
+        momentum: float = 0.0) -> Optimizer:
+    lr_fn = learning_rate if callable(learning_rate) else (lambda _: learning_rate)
+
+    def init(params):
+        state = {"step": jnp.zeros((), jnp.int32)}
+        if momentum:
+            state["mu"] = jax.tree_util.tree_map(jnp.zeros_like, params)
+        return state
+
+    def update(grads, state, params=None):
+        del params
+        lr = lr_fn(state["step"])
+        if momentum:
+            mu = jax.tree_util.tree_map(
+                lambda m, g: momentum * m + g, state["mu"], grads)
+            updates = jax.tree_util.tree_map(lambda m: -lr * m, mu)
+            return updates, {"step": state["step"] + 1, "mu": mu}
+        updates = jax.tree_util.tree_map(lambda g: -lr * g, grads)
+        return updates, {"step": state["step"] + 1}
+
+    return Optimizer(init, update)
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> Any:
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree_util.tree_leaves(grads)]
+    norm = jnp.sqrt(sum(leaves))
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads)

@@ -1,0 +1,3 @@
+from repro.serving.decode import generate, prefill
+
+__all__ = ["generate", "prefill"]

@@ -1,0 +1,63 @@
+"""Batched autoregressive serving loop on top of decode_step."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import module as m
+from repro.models.registry import Model
+
+
+def prefill(model: Model, params, tokens: jnp.ndarray,
+            context_len: int, opts: Optional[dict] = None
+            ) -> Tuple[jnp.ndarray, Any, jnp.ndarray]:
+    """Feed a prompt token-by-token through decode_step (cache-exact path).
+
+    Returns (last_logits, state, positions).  Production prefill uses the
+    full-sequence forward; this loop is the reference used by tests to prove
+    decode == full forward."""
+    B, S = tokens.shape
+    dtype = m.dtype_of(model.cfg.dtype)
+    state = model.init_decode_state(B, context_len, dtype)
+    logits = None
+
+    def body(carry, t):
+        state, _ = carry
+        tok = jax.lax.dynamic_slice_in_dim(tokens, t, 1, axis=1)
+        pos = jnp.full((B,), t, jnp.int32)
+        lg, state = model.decode(params, tok, state, pos, opts)
+        return (state, lg), None
+
+    lg0 = jnp.zeros((B, 1, model.cfg.vocab_padded), dtype)
+    (state, logits), _ = jax.lax.scan(body, (state, lg0), jnp.arange(S))
+    return logits, state, jnp.full((B,), S, jnp.int32)
+
+
+def generate(model: Model, params, prompt: jnp.ndarray, max_new: int,
+             context_len: int, temperature: float = 0.0,
+             key: Optional[jax.Array] = None,
+             opts: Optional[dict] = None) -> jnp.ndarray:
+    """Greedy / sampled generation.  prompt: (B, S) -> (B, max_new)."""
+    B = prompt.shape[0]
+    logits, state, pos = prefill(model, params, prompt, context_len, opts)
+    key = key if key is not None else jax.random.PRNGKey(0)
+
+    def pick(lg, k):
+        lg = lg[:, -1].astype(jnp.float32)
+        if temperature <= 0.0:
+            return jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(k, lg / temperature, axis=-1).astype(jnp.int32)
+
+    def body(carry, _):
+        state, pos, last_tok, key = carry
+        key, sub = jax.random.split(key)
+        lg, state = model.decode(params, last_tok[:, None], state, pos, opts)
+        nxt = pick(lg, sub)
+        return (state, pos + 1, nxt, key), nxt
+
+    first = pick(logits, key)
+    (state, pos, _, _), toks = jax.lax.scan(
+        body, (state, pos, first, key), None, length=max_new - 1)
+    return jnp.concatenate([first[:, None], toks.T], axis=1)

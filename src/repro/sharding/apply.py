@@ -1,0 +1,45 @@
+"""Activation sharding constraints threaded through the model code.
+
+GSPMD propagation alone replicates the batch through the attention-head
+reshape whenever head counts don't divide the model axis (hymba 25H,
+qwen2-vl 12H, granite 24H, llama4 40H — and every GQA arch's KV=8 < 16), so
+the model bodies call ``constrain`` at the canonical points (post-embed,
+post-projection, per-layer output).  ``act`` is None outside the dry-run /
+launcher (single-device smoke tests), making everything a no-op.
+
+act = {"batch": ("data",) | ("pod","data"), "model": "model", "model_size": 16}
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def constrain(x, act: Optional[dict], *entries):
+    """with_sharding_constraint under the ambient mesh; no-op when act=None.
+
+    entries use the placeholders 'B' (batch axes), 'M' (model axis), None."""
+    if act is None:
+        return x
+    spec = []
+    for e in entries:
+        if e == "B":
+            spec.append(act["batch"])
+        elif e == "M":
+            spec.append(act["model"])
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def heads_shardable(act: Optional[dict], num_heads: int) -> bool:
+    return act is not None and num_heads % act.get("model_size", 16) == 0
+
+
+def batch_shardable(act: Optional[dict], batch: int) -> bool:
+    if act is None:
+        return False
+    n = act.get("batch_size", 16)
+    return batch % n == 0 and batch > 1

@@ -1,0 +1,197 @@
+"""PartitionSpec rule tables for every family (DESIGN.md §4/§6).
+
+Scheme: 2D param sharding — FSDP along ``data`` on the input/feature dim +
+tensor-parallel along ``model`` on the flattened heads·head_dim / ffn dim
+(head-count axes are never sharded directly: hymba 25H, qwen2-vl 12H and
+granite 24H don't divide the 16-way model axis, but their flattened feature
+dims do — recorded in DESIGN.md §4).  Params are replicated over ``pod``;
+cross-pod traffic belongs to OpportunisticSync.
+
+MoE placement: llama4 (128e) experts are expert-parallel on ``model``
+(128/16 = 8 per shard); granite (40e ∤ 16) replicates experts and shards
+*inside* each expert (moe_d_ff 512/16 = 32).
+
+Decode caches shard the cache-position axis over ``model`` (batch over
+data): KV head counts (8, 5, 2) don't divide 16, cache positions always do.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+
+DATA, MODEL, POD = "data", "model", "pod"
+
+
+def batch_axes(multi_pod: bool) -> Tuple[str, ...]:
+    return (POD, DATA) if multi_pod else (DATA,)
+
+
+def _divisible(dim: int, mesh_axis_size: int) -> bool:
+    return dim % mesh_axis_size == 0
+
+
+def _key_path_str(path) -> str:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+    return "/".join(out)
+
+
+def _param_rule(cfg: ModelConfig, path: str, ndim: int) -> P:
+    """Rule for one parameter leaf.  Stacked layer leaves carry a leading L
+    dim (never sharded); we match on the trailing dims."""
+    stacked = path.startswith("layers/")
+    lead = (None,) if stacked else ()
+    name = path.split("/")[-1]
+    parent = path.split("/")[-2] if "/" in path else ""
+
+    def spec(*trail):
+        full = lead + trail
+        assert len(full) == ndim, (path, ndim, full)
+        return P(*full)
+
+    # --- embeddings / head --------------------------------------------------
+    if path == "embed/table":
+        return P(MODEL, DATA)               # vocab x d
+    if path == "head/w":
+        return P(DATA, MODEL)               # d x vocab
+    # --- norms / small vectors ---------------------------------------------
+    if name in ("scale", "mu", "decay_w0", "bonus_u", "ln_scale", "D", "b"):
+        return P(*([None] * ndim))
+    # --- MoE ----------------------------------------------------------------
+    if parent == "experts" or "experts" in path:
+        expert_parallel = _divisible(cfg.num_experts, 16)
+        if name in ("w_gate", "w_up"):       # (L, E, d, ff)
+            return spec(MODEL, DATA, None) if expert_parallel \
+                else spec(None, DATA, MODEL)
+        if name == "w_down":                 # (L, E, ff, d)
+            return spec(MODEL, None, DATA) if expert_parallel \
+                else spec(None, MODEL, DATA)
+    if name == "router":                     # (L, d, E)
+        return spec(DATA, None)
+    # --- attention / generic matmuls ----------------------------------------
+    if name in ("wq", "wk", "wv", "w_gate", "w_up", "w_in", "w_k", "w_r",
+                "w_v_up"):
+        return spec(DATA, MODEL)             # (L, d, out)
+    if name in ("wo", "w_down", "w_out"):
+        return spec(MODEL, DATA)             # (L, out, d)
+    if name in ("bq", "bk", "bv"):
+        return spec(MODEL)
+    # --- rwkv6 --------------------------------------------------------------
+    if name == "w_v" and parent == "time":   # d x d value proj
+        return spec(DATA, MODEL)
+    if name == "w_g":
+        return spec(DATA, MODEL)
+    if name == "w_o":
+        return spec(MODEL, DATA)
+    if name in ("decay_a",):                 # (L, d, rank): rank tiny
+        return spec(DATA, None)
+    if name in ("decay_b",):                 # (L, rank, d)
+        return spec(None, MODEL)
+    # --- mamba --------------------------------------------------------------
+    if name == "conv_w":                     # (L, K, di)
+        return spec(None, MODEL)
+    if name == "w_xproj":                    # (L, di, R+2N)
+        return spec(MODEL, None)
+    if name == "w_dt":                       # (L, R, di)
+        return spec(None, MODEL)
+    if name == "log_A":                      # (L, di, N)
+        return spec(MODEL, None)
+    # --- cnn / fallback ------------------------------------------------------
+    return P(*([None] * ndim))
+
+
+def param_specs(cfg: ModelConfig, params: Any) -> Any:
+    """PartitionSpec tree matching a params pytree (works on shapes too)."""
+    def rule(path, leaf):
+        return _param_rule(cfg, _key_path_str(path), np.ndim(leaf) or len(leaf.shape))
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+def opt_state_specs(cfg: ModelConfig, params: Any) -> Dict[str, Any]:
+    """AdamW moments mirror the param sharding; step is replicated."""
+    ps = param_specs(cfg, params)
+    return {"step": P(), "m": ps, "v": ps}
+
+
+def train_state_specs(cfg: ModelConfig, params: Any):
+    from repro.training.train_state import TrainState
+    return TrainState(params=param_specs(cfg, params),
+                      opt_state=opt_state_specs(cfg, params),
+                      step=P())
+
+
+# ---------------------------------------------------------------------------
+# activations / inputs / decode state
+# ---------------------------------------------------------------------------
+
+def input_sharding_specs(cfg: ModelConfig, shape: InputShape,
+                         multi_pod: bool) -> Any:
+    """Spec tree matching models.inputs.input_specs structure."""
+    b_ax = batch_axes(multi_pod)
+    n = (2 if multi_pod else 1) * 16
+    b = b_ax if (shape.global_batch > 1 and shape.global_batch % n == 0) else None
+
+    specs: Dict[str, P] = {}
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "audio":
+            specs["embeds"] = P(b, None, None)
+            if shape.kind == "train":
+                specs["labels"] = P(b, None)
+                specs["mask"] = P(b, None)
+        else:
+            specs["tokens"] = P(b, None)
+            if shape.kind == "train":
+                specs["labels"] = P(b, None)
+            if cfg.family == "vlm":
+                specs["patch_embeds"] = P(b, None, None)
+                specs["positions"] = P(b, None, None)
+        return specs
+    specs["token"] = P(b, None)
+    specs["position"] = P(b)
+    return specs
+
+
+def decode_state_specs(cfg: ModelConfig, batch: int, multi_pod: bool) -> Any:
+    """Spec tree matching transformer.init_decode_state structure."""
+    b_ax = batch_axes(multi_pod)
+    n_batch_shards = (2 if multi_pod else 1) * 16
+    # the batch dim is ONE PartitionSpec entry (possibly a tuple of axes)
+    bspec = (b_ax,) if batch % n_batch_shards == 0 and batch > 1 else (None,)
+    cache_ax = MODEL if batch > 1 else (DATA, MODEL)
+    # when batch is unsharded (long_500k), spread the cache over data+model
+    st: Dict[str, Any] = {}
+    if cfg.family == "ssm":
+        st["rwkv"] = {
+            "shift_t": P(None, *bspec, MODEL),
+            "shift_c": P(None, *bspec, MODEL),
+            "wkv": P(None, *bspec, None, None, None) if batch > 1
+                   else P(None, None, MODEL, None, None),
+        }
+        return st
+    st["kv"] = {
+        "k": P(None, *bspec, cache_ax, None, None),
+        "v": P(None, *bspec, cache_ax, None, None),
+    }
+    if cfg.family == "hybrid":
+        st["mamba"] = {
+            "conv": P(None, *bspec, None, MODEL),
+            "ssm": P(None, *bspec, MODEL, None),
+        }
+    return st
+
+
+def logits_spec(multi_pod: bool, batch: int) -> P:
+    b_ax = batch_axes(multi_pod)
+    n = (2 if multi_pod else 1) * 16
+    if batch % n == 0 and batch > 1:
+        return P(b_ax, None, MODEL)
+    return P(None, None, MODEL)

@@ -1,0 +1,7 @@
+from repro.training.loss import accuracy, cross_entropy
+from repro.training.step import (loss_fn, make_decode_step, make_prefill_step,
+                                 make_train_step)
+from repro.training.train_state import TrainState, create_train_state
+
+__all__ = ["TrainState", "accuracy", "create_train_state", "cross_entropy",
+           "loss_fn", "make_decode_step", "make_prefill_step", "make_train_step"]

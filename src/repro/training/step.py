@@ -1,0 +1,68 @@
+"""train_step / prefill_step factories shared by smoke tests, examples, the
+FL simulation, and the multi-pod dry-run."""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import Model
+from repro.optim.sgd import Optimizer, apply_updates, clip_by_global_norm
+from repro.training.loss import cross_entropy
+from repro.training.train_state import TrainState
+
+
+def loss_fn(model: Model, params, batch: Dict[str, Any],
+            opts: Optional[dict] = None) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    mask = batch.get("mask")
+    if opts and opts.get("fused_head"):
+        from repro.training.loss import fused_head_cross_entropy
+        hidden, aux = model.forward(params, batch,
+                                    {**opts, "return_hidden": True})
+        ce = fused_head_cross_entropy(params.get("head"), params.get("embed"),
+                                      model.cfg, hidden, batch["labels"], mask)
+    else:
+        logits, aux = model.forward(params, batch, opts)
+        ce = cross_entropy(logits, batch["labels"], mask)
+    total = ce + model.cfg.router_aux_coef * aux if model.cfg.num_experts else ce
+    return total, {"ce": ce, "aux": aux}
+
+
+def make_train_step(model: Model, optimizer: Optimizer,
+                    opts: Optional[dict] = None,
+                    grad_clip: float = 0.0) -> Callable:
+    """Returns step(state, batch) -> (state, metrics).  Pure, jit-able."""
+
+    def step(state: TrainState, batch: Dict[str, Any]):
+        (loss, parts), grads = jax.value_and_grad(
+            lambda p: loss_fn(model, p, batch, opts), has_aux=True)(state.params)
+        if grad_clip:
+            grads = clip_by_global_norm(grads, grad_clip)
+        updates, opt_state = optimizer.update(grads, state.opt_state, state.params)
+        params = apply_updates(state.params, updates)
+        new_state = state._replace(params=params, opt_state=opt_state,
+                                   step=state.step + 1)
+        return new_state, {"loss": loss, **parts}
+
+    return step
+
+
+def make_prefill_step(model: Model, opts: Optional[dict] = None) -> Callable:
+    """Forward-only step (inference prefill / encoder encode)."""
+
+    def step(params, batch: Dict[str, Any]):
+        logits, _ = model.forward(params, batch, opts)
+        return logits
+
+    return step
+
+
+def make_decode_step(model: Model, opts: Optional[dict] = None) -> Callable:
+    """One-token serve step: (params, token, state, position) -> (logits, state)."""
+    assert model.decode is not None, f"{model.cfg.name} has no decode step"
+
+    def step(params, token, state, position):
+        return model.decode(params, token, state, position, opts)
+
+    return step

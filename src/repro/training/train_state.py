@@ -1,0 +1,33 @@
+"""TrainState pytree: params + optimizer state + step counter.
+
+Also carries the OpportunisticSync snapshot slots when the pod-axis OPT
+feature is enabled (core/opportunistic_sync.py)."""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax.numpy as jnp
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    step: jnp.ndarray
+    # OpportunisticSync slots (None when the feature is off)
+    snapshot: Optional[Any] = None
+    snapshot_step: Optional[jnp.ndarray] = None
+    tau_extra: Optional[jnp.ndarray] = None
+
+
+def create_train_state(params: Any, optimizer, with_opt_sync: bool = False,
+                       tau_extra0: float = 0.0) -> TrainState:
+    import jax
+    opt_state = optimizer.init(params)
+    if with_opt_sync:
+        return TrainState(
+            params=params, opt_state=opt_state, step=jnp.zeros((), jnp.int32),
+            snapshot=jax.tree_util.tree_map(jnp.copy, params),
+            snapshot_step=jnp.asarray(-1, jnp.int32),
+            tau_extra=jnp.asarray(tau_extra0, jnp.float32))
+    return TrainState(params=params, opt_state=opt_state,
+                      step=jnp.zeros((), jnp.int32))

@@ -1,0 +1,5 @@
+from repro.utils.hlo import collective_bytes, collective_stats
+from repro.utils.tree import tree_bytes, tree_describe, tree_size
+
+__all__ = ["collective_bytes", "collective_stats", "tree_bytes",
+           "tree_describe", "tree_size"]

@@ -1,0 +1,70 @@
+"""HLO text analysis for the roofline: collective bytes + remat duplication.
+
+``collective_bytes`` parses lowered/compiled HLO text and sums operand sizes
+of all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+ops.  cost_analysis() does not report these, so the §Roofline collective term
+comes from here (see the brief's ROOFLINE ANALYSIS).
+"""
+from __future__ import annotations
+
+import re
+from collections import Counter
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  f32[16,128]{1,0}  or  bf16[2,4096,1024]
+_SHAPE_RE = re.compile(r"\b(pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|f64)"
+                       r"\[([0-9,]*)\]")
+
+# line-based: "%name = <type(s)> <collective>(operands...)"; the type may be
+# a tuple spanning /*index=N*/ comments, so match everything up to the op
+# token rather than excluding characters.
+_OP_RE = re.compile(
+    r"=\s*(.*?)\s(" + "|".join(_COLLECTIVES) + r")(-start|-done)?\(")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per-collective-kind {count, bytes} from HLO text (output shapes).
+
+    '-done' ops are skipped so async pairs aren't double counted."""
+    stats: Dict[str, Dict[str, float]] = {
+        k: {"count": 0, "bytes": 0.0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        type_str, kind, suffix = m.group(1), m.group(2), m.group(3)
+        if suffix == "-done":
+            continue
+        stats[kind]["count"] += 1
+        stats[kind]["bytes"] += _shape_bytes(type_str)
+    return stats
+
+
+def collective_bytes(hlo_text: str) -> float:
+    return sum(v["bytes"] for v in collective_stats(hlo_text).values())
+
+
+def duplicate_op_counts(hlo_text: str, top: int = 10) -> Counter:
+    """Fusion-name histogram — a quick remat/recompute smell test."""
+    names = re.findall(r"%([a-zA-Z0-9_.\-]+?)(?:\.\d+)?\s*=", hlo_text)
+    return Counter(names).most_common(top)

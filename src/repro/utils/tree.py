@@ -1,0 +1,26 @@
+"""Pytree inspection helpers."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def tree_bytes(tree: Any) -> int:
+    return sum(np.size(x) * np.dtype(getattr(x, "dtype", np.float32)).itemsize
+               if str(getattr(x, "dtype", "")) != "bfloat16"
+               else np.size(x) * 2
+               for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_size(tree: Any) -> int:
+    return sum(int(np.size(x)) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_describe(tree: Any, max_leaves: int = 20) -> str:
+    lines = []
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0][:max_leaves]:
+        keys = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        lines.append(f"{keys}: {getattr(leaf, 'shape', ())} {getattr(leaf, 'dtype', '')}")
+    return "\n".join(lines)

@@ -1,0 +1,54 @@
+"""Aggregation scheme tests (FedAvg, FedAsync weighting)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.aggregation import (aggregate_round, fedavg, fedasync_merge,
+                                    fedasync_weight)
+
+
+def tree(x):
+    return {"a": jnp.full((3,), float(x)), "b": {"c": jnp.full((2, 2), float(x))}}
+
+
+def test_fedavg_uniform():
+    out = fedavg([tree(1.0), tree(3.0)])
+    np.testing.assert_allclose(out["a"], 2.0)
+    np.testing.assert_allclose(out["b"]["c"], 2.0)
+
+
+def test_fedavg_weighted():
+    out = fedavg([tree(0.0), tree(4.0)], weights=[3.0, 1.0])
+    np.testing.assert_allclose(out["a"], 1.0)
+
+
+def test_fedasync_weight_paper_values():
+    # alpha=0.4, a=0.5, staleness 1 -> 0.4 * 2^-0.5
+    assert fedasync_weight(1) == pytest.approx(0.4 / np.sqrt(2))
+    assert fedasync_weight(0) == pytest.approx(0.4)
+    assert fedasync_weight(3) < fedasync_weight(1)  # staler -> smaller
+
+
+def test_fedasync_merge():
+    g = tree(0.0)
+    d = tree(1.0)
+    out = fedasync_merge(g, d, staleness=1)
+    w = fedasync_weight(1)
+    np.testing.assert_allclose(out["a"], w, rtol=1e-6)
+
+
+def test_aggregate_round_opt_uses_arrived_only():
+    out = aggregate_round([tree(2.0)], [(tree(100.0), 1)], tree(0.0), "opt")
+    np.testing.assert_allclose(out["a"], 2.0)
+
+
+def test_aggregate_round_async_downweights_delayed():
+    out = aggregate_round([tree(1.0)], [(tree(0.0), 1)], tree(5.0), "async")
+    w = fedasync_weight(1)
+    np.testing.assert_allclose(out["a"], 1.0 / (1.0 + w), rtol=1e-6)
+
+
+def test_aggregate_round_empty_keeps_global():
+    g = tree(7.0)
+    out = aggregate_round([], [], g, "discard")
+    np.testing.assert_allclose(out["a"], 7.0)

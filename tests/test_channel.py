@@ -1,0 +1,69 @@
+"""Channel model unit tests (Section II-A, eqs. 1-7)."""
+import numpy as np
+import pytest
+
+from repro.core.channel import (ChannelParams, UAVFleet, channel_gain,
+                                distance, elevation_deg, p_los, path_loss_db,
+                                rate_bps)
+
+P = ChannelParams()
+
+
+def test_distance_eq1():
+    pos = np.array([3.0, 4.0, 20.0 + 12.0])
+    assert distance(pos, 20.0) == pytest.approx(13.0)
+
+
+def test_elevation_bounds():
+    pos = np.array([[100.0, 0.0, 80.0], [0.0, 0.0, 80.0]])
+    th = elevation_deg(pos, 20.0)
+    assert 0.0 <= th[0] < 90.0
+    assert th[1] == pytest.approx(90.0)  # directly overhead
+
+
+def test_plos_monotonic_in_elevation():
+    th = np.linspace(1.0, 89.0, 50)
+    pl = p_los(th, P)
+    assert np.all(np.diff(pl) > 0)
+    assert 0.0 < pl[0] < pl[-1] <= 1.0
+
+
+def test_rate_decreases_with_distance():
+    z = 50.0
+    xs = np.linspace(50, 480, 20)
+    pos = np.stack([xs, np.zeros_like(xs), np.full_like(xs, z)], axis=-1)
+    r = rate_bps(pos, np.full(20, 3.0), P)
+    assert np.all(r > 0)
+    assert r[0] > r[-1]
+
+
+def test_channel_gain_below_unity():
+    pos = np.array([[200.0, 0.0, 60.0]])
+    g = channel_gain(pos, np.array([3.0]), P)
+    assert 0.0 < g[0] < 1.0
+
+
+def test_path_loss_is_attenuation():
+    pos = np.array([[100.0, 100.0, 40.0]])
+    assert path_loss_db(pos, P)[0] < -60.0
+
+
+def test_outage_chain_stationary():
+    fleet = UAVFleet(2000, P, seed=3)
+    draws = np.stack([fleet.outages() for _ in range(300)])
+    marginal = draws.mean()
+    assert abs(marginal - P.outage_prob) < 0.03
+    # burstiness: P(bad_t | bad_{t-1}) should match the persistence knob
+    prev, cur = draws[:-1].ravel(), draws[1:].ravel()
+    stay = cur[prev].mean()
+    assert abs(stay - P.outage_persistence) < 0.05
+
+
+def test_fleet_stays_in_cell():
+    fleet = UAVFleet(100, P, seed=0)
+    for _ in range(50):
+        fleet.move()
+    rad = np.linalg.norm(fleet.pos[:, :2], axis=-1)
+    assert np.all(rad <= P.cell_radius_m + 1e-6)
+    assert np.all((fleet.pos[:, 2] >= P.uav_z_range[0])
+                  & (fleet.pos[:, 2] <= P.uav_z_range[1]))

@@ -1,0 +1,77 @@
+"""Data partitioning + optimizer substrate tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import batches, make_digits, make_token_stream, partition
+from repro.optim import adamw, apply_updates, clip_by_global_norm, cosine, sgd
+
+
+def test_partition_iid_covers_all():
+    ds = make_digits(600, seed=0)
+    parts = partition(ds, 10, "iid")
+    assert sum(len(p) for p in parts) == 600
+
+
+def test_partition_noniid_two_classes():
+    ds = make_digits(2000, seed=0)
+    parts = partition(ds, 10, "noniid")
+    for p in parts:
+        assert len(np.unique(p.y)) <= 2     # [9]'s pathological split
+
+
+def test_partition_imbalanced_skewed():
+    ds = make_digits(3000, seed=0)
+    parts = partition(ds, 10, "imbalanced")
+    sizes = np.array([len(p) for p in parts])
+    assert sizes.max() > 2 * sizes.min()    # size imbalance
+    assert all(len(p) > 0 for p in parts)
+
+
+def test_batches_shapes():
+    ds = make_digits(105, seed=1)
+    got = list(batches(ds, 10, seed=0))
+    assert len(got) == 10
+    assert got[0][0].shape == (10, 28, 28, 1)
+
+
+def test_token_stream_next_token_alignment():
+    ds = make_token_stream(4, 32, vocab=100, seed=0)
+    assert ds.x.shape == (4, 32) and ds.y.shape == (4, 32)
+    assert np.all(ds.x[:, 1:] == ds.y[:, :-1])
+
+
+def test_sgd_step():
+    opt = sgd(0.1)
+    params = {"w": jnp.ones(3)}
+    state = opt.init(params)
+    grads = {"w": jnp.full(3, 2.0)}
+    upd, state = opt.update(grads, state)
+    new = apply_updates(params, upd)
+    np.testing.assert_allclose(new["w"], 0.8, rtol=1e-6)
+
+
+def test_adamw_converges_quadratic():
+    opt = adamw(0.1)
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+        upd, state = opt.update(grads, state, params)
+        params = apply_updates(params, upd)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 1e-2
+
+
+def test_clip_by_global_norm():
+    grads = {"w": jnp.full(4, 10.0)}
+    clipped = clip_by_global_norm(grads, 1.0)
+    norm = float(jnp.linalg.norm(clipped["w"]))
+    assert norm == pytest.approx(1.0, rel=1e-5)
+
+
+def test_cosine_schedule():
+    fn = cosine(1.0, warmup=10, total=100)
+    assert float(fn(0)) == 0.0
+    assert float(fn(10)) == pytest.approx(1.0, abs=1e-5)
+    assert float(fn(100)) == pytest.approx(0.0, abs=1e-3)

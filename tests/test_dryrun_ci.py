@@ -1,0 +1,31 @@
+"""CI-scale exercise of the multi-pod dry-run path (subprocess: the 512
+forced host devices must not leak into other tests)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+_SCRIPT = textwrap.dedent("""
+    from repro.launch.dryrun import run_one
+    rec = run_one("llama3.2-1b", "decode_32k", multi_pod=False,
+                  calibrate=False, verbose=False)
+    assert rec["status"] == "ok", rec
+    assert rec["memory"]["argument_size_in_bytes"] > 0
+    rec_mp = run_one("llama3.2-1b", "decode_32k", multi_pod=True,
+                     calibrate=False, verbose=False)
+    assert rec_mp["status"] == "ok", rec_mp
+    assert rec_mp["n_chips"] == 512
+    skip = run_one("hubert-xlarge", "long_500k", multi_pod=False,
+                   verbose=False)
+    assert skip["status"] == "skip_documented"
+    print("DRYRUN_CI_OK")
+""")
+
+
+def test_dryrun_lowers_on_both_meshes():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", _SCRIPT],
+                         capture_output=True, text=True, env=env,
+                         timeout=900)
+    assert "DRYRUN_CI_OK" in out.stdout, out.stdout + "\n" + out.stderr

@@ -1,0 +1,112 @@
+"""Pallas kernel allclose sweeps vs pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.delta_codec.kernel import dequantize_blocks, quantize_blocks
+from repro.kernels.delta_codec.ops import (COMPRESS_RATIO, decode_delta,
+                                           encode_delta)
+from repro.kernels.delta_codec.ref import dequantize_ref, quantize_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.wkv6.ops import wkv6
+from repro.kernels.wkv6.ref import wkv6_ref
+
+RNG = np.random.default_rng(0)
+
+
+def _gqa_ref(q, k, v, causal, window):
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qr = q.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    kr = jnp.repeat(k, G, axis=2).transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    vr = jnp.repeat(v, G, axis=2).transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    out = attention_ref(qr, kr, vr, causal=causal, window=window)
+    return out.reshape(B, H, S, D).transpose(0, 2, 1, 3)
+
+
+@pytest.mark.parametrize("B,S,H,KV,D", [
+    (1, 128, 2, 2, 64),
+    (2, 256, 4, 2, 64),
+    (1, 256, 8, 1, 128),
+    (2, 384, 6, 2, 32),        # non-pow2 head count / small head dim
+])
+@pytest.mark.parametrize("causal,window", [(True, 0), (False, 0), (True, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, S, H, KV, D, causal, window, dtype):
+    q = jnp.asarray(RNG.standard_normal((B, S, H, D)), dtype)
+    k = jnp.asarray(RNG.standard_normal((B, S, KV, D)), dtype)
+    v = jnp.asarray(RNG.standard_normal((B, S, KV, D)), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          interpret=True)
+    ref = _gqa_ref(q, k, v, causal, window)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("B,S,H,D,chunk", [
+    (1, 128, 2, 64, 64),
+    (2, 256, 3, 64, 128),
+    (1, 256, 1, 32, 256),      # single chunk == full sequence
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_wkv6_sweep(B, S, H, D, chunk, dtype):
+    r, k, v = (jnp.asarray(RNG.standard_normal((B, S, H, D)) * 0.5, dtype)
+               for _ in range(3))
+    w = jnp.asarray(RNG.random((B, S, H, D)) * 0.4 + 0.55, dtype)
+    u = jnp.asarray(RNG.standard_normal((H, D)) * 0.1, jnp.float32)
+    S0 = jnp.zeros((B, H, D, D), jnp.float32)
+    y, sf = wkv6(r, k, v, w, u, chunk=chunk, interpret=True)
+    yr, sr = wkv6_ref(r, k, v, w, u, S0)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), atol=tol, rtol=tol)
+    np.testing.assert_allclose(sf, sr, atol=tol, rtol=tol)
+
+
+def test_wkv6_state_identity_property():
+    """With w == 1 and u == 0, y_t = r_t . sum_{s<t} k_s v_s^T (prefix sums)."""
+    B, S, H, D = 1, 64, 1, 32
+    r = jnp.asarray(RNG.standard_normal((B, S, H, D)) * 0.3, jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, S, H, D)) * 0.3, jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, S, H, D)) * 0.3, jnp.float32)
+    w = jnp.ones((B, S, H, D), jnp.float32)
+    u = jnp.zeros((H, D), jnp.float32)
+    y, _ = wkv6(r, k, v, w, u, chunk=32, interpret=True)
+    kv = jnp.einsum("bshi,bshj->bshij", k, v)
+    prefix = jnp.cumsum(kv, axis=1) - kv          # strictly-previous sum
+    expect = jnp.einsum("bshi,bshij->bshj", r, prefix)
+    np.testing.assert_allclose(y, expect, atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("M,scale", [(256, 1.0), (512, 1e-3), (1024, 50.0)])
+def test_codec_matches_ref(M, scale):
+    x = jnp.asarray(RNG.standard_normal((M, 512)) * scale, jnp.float32)
+    q, s = quantize_blocks(x, interpret=True)
+    qr, sr = quantize_ref(x)
+    assert bool(jnp.all(q == qr))
+    np.testing.assert_allclose(s, sr, rtol=1e-6)
+    xd = dequantize_blocks(q, s, interpret=True)
+    np.testing.assert_allclose(xd, dequantize_ref(qr, sr), rtol=1e-6)
+
+
+def test_codec_roundtrip_error_bound():
+    x = jnp.asarray(RNG.standard_normal((512, 512)), jnp.float32)
+    q, s = quantize_blocks(x, interpret=True)
+    xd = dequantize_blocks(q, s, interpret=True)
+    assert float(jnp.max(jnp.abs(xd - x))) <= float(jnp.max(s)) / 2 + 1e-7
+
+
+def test_delta_codec_tree_roundtrip():
+    params = {"a": jnp.asarray(RNG.standard_normal((33, 7)), jnp.float32),
+              "b": {"c": jnp.asarray(RNG.standard_normal(501), jnp.float32)}}
+    base = jax.tree_util.tree_map(jnp.zeros_like, params)
+    payload = encode_delta(params, base, interpret=True)
+    rec = decode_delta(payload, base, interpret=True)
+    for pth in ("a",):
+        err = float(jnp.max(jnp.abs(rec[pth] - params[pth])))
+        assert err < 2e-2
+    assert 0.2 < COMPRESS_RATIO < 0.3

@@ -1,0 +1,50 @@
+"""Latency relaxation unit tests (Section III-A, eqs. 9-16)."""
+import pytest
+
+from repro.core import latency as lat
+
+DEV = lat.DeviceProfile(flops_per_sec=1e9)
+WL = lat.WorkloadProfile(local_epochs=6, samples=200)
+
+
+def test_uplink_eq13_fl():
+    # b * m * 8 / r
+    assert lat.uplink_fl(2, 10e6, 80e6) == pytest.approx(2.0)
+    assert lat.uplink_fl(1, 10e6, 80e6) == pytest.approx(1.0)
+
+
+def test_uplink_eq13_sl():
+    # (b*m_l + m_a) * 8 / r
+    got = lat.uplink_sl(3, 2e6, 1e6, 56e6)
+    assert got == pytest.approx((3 * 2e6 + 1e6) * 8 / 56e6)
+
+
+def test_extra_allowance_eq14():
+    assert lat.extra_allowance(1, 10e6, 80e6) == 0.0
+    assert lat.extra_allowance(2, 10e6, 80e6) == pytest.approx(1.0)
+    assert lat.extra_allowance(4, 10e6, 80e6) == pytest.approx(3.0)
+
+
+def test_snapshot_delay_eq15():
+    assert lat.snapshot_delay(10e6, 80e6) == pytest.approx(1.0)
+    # worse channel -> longer delay
+    assert lat.snapshot_delay(10e6, 40e6) > lat.snapshot_delay(10e6, 80e6)
+
+
+def test_one_round_latency_monotonic_in_b():
+    l1 = lat.one_round_latency_fl(DEV, WL, 1, 10e6, 80e6)
+    l2 = lat.one_round_latency_fl(DEV, WL, 2, 10e6, 80e6)
+    assert l2 > l1
+    assert l2 - l1 == pytest.approx(1.0)
+
+
+def test_sl_faster_training_for_slow_device():
+    slow = lat.DeviceProfile(flops_per_sec=1e8)
+    assert lat.train_time_sl(slow, WL) < lat.train_time_fl(slow, WL)
+
+
+def test_energy_positive():
+    assert lat.energy_fl(DEV, WL, 1.0) > 0
+    assert lat.energy_sl(DEV, WL, 1.0) > 0
+    # SL compute energy is cheaper on the UAV (offloaded share)
+    assert lat.energy_sl(DEV, WL, 0.0) < lat.energy_fl(DEV, WL, 0.0)

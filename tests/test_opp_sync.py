@@ -1,0 +1,99 @@
+"""OpportunisticSync (pod-axis OPT) tests.
+
+Multi-device behaviour needs >1 host device, and XLA device count is locked
+at first jax init — so the shard_map tests run in a subprocess with
+XLA_FLAGS=--xla_force_host_platform_device_count=4 (the dry-run does the
+same with 512; smoke tests keep seeing 1 device, per the brief).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.opportunistic_sync import OppSyncConfig, is_scheduled
+
+
+def test_schedule_matches_alg2():
+    cfg = OppSyncConfig(inner_steps=6, budget=2)
+    sched = [bool(is_scheduled(cfg, jnp.asarray(i))) for i in range(6)]
+    assert sched == [False, False, False, True, False, False]
+    cfg3 = OppSyncConfig(inner_steps=6, budget=3)
+    sched3 = [bool(is_scheduled(cfg3, jnp.asarray(i))) for i in range(6)]
+    assert sched3 == [False, False, True, False, True, False]
+
+
+def test_budget1_never_schedules():
+    cfg = OppSyncConfig(inner_steps=8, budget=1)
+    assert not any(bool(is_scheduled(cfg, jnp.asarray(i))) for i in range(8))
+
+
+def test_tau_extra0_eq14():
+    cfg = OppSyncConfig(budget=4, payload=2.0, rate0=0.5)
+    assert cfg.tau_extra0 == pytest.approx(3 * 2.0 / 0.5)
+
+
+_SUBPROCESS_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro.core.opportunistic_sync import (OppSyncConfig, channel_trace,
+                                               make_opp_sync_round)
+    from repro.optim import sgd
+    from repro.training import TrainState, create_train_state, make_train_step
+    from repro.models import build_model
+    from repro.configs import get_config
+
+    N_PODS = 4
+    mesh = jax.make_mesh((N_PODS,), ("pod",))
+    cfg = OppSyncConfig(inner_steps=4, budget=2, outage_prob=0.5, rate0=1.0)
+
+    model = build_model(get_config("llama3.2-1b").reduced())
+    params = model.init(jax.random.PRNGKey(0))
+    opt = sgd(1e-2)
+    step = make_train_step(model, opt)
+
+    state0 = create_train_state(params, opt, with_opt_sync=True,
+                                tau_extra0=cfg.tau_extra0)
+    # stack state across pods
+    stack = lambda t: jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None], (N_PODS,) + a.shape), t)
+    state = stack(state0)
+
+    B, S = 2, 16
+    rng = np.random.default_rng(0)
+    batches = {
+        "tokens": jnp.asarray(rng.integers(0, 500, (N_PODS, cfg.inner_steps, B, S)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, 500, (N_PODS, cfg.inner_steps, B, S)), jnp.int32),
+    }
+    rates, outages, arrived = channel_trace(cfg, jax.random.PRNGKey(1),
+                                            N_PODS, rounds=3)
+    state_spec = jax.tree_util.tree_map(lambda _: P("pod"), state)
+    batch_spec = jax.tree_util.tree_map(lambda _: P("pod"), batches)
+    one_round = make_opp_sync_round(cfg, step, mesh, state_spec, batch_spec)
+
+    with jax.sharding.use_mesh(mesh) if hasattr(jax.sharding, "use_mesh") else mesh:
+        for r in range(3):
+            state, losses = one_round(state, batches, rates[r].T.reshape(cfg.inner_steps+1, N_PODS),
+                                      outages[r].reshape(cfg.inner_steps+1, N_PODS), arrived[r])
+
+    # after round_sync, all pods hold identical params
+    p0 = jax.tree_util.tree_leaves(state.params)[3]
+    assert np.allclose(np.asarray(p0[0]), np.asarray(p0[1]), atol=1e-6), "pods diverge"
+    assert np.isfinite(np.asarray(losses)).all()
+    # tau_extra reset to the eq.14 allowance after each round
+    assert np.allclose(np.asarray(state.tau_extra), cfg.tau_extra0)
+    print("OPP_SYNC_OK")
+""")
+
+
+def test_shard_map_round_four_pods():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", _SUBPROCESS_SCRIPT],
+                         capture_output=True, text=True, env=env, timeout=600)
+    assert "OPP_SYNC_OK" in out.stdout, out.stdout + "\n" + out.stderr

@@ -1,0 +1,82 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.aggregation import fedavg, fedasync_weight
+from repro.core.latency import extra_allowance, snapshot_delay
+from repro.core.transmission import OppTransmitter, scheduled_epochs
+from repro.core.channel import ChannelParams, rate_bps
+from repro.kernels.delta_codec.ref import dequantize_ref, quantize_ref
+
+SETTINGS = dict(max_examples=40, deadline=None)
+
+
+@given(e=st.integers(2, 64), b=st.integers(1, 16))
+@settings(**SETTINGS)
+def test_schedule_has_at_most_b_minus_1_intermediates(e, b):
+    sch = scheduled_epochs(e, b)
+    assert len(sch) <= max(0, b - 1)
+    assert all(0 < s < e for s in sch)
+    assert sch == sorted(set(sch))
+
+
+@given(b=st.integers(1, 8),
+       m=st.floats(1e4, 1e9),
+       r=st.floats(1e3, 1e9))
+@settings(**SETTINGS)
+def test_budget_conservation(b, m, r):
+    """Total opportunistic spend never exceeds the eq.-14 allowance."""
+    tx = OppTransmitter(m, e=16, b=b, rate0_bps=r)
+    budget0 = extra_allowance(b, m, r)
+    rng = np.random.default_rng(0)
+    for e_t in range(1, 16):
+        tx.maybe_transmit(e_t, float(rng.uniform(r / 10, r * 10)), False, e_t)
+    spent = sum(ev.delay_s for ev in tx.events if ev.kind == "opportunistic")
+    assert spent <= budget0 + 1e-9
+    assert tx.tau_extra >= -1e-9
+
+
+@given(vals=st.lists(st.floats(-100, 100), min_size=1, max_size=6))
+@settings(**SETTINGS)
+def test_fedavg_convexity(vals):
+    """FedAvg output lies within the per-leaf min/max of its inputs."""
+    trees = [{"w": jnp.full((2,), v, jnp.float32)} for v in vals]
+    out = fedavg(trees)
+    assert float(out["w"][0]) <= max(vals) + 1e-4
+    assert float(out["w"][0]) >= min(vals) - 1e-4
+
+
+@given(s=st.integers(0, 50))
+@settings(**SETTINGS)
+def test_fedasync_weight_decreasing(s):
+    assert fedasync_weight(s + 1) < fedasync_weight(s) <= 0.4
+
+
+@given(x=st.floats(10, 500), y=st.floats(10, 500), z=st.floats(20, 80),
+       k_db=st.floats(1.8, 5.0))
+@settings(**SETTINGS)
+def test_rate_nonnegative_finite(x, y, z, k_db):
+    pos = np.array([[x, y, z]])
+    r = rate_bps(pos, np.array([k_db]), ChannelParams())
+    assert np.isfinite(r[0]) and r[0] >= 0
+
+
+@given(scale=st.floats(1e-6, 1e3),
+       seed=st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_codec_error_bounded_by_half_scale(scale, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((4, 512)) * scale, jnp.float32)
+    q, s = quantize_ref(x)
+    xd = dequantize_ref(q, s)
+    assert float(jnp.max(jnp.abs(xd - x))) <= float(jnp.max(s)) * 0.5 + 1e-9
+
+
+@given(m=st.floats(1e3, 1e9), r1=st.floats(1e3, 1e9), r2=st.floats(1e3, 1e9))
+@settings(**SETTINGS)
+def test_snapshot_delay_monotone_in_rate(m, r1, r2):
+    lo, hi = min(r1, r2), max(r1, r2)
+    assert snapshot_delay(m, hi) <= snapshot_delay(m, lo)

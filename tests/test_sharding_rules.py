@@ -1,0 +1,88 @@
+"""Sharding rule tables: structural match + divisibility on the 16x16 mesh.
+
+Pure host-side checks (no devices needed): every sharded dim of every param
+of every FULL assigned config must divide the mesh axis it is mapped to —
+this is exactly what the multi-pod dry-run would trip over.
+"""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config
+from repro.models import build_model
+from repro.models import transformer as tf
+from repro.sharding import rules
+
+AXIS_SIZE = {"data": 16, "model": 16, "pod": 2}
+
+
+def _shape_tree(cfg):
+    model = build_model(cfg)
+    return jax.eval_shape(lambda k: model.init(k), jax.random.PRNGKey(0))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_specs_divisible(arch):
+    cfg = get_config(arch)
+    shapes = _shape_tree(cfg)
+    specs = rules.param_specs(cfg, shapes)
+    flat_s = jax.tree_util.tree_leaves_with_path(shapes)
+    flat_p = jax.tree_util.tree_leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_s) == len(flat_p)
+    for (path, shp), spec in zip(flat_s, flat_p):
+        assert isinstance(spec, P)
+        assert len(spec) <= len(shp.shape)
+        for dim, ax in zip(shp.shape, spec):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            total = int(np.prod([AXIS_SIZE[a] for a in axes]))
+            assert dim % total == 0, (arch, path, shp.shape, spec)
+
+
+@pytest.mark.parametrize("arch", ["llama3-405b", "rwkv6-7b", "hymba-1.5b",
+                                  "granite-moe-3b-a800m"])
+@pytest.mark.parametrize("multi_pod", [False, True])
+def test_decode_state_specs_divisible(arch, multi_pod):
+    cfg = get_config(arch)
+    if cfg.is_encoder_only:
+        pytest.skip("no decode")
+    for shape_name in ("decode_32k", "long_500k"):
+        shp = INPUT_SHAPES[shape_name]
+        ccfg = cfg if cfg.is_subquadratic or shape_name != "long_500k" \
+            else cfg.with_sliding_window()
+        from repro.models.attention import cache_len
+        state = jax.eval_shape(
+            lambda: tf.init_decode_state(ccfg, shp.global_batch, shp.seq_len,
+                                         jax.numpy.bfloat16))
+        specs = rules.decode_state_specs(ccfg, shp.global_batch, multi_pod)
+        flat_s = jax.tree_util.tree_leaves_with_path(state)
+        flat_p = jax.tree_util.tree_leaves(specs,
+                                           is_leaf=lambda x: isinstance(x, P))
+        assert len(flat_s) == len(flat_p)
+        for (path, s), spec in zip(flat_s, flat_p):
+            for dim, ax in zip(s.shape, spec):
+                if ax is None:
+                    continue
+                axes = ax if isinstance(ax, tuple) else (ax,)
+                total = int(np.prod([AXIS_SIZE[a] for a in axes]))
+                assert dim % total == 0, (arch, shape_name, path, s.shape, spec)
+
+
+def test_vocab_padding_divisible():
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        assert cfg.vocab_padded % 256 == 0
+        assert cfg.vocab_padded >= cfg.vocab_size
+        assert cfg.vocab_padded - cfg.vocab_size < 256
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_count_plausible(arch):
+    """Config-level param_count tracks the real init within 25%."""
+    cfg = get_config(arch)
+    shapes = _shape_tree(cfg)
+    real = sum(int(np.prod(s.shape)) for s in jax.tree_util.tree_leaves(shapes))
+    est = cfg.param_count()
+    assert abs(est - real) / real < 0.25, (arch, est, real)

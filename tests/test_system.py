@@ -1,0 +1,82 @@
+"""End-to-end behaviour tests for the paper's system (HSFL + OPT)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.hsfl import HSFLConfig, HSFLSimulation, run_hsfl
+from repro.core.selection import schedule_users
+from repro.core import latency as lat
+
+
+def small_cfg(**kw):
+    base = dict(rounds=3, n_uavs=12, k_select=4, n_train=800, n_test=200,
+                steps_per_epoch=2, local_epochs=6, b=2, seed=0)
+    base.update(kw)
+    return HSFLConfig(**base)
+
+
+@pytest.mark.parametrize("scheme,b", [("opt", 2), ("discard", 1), ("async", 1)])
+def test_sim_runs_all_schemes(scheme, b):
+    log = run_hsfl(small_cfg(scheme=scheme, b=b))
+    assert len(log.rounds) == 3
+    s = log.summary()
+    assert s["avg_comm_mb"] > 0
+    assert np.isfinite(s["final_acc"]) and 0.0 <= s["final_acc"] <= 1.0
+
+
+def test_sim_learns_above_chance():
+    log = run_hsfl(small_cfg(rounds=10, distribution="iid"))
+    assert log.final_acc > 0.15         # 10 classes -> chance is 0.1
+
+
+def test_opt_rescues_and_discard_drops():
+    opt = run_hsfl(small_cfg(scheme="opt", rounds=6, seed=3))
+    dis = run_hsfl(small_cfg(scheme="discard", b=1, rounds=6, seed=3))
+    assert opt.summary()["snapshot_rescues"] >= 0
+    assert dis.summary()["snapshot_rescues"] == 0
+    # OPT transmits at least as many bytes (the b=2 budget)
+    assert opt.avg_comm_mb >= dis.avg_comm_mb
+
+
+def test_comm_overhead_grows_with_b():
+    mbs = []
+    for b in (1, 2, 4):
+        log = run_hsfl(small_cfg(scheme="opt", b=b, rounds=4, seed=1))
+        mbs.append(log.avg_comm_mb)
+    assert mbs[0] < mbs[1] <= mbs[2] * 1.001
+
+
+def test_round_log_accounting_consistent():
+    log = run_hsfl(small_cfg(rounds=4))
+    for r in log.rounds:
+        assert (r.arrived_final + r.used_snapshot + r.dropped + r.delayed
+                == r.selected)
+
+
+def test_selection_respects_tau_and_caps():
+    rng = np.random.default_rng(0)
+    n = 20
+    devices = [lat.DeviceProfile(flops_per_sec=5e8) for _ in range(n)]
+    wls = [lat.WorkloadProfile(samples=200) for _ in range(n)]
+    rates = rng.uniform(1e6, 1e8, n)
+    sched = schedule_users(rates, devices, wls, 10e6, 2.5e6, b=2,
+                           tau_max=9.0, k_select=8)
+    assert len(sched) <= 8
+    assert sum(u.mode == "SL" for u in sched) <= 4      # max_sl default K/2
+    for u in sched:
+        assert u.latency_s <= 9.0
+
+
+def test_selection_empty_when_tau_tiny():
+    devices = [lat.DeviceProfile(flops_per_sec=5e8)] * 5
+    wls = [lat.WorkloadProfile(samples=200)] * 5
+    sched = schedule_users([1e8] * 5, devices, wls, 10e6, 2.5e6, b=2,
+                           tau_max=0.01, k_select=5)
+    assert sched == []
+
+
+def test_deterministic_given_seed():
+    a = run_hsfl(small_cfg(rounds=3, seed=11))
+    b = run_hsfl(small_cfg(rounds=3, seed=11))
+    assert a.acc_curve == b.acc_curve
+    assert a.avg_comm_mb == b.avg_comm_mb

@@ -1,0 +1,67 @@
+"""OPT scheduler unit tests (Algorithm 2)."""
+import pytest
+
+from repro.core.transmission import OppTransmitter, scheduled_epochs
+
+
+def test_scheduled_epochs_paper_setting():
+    # e=6, b=2 -> one intermediate transmission at e_t=3
+    assert scheduled_epochs(6, 2) == [3]
+    # b=3 -> period 2 -> epochs 2, 4
+    assert scheduled_epochs(6, 3) == [2, 4]
+    # b=1 -> no intermediates (the discard baseline)
+    assert scheduled_epochs(6, 1) == []
+    # b=6 -> every epoch except the final
+    assert scheduled_epochs(6, 6) == [1, 2, 3, 4, 5]
+
+
+def test_budget_decrement_eq16():
+    tx = OppTransmitter(model_bytes=10e6, e=6, b=3, rate0_bps=80e6)
+    assert tx.tau_extra == pytest.approx(2.0)       # (b-1)*m/r0
+    ok = tx.maybe_transmit(2, 80e6, outage=False, params={"w": 1})
+    assert ok and tx.tau_extra == pytest.approx(1.0)
+    ok = tx.maybe_transmit(4, 80e6, outage=False, params={"w": 2})
+    assert ok and tx.tau_extra == pytest.approx(0.0)
+
+
+def test_overwrite_semantics():
+    tx = OppTransmitter(10e6, e=6, b=3, rate0_bps=80e6)
+    tx.maybe_transmit(2, 80e6, False, "first")
+    tx.maybe_transmit(4, 80e6, False, "second")
+    assert tx.snapshot == "second"                  # Alg. 2: overwritten
+    assert tx.snapshot_epoch == 4
+
+
+def test_outage_blocks_transmission():
+    tx = OppTransmitter(10e6, e=6, b=2, rate0_bps=80e6)
+    assert not tx.maybe_transmit(3, 80e6, outage=True, params="x")
+    assert tx.snapshot is None
+    assert tx.tau_extra == pytest.approx(1.0)       # budget untouched
+
+
+def test_cancel_when_channel_too_slow():
+    tx = OppTransmitter(10e6, e=6, b=2, rate0_bps=80e6)
+    # rate collapsed 4x -> tau = 4 > tau_extra = 1 -> cancelled (Sec. III-B)
+    assert not tx.maybe_transmit(3, 20e6, outage=False, params="x")
+    assert tx.snapshot is None
+
+
+def test_unscheduled_epoch_ignored():
+    tx = OppTransmitter(10e6, e=6, b=2, rate0_bps=80e6)
+    assert not tx.maybe_transmit(2, 1e9, False, "x")
+
+
+def test_final_upload_latency_gate():
+    tx = OppTransmitter(10e6, e=6, b=2, rate0_bps=80e6)
+    assert tx.final_upload(80e6, outage=False, tau_spent_training=5.0,
+                           tau_max=9.0)
+    tx2 = OppTransmitter(10e6, e=6, b=2, rate0_bps=80e6)
+    assert not tx2.final_upload(8e6, outage=False, tau_spent_training=5.0,
+                                tau_max=9.0)        # 10s upload > budget
+
+
+def test_bytes_accounting_with_compression():
+    tx = OppTransmitter(10e6, e=6, b=2, rate0_bps=80e6, compress_ratio=0.25)
+    tx.maybe_transmit(3, 80e6, False, "x")
+    tx.final_upload(80e6, False, 1.0, 9.0)
+    assert tx.bytes_sent == pytest.approx(2 * 2.5e6)
