@@ -1,0 +1,129 @@
+"""Fused vs host-loop HSFL round benchmark (the fig. 3 hot path).
+
+Measures rounds/sec of ``HSFLSimulation.run_round`` at the paper's scale
+(30 UAVs, K=10 selected, e=6 local epochs, b=2, OPT scheme) for:
+
+  host          — the original Python control loop over OppTransmitter
+  fused         — the single-jit device round (core/fused_round)
+  fused_sharded — same, with the stacked-user axis sharded over N forced
+                  host devices (bench-only: XLA_FLAGS set in a subprocess)
+  fused_codec   — fused with int8 delta-codec snapshots
+
+Methodology: each engine runs in its own subprocess (so XLA device forcing
+can't leak); per engine we run ``--warmup`` rounds first on the same
+simulation instance so every K-bucket jit variant is compiled, then time
+``--rounds`` rounds and report the mean.  Results append to BENCH_hsfl.json.
+
+  PYTHONPATH=src python -m benchmarks.hsfl_round_bench
+  PYTHONPATH=src python -m benchmarks.hsfl_round_bench --rounds 20 --devices 2
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+
+ENGINES = ("host", "fused", "fused_codec", "fused_sharded")
+
+
+def measure(engine: str, warmup: int, rounds: int) -> dict:
+    import time
+
+    import jax
+
+    from repro.core.hsfl import HSFLConfig, HSFLSimulation
+
+    if engine not in ENGINES:
+        raise SystemExit(f"unknown engine {engine!r}; choose from {ENGINES}")
+    cfg = HSFLConfig(scheme="opt", b=2, rounds=warmup + rounds,
+                     use_fused_round=engine != "host",
+                     use_delta_codec=engine == "fused_codec")
+    sim = HSFLSimulation(cfg)
+    delayed, t = [], 1
+    for _ in range(warmup):
+        log, delayed = sim.run_round(t, delayed)
+        t += 1
+    jax.block_until_ready(sim.params)
+    t0 = time.time()
+    selected = 0
+    for _ in range(rounds):
+        log, delayed = sim.run_round(t, delayed)
+        selected += log.selected
+        t += 1
+    jax.block_until_ready(sim.params)
+    ms = (time.time() - t0) / rounds * 1e3
+    return {"engine": engine, "ms_per_round": round(ms, 1),
+            "rounds_per_sec": round(1e3 / ms, 3),
+            "mean_selected": round(selected / rounds, 1),
+            "devices": len(jax.devices())}
+
+
+def run_child(engine: str, args, devices: int = 1) -> dict:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src")]
+        + env.get("PYTHONPATH", "").split(os.pathsep))
+    if devices > 1:
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                            f" --xla_force_host_platform_device_count={devices}")
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.hsfl_round_bench",
+         "--engine", engine, "--warmup", str(args.warmup),
+         "--rounds", str(args.rounds)],
+        capture_output=True, text=True, env=env,
+        cwd=os.path.join(os.path.dirname(__file__), ".."))
+    if out.returncode != 0:
+        raise RuntimeError(f"{engine} failed:\n{out.stdout}\n{out.stderr}")
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    print(f"{engine:14s} {rec['ms_per_round']:8.1f} ms/round "
+          f"({rec['rounds_per_sec']:.3f} rounds/s, "
+          f"devices={rec['devices']})")
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=12)
+    ap.add_argument("--warmup", type=int, default=10)
+    ap.add_argument("--devices", type=int, default=2,
+                    help="forced host devices for the sharded variant")
+    ap.add_argument("--out", default="BENCH_hsfl.json")
+    ap.add_argument("--engine", default=None,
+                    help="(internal) measure one engine and print JSON")
+    args = ap.parse_args()
+
+    if args.engine:
+        print(json.dumps(measure(args.engine, args.warmup, args.rounds)))
+        return
+
+    recs = [run_child("host", args),
+            run_child("fused", args),
+            run_child("fused_codec", args)]
+    if args.devices > 1:
+        recs.append(run_child("fused_sharded", args, devices=args.devices))
+
+    host_ms = recs[0]["ms_per_round"]
+    result = {
+        "config": {"n_uavs": 30, "k_select": 10, "local_epochs": 6, "b": 2,
+                   "scheme": "opt", "steps_per_epoch": 4, "batch_size": 10,
+                   "rounds_timed": args.rounds, "warmup": args.warmup},
+        "engines": recs,
+        "speedup_fused_vs_host": round(host_ms / recs[1]["ms_per_round"], 2),
+    }
+    if args.devices > 1:
+        result["speedup_sharded_vs_host"] = round(
+            host_ms / recs[-1]["ms_per_round"], 2)
+    print(f"\nspeedup fused vs host: {result['speedup_fused_vs_host']}x")
+    if "speedup_sharded_vs_host" in result:
+        print(f"speedup sharded vs host: {result['speedup_sharded_vs_host']}x")
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+        f.write("\n")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

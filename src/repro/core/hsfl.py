@@ -15,12 +15,22 @@ SL users train mathematically identically to FL users (SL with synchronized
 FedAvg produces the same updates — the split only moves *where* layers run);
 what differs is the latency/energy/payload accounting: SL transmits b·m_l +
 m_a (eq. 13) and pays the BS round trip, exactly as costed in core/latency.
+
+Two round engines share the control plane:
+
+  fused (default) — ``core/fused_round``: channel + batches presampled
+      host-side once per round, then the whole round (vmapped users, scanned
+      epochs, on-device OPT scheduler, masked-mean aggregation) runs as one
+      jitted device program.  ~5x faster at fig3 scale; optional int8
+      delta-codec snapshots (``use_delta_codec``).
+  host — the original Python control loop over ``OppTransmitter``; kept as
+      the reference implementation.  ``tests/test_fused_round.py`` pins the
+      two to identical per-round arrived/rescued/dropped trajectories.
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -29,11 +39,13 @@ import numpy as np
 from repro.core import latency as lat
 from repro.core.aggregation import aggregate_round
 from repro.core.channel import ChannelParams, UAVFleet
+from repro.core.fused_round import build_fused_round
 from repro.core.metrics import RoundLog, SimLog
 from repro.core.selection import schedule_users
-from repro.core.transmission import OppTransmitter
+from repro.core.transmission import OppTransmitter, scheduled_epochs
 from repro.data.synthetic import Dataset, make_digits
 from repro.data.partition import partition
+from repro.kernels.delta_codec.ops import codec_ratio, decode_delta, encode_delta
 from repro.models import cnn as cnn_mod
 from repro.models import module as m
 from repro.training.loss import accuracy, cross_entropy
@@ -61,7 +73,12 @@ class HSFLConfig:
     # regime via this override (accuracy math is unaffected).
     model_bytes: float = 10e6
     ue_model_fraction: float = 0.25
-    compress_ratio: float = 1.0    # <1 when the delta codec is enabled
+    compress_ratio: float = 1.0    # <1 when snapshots are compressed
+    # int8 delta-codec snapshots (kernels/delta_codec): compress_ratio is
+    # then derived from the actual int8+scale byte count of the model, and
+    # rescued snapshots carry real quantization noise.
+    use_delta_codec: bool = False
+    use_fused_round: bool = True   # False -> host OppTransmitter reference
     schedule_override: tuple = ()  # manual opportunistic schedule (Sec. III-B)
     # UAV on-board compute range (FLOP/s).  Sec. IV doesn't specify device
     # compute; the default straddles the paper's 8-11 s tau_max sweep so the
@@ -78,18 +95,28 @@ def _heterogeneous_devices(n: int, rng: np.random.Generator,
             for _ in range(n)]
 
 
+def _epoch_indices(n: int, cfg: HSFLConfig, rng: np.random.Generator) -> np.ndarray:
+    """Fixed-shape (steps, bs) batch indices for one local epoch."""
+    need = cfg.steps_per_epoch * cfg.batch_size
+    idx = rng.permutation(n)
+    while len(idx) < need:
+        idx = np.concatenate([idx, rng.permutation(n)])
+    return idx[:need].reshape(cfg.steps_per_epoch, cfg.batch_size)
+
+
 def _sample_epoch(ds: Dataset, cfg: HSFLConfig, rng: np.random.Generator):
     """Fixed-shape epoch batches (steps, bs, ...) — one jit compile total."""
-    need = cfg.steps_per_epoch * cfg.batch_size
-    idx = rng.permutation(len(ds))
-    while len(idx) < need:
-        idx = np.concatenate([idx, rng.permutation(len(ds))])
-    idx = idx[:need].reshape(cfg.steps_per_epoch, cfg.batch_size)
+    idx = _epoch_indices(len(ds), cfg, rng)
     return jnp.asarray(ds.x[idx]), jnp.asarray(ds.y[idx])
 
 
+def _k_bucket(n_sched: int, k_select: int) -> int:
+    """Pad K to a small even bucket so the vmapped round compiles O(1) times."""
+    return min(k_select, 2 * ((n_sched + 1) // 2))
+
+
 class HSFLSimulation:
-    """Host-side control plane composing jitted local training."""
+    """Control plane composing jitted local training (fused or host loop)."""
 
     def __init__(self, cfg: HSFLConfig):
         self.cfg = cfg
@@ -107,11 +134,40 @@ class HSFLSimulation:
         self.params = cnn_mod.init_cnn(jax.random.PRNGKey(cfg.seed))
         self._test_x = jnp.asarray(self.test.x)
         self._test_y = jnp.asarray(self.test.y)
+        # Pallas kernels run in interpret mode off-TPU
+        self._interpret = jax.default_backend() != "tpu"
+        # the codec makes the compress knob real: actual int8+scale bytes
+        # over float32 bytes for this model, not a hand-set scalar
+        self.compress_ratio = (codec_ratio(m.param_count(self.params))
+                               if cfg.use_delta_codec else cfg.compress_ratio)
+        self._probe_epochs = self._static_schedule()
+        self._stack_shard = self._batch_shard = None
+        self._shard_ndev = 1
+        devs = jax.devices()
+        if cfg.use_fused_round and len(devs) > 1 and \
+                cfg.k_select % len(devs) == 0:
+            from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+            mesh = Mesh(np.array(devs), ("users",))
+            self._stack_shard = NamedSharding(mesh, P("users"))
+            self._batch_shard = NamedSharding(mesh, P(None, "users"))
+            self._shard_ndev = len(devs)
+        self._zero_carry = None
         self._build_jits()
+
+    def _static_schedule(self) -> tuple:
+        """The probe schedule is static per config (Alg. 2 line 12 or the
+        Sec. III-B manual override), active only for OPT with b > 1."""
+        cfg = self.cfg
+        if cfg.scheme != "opt" or cfg.b <= 1:
+            return ()
+        sched = (cfg.schedule_override if cfg.schedule_override
+                 else scheduled_epochs(cfg.local_epochs, cfg.b))
+        return tuple(e for e in sched if 1 <= e <= cfg.local_epochs)
 
     # -- jitted kernels ----------------------------------------------------
     def _build_jits(self):
-        lr = self.cfg.lr
+        cfg = self.cfg
+        lr = cfg.lr
 
         def epoch_fn(params, xs, ys):
             def step(p, batch):
@@ -132,16 +188,23 @@ class HSFLSimulation:
             logits = cnn_mod.forward(params, x)
             return cross_entropy(logits, y), accuracy(logits, y)
 
-        # all selected users advance one epoch at once: params stacked (K,...)
+        # host path: all selected users advance one epoch at once (K, ...)
         self._epoch_all = jax.jit(jax.vmap(epoch_fn))
         self._eval = jax.jit(eval_fn)
+        self._fused = build_fused_round(
+            scheme=cfg.scheme, local_epochs=cfg.local_epochs,
+            steps_per_epoch=cfg.steps_per_epoch, lr=lr, tau_max=cfg.tau_max,
+            probe_epochs=self._probe_epochs,
+            async_weight=cfg.async_alpha * 2.0 ** (-cfg.async_a),
+            use_codec=cfg.use_delta_codec, interpret=self._interpret,
+            k_carry=cfg.k_select, stacked_sharding=self._stack_shard)
 
     def evaluate(self) -> Tuple[float, float]:
         l, a = self._eval(self.params, self._test_x, self._test_y)
         return float(l), float(a)
 
-    # -- one communication round -------------------------------------------
-    def run_round(self, t: int, carry_delayed: List[tuple]) -> Tuple[RoundLog, List[tuple]]:
+    # -- shared per-round control plane -------------------------------------
+    def _schedule_round(self):
         cfg = self.cfg
         self.fleet.resample_fading()           # per local-round K (Sec. IV)
         rates0 = self.fleet.rates()
@@ -149,6 +212,147 @@ class HSFLSimulation:
         sched = schedule_users(
             rates0, self.devices, self.workloads,
             cfg.model_bytes, ue_bytes, cfg.b, cfg.tau_max, cfg.k_select)
+        return sched, ue_bytes
+
+    def run_round(self, t: int, carry_delayed) -> Tuple[RoundLog, object]:
+        if self.cfg.use_fused_round:
+            return self._run_round_fused(t, carry_delayed)
+        return self._run_round_host(t, carry_delayed)
+
+    # -- fused engine --------------------------------------------------------
+    def _presample_round(self, sched, K: int):
+        """Draw the whole round's channel + batches host-side, consuming the
+        fleet/simulation RNG streams in exactly the host-loop order (one
+        equivalence contract, tested)."""
+        cfg = self.cfg
+        e, steps, bs = cfg.local_epochs, cfg.steps_per_epoch, cfg.batch_size
+        n_s = len(sched)
+        sel = np.array([u.index for u in sched])
+        xshape = self.clients[0].x.shape[1:]
+        xs = np.zeros((e, K, steps, bs) + xshape, np.float32)
+        ys = np.zeros((e, K, steps, bs), self.clients[0].y.dtype)
+        rates = np.zeros((e, K), np.float32)
+        outs = np.zeros((e, K), bool)
+        for e_i in range(e):
+            self.fleet.move()                  # path loss varies per epoch
+            r = self.fleet.rates()
+            o = self.fleet.outages()
+            rates[e_i, :n_s] = r[sel]
+            outs[e_i, :n_s] = o[sel]
+            for j, u in enumerate(sched):
+                ds = self.clients[u.index]
+                idx = _epoch_indices(len(ds), cfg, self.rng)
+                xs[e_i, j] = ds.x[idx]
+                ys[e_i, j] = ds.y[idx]
+        fr = self.fleet.rates()                # final upload: no extra move
+        fo = self.fleet.outages()
+        final_rate = np.zeros(K, np.float32)
+        final_out = np.zeros(K, bool)
+        final_rate[:n_s] = fr[sel]
+        final_out[:n_s] = fo[sel]
+        return xs, ys, rates, outs, final_rate, final_out
+
+    def _user_consts(self, sched, ue_bytes: float, K: int):
+        cfg = self.cfg
+        n_s = len(sched)
+        payload = np.full(K, cfg.model_bytes, np.float64)
+        train_time = np.full(K, 1e9, np.float64)
+        for j, u in enumerate(sched):
+            payload[j] = cfg.model_bytes if u.mode == "FL" else ue_bytes
+            train_time[j] = (
+                lat.train_time_fl(self.devices[u.index], self.workloads[u.index])
+                if u.mode == "FL" else
+                lat.train_time_sl(self.devices[u.index], self.workloads[u.index]))
+        payload *= self.compress_ratio
+        rate0 = np.array([u.rate0_bps for u in sched] + [1.0] * (K - n_s))
+        tau_extra0 = (cfg.b - 1) * payload * 8.0 / np.maximum(rate0, 1e-9)
+        valid = np.arange(K) < n_s
+        return payload, tau_extra0, train_time, valid
+
+    def _empty_carry(self):
+        if self._zero_carry is None:
+            k = self.cfg.k_select
+            stack = jax.tree_util.tree_map(
+                lambda a: jnp.zeros((k,) + a.shape, a.dtype), self.params)
+            self._zero_carry = (stack, jnp.zeros((k,), bool))
+        return self._zero_carry
+
+    def _run_round_fused(self, t: int, carry_delayed):
+        cfg = self.cfg
+        sched, ue_bytes = self._schedule_round()
+        log = RoundLog(round=t, selected=len(sched))
+        if isinstance(carry_delayed, (list, tuple)) and not carry_delayed:
+            carry_delayed = None
+
+        if not sched:
+            # nothing selected: stragglers (async) still merge on the server
+            if cfg.scheme == "async" and carry_delayed is not None:
+                stack, mask = carry_delayed
+                delayed = [(jax.tree_util.tree_map(lambda a: a[i], stack), 1)
+                           for i in range(mask.shape[0]) if bool(mask[i])]
+                self.params = aggregate_round([], delayed, self.params,
+                                              cfg.scheme, cfg.async_alpha,
+                                              cfg.async_a)
+            return log, None
+
+        K = _k_bucket(len(sched), cfg.k_select)
+        if self._shard_ndev > 1:
+            # sharded user axis must stay divisible by the device count
+            # (k_select is — the __init__ guard — so this stays ≤ k_select)
+            K = -(-K // self._shard_ndev) * self._shard_ndev
+        xs, ys, rates, outs, final_rate, final_out = \
+            self._presample_round(sched, K)
+        payload, tau_extra0, train_time, valid = \
+            self._user_consts(sched, ue_bytes, K)
+
+        if self._batch_shard is not None:
+            xs = jax.device_put(xs, self._batch_shard)
+            ys = jax.device_put(ys, self._batch_shard)
+        chan = {
+            "rates": jnp.asarray(rates), "outages": jnp.asarray(outs),
+            "payload_bits": jnp.asarray(payload * 8.0, jnp.float32),
+            "tau_extra0": jnp.asarray(tau_extra0, jnp.float32),
+            "final_rate": jnp.asarray(final_rate),
+            "final_outage": jnp.asarray(final_out),
+            "train_time": jnp.asarray(train_time, jnp.float32),
+            "valid": jnp.asarray(valid),
+        }
+
+        if cfg.scheme == "async":
+            stack, mask = (carry_delayed if carry_delayed is not None
+                           else self._empty_carry())
+            self.params, c_stack, c_mask, stats = self._fused(
+                self.params, stack, mask, jnp.asarray(xs), jnp.asarray(ys),
+                chan)
+            new_carry = (c_stack, c_mask)
+        else:
+            self.params, stats = self._fused(
+                self.params, jnp.asarray(xs), jnp.asarray(ys), chan)
+            new_carry = None
+
+        arrived = np.asarray(stats.arrived)
+        rescued = np.asarray(stats.rescued)
+        delayed = np.asarray(stats.delayed)
+        dropped = np.asarray(stats.dropped)
+        sends = np.asarray(stats.opp_sends)
+        log.arrived_final = int(arrived.sum())
+        log.used_snapshot = int(rescued.sum())
+        log.delayed = int(delayed.sum())
+        log.dropped = int(dropped.sum())
+        events = sends + arrived.astype(np.int64)
+        log.bytes_sent = float(np.sum(payload * events))
+        for j, u in enumerate(sched):
+            if u.mode == "SL" and events[j] > 0:
+                # one-off activation payload m_a rides the SL uplink (eq. 12)
+                wl = self.workloads[u.index]
+                log.bytes_sent += wl.act_bytes_per_sample * wl.samples
+        return log, new_carry
+
+    # -- host reference engine ----------------------------------------------
+    def _run_round_host(self, t: int, carry_delayed) -> Tuple[RoundLog, List[tuple]]:
+        cfg = self.cfg
+        carry_delayed = list(carry_delayed or [])
+        sched, ue_bytes = self._schedule_round()
 
         log = RoundLog(round=t, selected=len(sched))
         if not sched:
@@ -160,17 +364,27 @@ class HSFLSimulation:
             payload = cfg.model_bytes if u.mode == "FL" else ue_bytes
             txs[u.index] = OppTransmitter(
                 payload, cfg.local_epochs, cfg.b, u.rate0_bps,
-                compress_ratio=cfg.compress_ratio,
+                compress_ratio=self.compress_ratio,
                 schedule_override=cfg.schedule_override)
 
         # stacked per-user params (K, ...): everyone starts from the global.
         # Pad K to a small bucket so the vmapped epoch compiles O(1) times.
-        K = min(cfg.k_select, 2 * ((len(sched) + 1) // 2))
+        K = _k_bucket(len(sched), cfg.k_select)
         stacked = jax.tree_util.tree_map(
             lambda a: jnp.broadcast_to(a[None], (K,) + a.shape), self.params)
 
         def user_tree(i: int):
             return jax.tree_util.tree_map(lambda a: a[i], stacked)
+
+        def snapshot_of(i: int):
+            if not cfg.use_delta_codec:
+                return user_tree(i)
+            # quantize-dequantize round trip: the server only ever holds the
+            # int8 delta payload, so the stored snapshot carries codec noise
+            payload = encode_delta(user_tree(i), self.params,
+                                   interpret=self._interpret)
+            return decode_delta(payload, self.params,
+                                interpret=self._interpret)
 
         # local training: epochs advance in lockstep; channel drifts per epoch
         for e_t in range(1, cfg.local_epochs + 1):
@@ -189,7 +403,8 @@ class HSFLSimulation:
                     if e_t in txs[u.index].schedule:
                         txs[u.index].maybe_transmit(
                             e_t, float(rates[u.index]),
-                            bool(outages[u.index]), user_tree(i))
+                            bool(outages[u.index]),
+                            lambda i=i: snapshot_of(i))
 
         # final uploads
         arrived: List[object] = []
@@ -228,7 +443,7 @@ class HSFLSimulation:
     # -- full simulation -----------------------------------------------------
     def run(self, eval_every: int = 1, verbose: bool = False) -> SimLog:
         sim = SimLog()
-        delayed: List[tuple] = []
+        delayed: object = []
         for t in range(1, self.cfg.rounds + 1):
             log, delayed = self.run_round(t, delayed)
             if t % eval_every == 0 or t == self.cfg.rounds:

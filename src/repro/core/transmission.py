@@ -15,6 +15,13 @@ from typing import Any, List, Optional
 from repro.core import latency as lat
 
 
+def schedule_period(e: int, b: int) -> int:
+    """Probe period e/b of Alg. 2 line 12 — the single source of truth
+    shared by the host scheduler, the multi-pod OppSync feature and the
+    fused HSFL round."""
+    return max(1, round(e / b))
+
+
 def scheduled_epochs(e: int, b: int) -> List[int]:
     """Local iterations at which Alg. 2 probes the channel: e_t % (e/b) == 0.
 
@@ -24,7 +31,7 @@ def scheduled_epochs(e: int, b: int) -> List[int]:
     """
     if b <= 1:
         return []
-    period = max(1, round(e / b))
+    period = schedule_period(e, b)
     return [k * period for k in range(1, b) if k * period < e]
 
 
@@ -50,10 +57,15 @@ class OppTransmitter:
     snapshot: Optional[Any] = field(init=False, default=None)
     snapshot_epoch: int = field(init=False, default=-1)
     events: List[TransmissionEvent] = field(init=False, default_factory=list)
+    _schedule: tuple = field(init=False)
 
     def __post_init__(self):
         self.tau_extra = lat.extra_allowance(self.b, self.payload_bytes,
                                              self.rate0_bps)
+        # cached once: maybe_transmit is called every scheduled epoch and
+        # recomputing the schedule there was pure per-call overhead
+        self._schedule = (tuple(self.schedule_override) if self.schedule_override
+                          else tuple(scheduled_epochs(self.e, self.b)))
 
     @property
     def payload_bytes(self) -> float:
@@ -61,14 +73,16 @@ class OppTransmitter:
 
     @property
     def schedule(self) -> List[int]:
-        if self.schedule_override:
-            return list(self.schedule_override)
-        return scheduled_epochs(self.e, self.b)
+        return list(self._schedule)
 
     def maybe_transmit(self, epoch: int, rate_bps: float, outage: bool,
                        params: Any) -> bool:
-        """Alg. 2 lines 17–21 at a scheduled epoch.  Returns True if sent."""
-        if epoch not in self.schedule:
+        """Alg. 2 lines 17–21 at a scheduled epoch.  Returns True if sent.
+
+        ``params`` may be a zero-arg callable, evaluated only once the
+        outage/budget checks pass (snapshot materialization — e.g. the
+        delta-codec round trip — is not free)."""
+        if epoch not in self._schedule:
             return False
         if outage:
             return False
@@ -76,7 +90,7 @@ class OppTransmitter:
         if tau > self.tau_extra:                                 # cancelled
             return False
         self.tau_extra -= tau                                    # eq. (16)
-        self.snapshot = params                                   # overwrite
+        self.snapshot = params() if callable(params) else params  # overwrite
         self.snapshot_epoch = epoch
         self.events.append(TransmissionEvent(
             epoch, tau, self.payload_bytes, "opportunistic"))

@@ -1,32 +1,51 @@
 """Pytree-level delta codec: encode/decode parameter snapshots as int8 deltas.
 
 ``encode_delta(params, base)`` returns a compact payload; ``decode_delta``
-reconstructs base + dequantized delta.  ``COMPRESS_RATIO`` is the byte ratio
-vs float32 (int8 + one f32 scale per 512 lanes = 0.2578) — this is what the
-HSFL sim's ``compress_ratio`` knob and the eq. (15) payload use.
+reconstructs base + dequantized delta.  ``COMPRESS_RATIO`` is the asymptotic
+byte ratio vs float32 (int8 + one f32 scale per 512 lanes = 0.2520);
+``codec_ratio(n)`` is the exact ratio for an n-parameter payload including
+the final partial block — this is what the HSFL sim's ``compress_ratio``
+knob and the eq. (15) payload use when the codec is enabled.
+
+The flatten helpers pad to the kernel's full contract: lane padding to
+``BLOCK`` columns *and* row padding to a multiple of ``TILE_ROWS`` (needed
+whenever the flat view exceeds one tile), so arbitrary pytrees — and stacked
+``(K, ...)`` user pytrees in the fused HSFL round — can ride the Pallas
+kernel.  Padding rows quantize to zero blocks and are sliced off on decode;
+``payload_bytes``/``codec_ratio`` count only the ceil(n/BLOCK) real blocks.
 """
 from __future__ import annotations
 
+import math
 from functools import partial
 from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.delta_codec.kernel import (BLOCK, dequantize_blocks,
+from repro.kernels.delta_codec.kernel import (BLOCK, TILE_ROWS,
+                                              dequantize_blocks,
                                               quantize_blocks)
 from repro.models import module as m
 
 COMPRESS_RATIO = (1.0 + 4.0 / BLOCK) / 4.0     # ≈ 0.2520 of f32 bytes
 
 
+def _padded_rows(n: int) -> int:
+    """Rows of the (M, BLOCK) view for n values, honouring the row tiling."""
+    rows = max(1, math.ceil(n / BLOCK))
+    if rows > TILE_ROWS:
+        rows = math.ceil(rows / TILE_ROWS) * TILE_ROWS
+    return rows
+
+
 def _flatten(tree: Any) -> Tuple[jnp.ndarray, Any, int]:
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     flat = jnp.concatenate([jnp.ravel(l).astype(jnp.float32) for l in leaves])
     n = flat.size
-    pad = (-n) % BLOCK
-    flat = jnp.pad(flat, (0, pad))
-    return flat.reshape(-1, BLOCK), treedef, n
+    rows = _padded_rows(n)
+    flat = jnp.pad(flat, (0, rows * BLOCK - n))
+    return flat.reshape(rows, BLOCK), treedef, n
 
 
 def _unflatten(flat: jnp.ndarray, like: Any) -> Any:
@@ -36,6 +55,35 @@ def _unflatten(flat: jnp.ndarray, like: Any) -> Any:
     for l in leaves:
         out.append(flat[off:off + l.size].reshape(l.shape).astype(l.dtype))
         off += l.size
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def stacked_flatten(stacked: Any) -> Tuple[jnp.ndarray, int]:
+    """Stacked user pytree (leaves ``(K, ...)``) -> ``(K, M, BLOCK)`` + n.
+
+    M is padded to a multiple of TILE_ROWS so the collapsed ``(K·M, BLOCK)``
+    view always meets the kernel's grid contract regardless of K.
+    """
+    leaves = jax.tree_util.tree_leaves(stacked)
+    k = leaves[0].shape[0]
+    flat = jnp.concatenate(
+        [l.reshape(k, -1).astype(jnp.float32) for l in leaves], axis=1)
+    n = flat.shape[1]
+    rows = math.ceil(max(1, math.ceil(n / BLOCK)) / TILE_ROWS) * TILE_ROWS
+    flat = jnp.pad(flat, ((0, 0), (0, rows * BLOCK - n)))
+    return flat.reshape(k, rows, BLOCK), n
+
+
+def stacked_unflatten(flat: jnp.ndarray, like_stacked: Any) -> Any:
+    """Inverse of ``stacked_flatten`` (drops padding)."""
+    leaves, treedef = jax.tree_util.tree_flatten(like_stacked)
+    k = flat.shape[0]
+    flat = flat.reshape(k, -1)
+    out, off = [], 0
+    for l in leaves:
+        size = l.size // k
+        out.append(flat[:, off:off + size].reshape(l.shape).astype(l.dtype))
+        off += size
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
@@ -58,4 +106,14 @@ def decode_delta(payload: Dict[str, jnp.ndarray], base: Any,
 
 
 def payload_bytes(payload: Dict[str, jnp.ndarray]) -> int:
-    return int(payload["q"].size + payload["scales"].size * 4)
+    """True wire bytes: int8 lanes + f32 scale for the real blocks only
+    (row padding added for the kernel tiling is not transmitted)."""
+    blocks = math.ceil(int(payload["n"]) / BLOCK)
+    return blocks * BLOCK + blocks * 4
+
+
+def codec_ratio(n: int) -> float:
+    """Exact compressed/uncompressed byte ratio for an n-value payload:
+    ceil(n/BLOCK) int8 blocks + one f32 scale each, over n float32 bytes."""
+    blocks = math.ceil(n / BLOCK)
+    return (blocks * BLOCK + blocks * 4) / (4.0 * n)

@@ -52,3 +52,19 @@ def test_aggregate_round_empty_keeps_global():
     g = tree(7.0)
     out = aggregate_round([], [], g, "discard")
     np.testing.assert_allclose(out["a"], 7.0)
+
+
+def test_aggregate_round_async_only_delayed_merges_not_replaces():
+    """Regression: a round with ONLY delayed updates must apply the FedAsync
+    server merge ω ← (1−α_t)·ω + α_t·ω_d, not normalized FedAvg (which would
+    fully replace the global model with the stale update)."""
+    g = tree(2.0)
+    out = aggregate_round([], [(tree(10.0), 1)], g, "async")
+    w = fedasync_weight(1)
+    np.testing.assert_allclose(out["a"], (1 - w) * 2.0 + w * 10.0, rtol=1e-6)
+    # two stragglers merge sequentially in arrival order
+    out2 = aggregate_round([], [(tree(10.0), 1), (tree(0.0), 1)], g, "async")
+    expect = (1 - w) * ((1 - w) * 2.0 + w * 10.0) + w * 0.0
+    np.testing.assert_allclose(out2["a"], expect, rtol=1e-6)
+    # the stale update must NOT dominate: far closer to ω than to ω_d
+    assert abs(float(out["a"][0]) - 2.0) < abs(float(out["a"][0]) - 10.0)

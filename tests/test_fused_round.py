@@ -1,0 +1,159 @@
+"""Fused-round equivalence vs the host OppTransmitter reference path.
+
+The fused engine (core/fused_round) must reproduce the host control loop
+exactly: same seeds -> identical per-round selected/arrived/rescued/dropped/
+delayed counts and byte accounting, and aggregated params within tolerance
+(the fused train step lowers convolutions via im2col, which reassociates the
+backward — values drift at the 1e-7/round level, amplified to ~1e-5 through
+the int8 codec's rounding boundaries).
+
+Known boundary: the host reference compares the eq. 14-16 τ budgets in
+Python float64 while the device program uses float32, so a probe whose τ
+lands within ~1e-7 *relative* of the remaining allowance could in principle
+decide differently between engines.  Both sides are deterministic IEEE
+scalar math, so the pinned seeds here are stable; if a future fixture change
+flips a count by ±1, suspect this boundary before suspecting the logic.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.hsfl import HSFLConfig, HSFLSimulation
+from repro.kernels.delta_codec.ops import (codec_ratio, decode_delta,
+                                           encode_delta, payload_bytes,
+                                           stacked_flatten, stacked_unflatten)
+
+
+def small_cfg(**kw):
+    base = dict(rounds=4, n_uavs=12, k_select=4, n_train=800, n_test=200,
+                steps_per_epoch=2, local_epochs=6, seed=0)
+    base.update(kw)
+    return HSFLConfig(**base)
+
+
+def run_traj(cfg):
+    sim = HSFLSimulation(cfg)
+    delayed, logs = [], []
+    for t in range(1, cfg.rounds + 1):
+        log, delayed = sim.run_round(t, delayed)
+        logs.append((log.selected, log.arrived_final, log.used_snapshot,
+                     log.dropped, log.delayed, round(log.bytes_sent, 3)))
+    return logs, sim.params
+
+
+def max_leaf_diff(a, b):
+    return max(float(np.max(np.abs(np.asarray(x) - np.asarray(y))))
+               for x, y in zip(jax.tree_util.tree_leaves(a),
+                               jax.tree_util.tree_leaves(b)))
+
+
+@pytest.mark.parametrize("scheme,b", [("opt", 2), ("discard", 1), ("async", 1)])
+def test_fused_matches_host_trajectory(scheme, b):
+    host, p_host = run_traj(small_cfg(scheme=scheme, b=b,
+                                      use_fused_round=False))
+    fused, p_fused = run_traj(small_cfg(scheme=scheme, b=b,
+                                        use_fused_round=True))
+    assert host == fused, f"count/byte trajectories diverge:\n{host}\n{fused}"
+    assert max_leaf_diff(p_host, p_fused) < 1e-5
+
+
+def test_fused_matches_host_with_rescue():
+    # seed 1 produces a snapshot rescue within 5 rounds (exercises the
+    # snapshot-overwrite + rescue aggregation path end to end)
+    cfg = dict(scheme="opt", b=2, rounds=5, seed=1)
+    host, p_host = run_traj(small_cfg(use_fused_round=False, **cfg))
+    fused, p_fused = run_traj(small_cfg(use_fused_round=True, **cfg))
+    assert sum(r[2] for r in host) > 0, "fixture no longer rescues"
+    assert host == fused
+    assert max_leaf_diff(p_host, p_fused) < 1e-5
+
+
+def test_fused_matches_host_with_delta_codec():
+    cfg = dict(scheme="opt", b=2, rounds=5, seed=1, use_delta_codec=True)
+    host, p_host = run_traj(small_cfg(use_fused_round=False, **cfg))
+    fused, p_fused = run_traj(small_cfg(use_fused_round=True, **cfg))
+    assert host == fused
+    # int8 rounding boundaries amplify the im2col backward drift
+    assert max_leaf_diff(p_host, p_fused) < 3e-5
+
+
+def test_codec_compress_ratio_is_derived():
+    sim = HSFLSimulation(small_cfg(rounds=1, use_delta_codec=True))
+    n = sum(x.size for x in jax.tree_util.tree_leaves(sim.params))
+    assert sim.compress_ratio == pytest.approx(codec_ratio(n))
+    assert 0.2 < sim.compress_ratio < 0.3
+    # bytes on the wire shrink accordingly
+    log, _ = sim.run_round(1, [])
+    assert log.bytes_sent < 0.3 * log.selected * 2 * sim.cfg.model_bytes
+
+
+def test_fused_schedule_override():
+    cfg = dict(scheme="opt", b=2, rounds=4, schedule_override=(1, 5))
+    host, p_host = run_traj(small_cfg(use_fused_round=False, **cfg))
+    fused, p_fused = run_traj(small_cfg(use_fused_round=True, **cfg))
+    assert host == fused
+    assert max_leaf_diff(p_host, p_fused) < 1e-5
+
+
+def test_forward_im2col_matches_reference():
+    from repro.models import cnn as cnn_mod
+    params = cnn_mod.init_cnn(jax.random.PRNGKey(3))
+    x = jax.random.normal(jax.random.PRNGKey(4), (7, 28, 28, 1))
+    ref = cnn_mod.forward(params, x)
+    fast = cnn_mod.forward_im2col(params, x)
+    np.testing.assert_allclose(np.asarray(fast), np.asarray(ref),
+                               rtol=1e-6, atol=1e-6)
+
+
+# -- delta codec flatten/pad contract ---------------------------------------
+
+def _odd_tree(key):
+    """Leaf sizes deliberately NOT multiples of 512 (773 + 3*5*7 + 11)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"a": jax.random.normal(k1, (773,)),
+            "b": {"c": jax.random.normal(k2, (3, 5, 7)),
+                  "d": jax.random.normal(k3, (11,))}}
+
+
+def test_delta_codec_roundtrip_odd_sizes():
+    base = _odd_tree(jax.random.PRNGKey(0))
+    params = jax.tree_util.tree_map(
+        lambda x: x + 0.01 * jnp.sin(
+            jnp.arange(x.size, dtype=jnp.float32)).reshape(x.shape), base)
+    payload = encode_delta(params, base, interpret=True)
+    out = decode_delta(payload, base, interpret=True)
+    # error bounded by half an int8 step of the per-block scale
+    for got, want in zip(jax.tree_util.tree_leaves(out),
+                         jax.tree_util.tree_leaves(params)):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-4)
+    n = 773 + 3 * 5 * 7 + 11
+    assert int(payload["n"]) == n
+    blocks = -(-n // 512)
+    assert payload_bytes(payload) == blocks * 512 + blocks * 4
+
+
+def test_stacked_flatten_roundtrip_odd_sizes():
+    tree = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (3,) + x.shape),
+        _odd_tree(jax.random.PRNGKey(2)))
+    flat, n = stacked_flatten(tree)
+    assert flat.shape[0] == 3 and flat.shape[2] == 512
+    assert flat.shape[1] % 256 == 0          # kernel row-tiling contract
+    assert n == 773 + 3 * 5 * 7 + 11
+    back = stacked_unflatten(flat, tree)
+    for got, want in zip(jax.tree_util.tree_leaves(back),
+                         jax.tree_util.tree_leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_large_tree_meets_row_tiling():
+    """>256 blocks forces row padding to a TILE_ROWS multiple (the old
+    _flatten asserted out here)."""
+    base = {"w": jnp.zeros((300, 512))}          # 300 rows > TILE_ROWS
+    params = {"w": jnp.ones((300, 512)) * 0.01}
+    payload = encode_delta(params, base, interpret=True)
+    assert payload["q"].shape[0] % 256 == 0
+    out = decode_delta(payload, base, interpret=True)
+    np.testing.assert_allclose(np.asarray(out["w"]), 0.01, atol=1e-4)
