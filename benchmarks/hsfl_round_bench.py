@@ -9,6 +9,21 @@ Measures rounds/sec of ``HSFLSimulation.run_round`` at the paper's scale
                   host devices (bench-only: XLA_FLAGS set in a subprocess)
   fused_codec   — fused with int8 delta-codec snapshots
 
+plus the PR-2 *grid* engines, which time the whole Fig. 3(b) panel
+(3 schemes × ``--grid-seeds`` seeds) instead of one round:
+
+  grid_loop     — one **cold** ``run_hsfl`` per (scheme, seed) cell,
+                  exactly what ``paper_experiments._run`` pays: dataset/sim
+                  setup and fresh jit compiles per cell are inherent to the
+                  loop engine (every ``HSFLSimulation`` builds new
+                  closures) and are included in its wall
+  grid_sweep    — the vectorized sweep engine (core/sweep): rounds scanned,
+                  seeds vmapped (sharded over forced host devices in the
+                  *_sharded* variant), channel realized on-device;
+                  ``wall_s`` is end-to-end with compiles, with
+                  ``steady_wall_s``/``compile_s`` split out since its per-
+                  scheme programs are compiled once and reusable
+
 Methodology: each engine runs in its own subprocess (so XLA device forcing
 can't leak); per engine we run ``--warmup`` rounds first on the same
 simulation instance so every K-bucket jit variant is compiled, then time
@@ -26,7 +41,52 @@ import subprocess
 import sys
 
 
-ENGINES = ("host", "fused", "fused_codec", "fused_sharded")
+ENGINES = ("host", "fused", "fused_codec", "fused_sharded",
+           "grid_loop", "grid_sweep")
+
+
+def measure_grid(engine: str, rounds: int, seeds: int) -> dict:
+    """Wall-clock the whole fig3b grid: 3 schemes × seeds × rounds.
+
+    ``grid_loop`` is exactly what ``paper_experiments._run`` does — a cold
+    ``run_hsfl`` per (scheme, seed) cell, each paying dataset/sim setup and
+    fresh jit compiles (the loop engine cannot amortize them across cells:
+    every ``HSFLSimulation`` builds new closures).  ``grid_sweep`` reports
+    the same end-to-end wall (``wall_s``, compiles included) plus the
+    steady-state re-execution wall (``steady_wall_s``) and ``compile_s``
+    separately, since the sweep's three programs are compiled once and
+    reused for any number of seeds/configs/rounds.
+    """
+    import time
+
+    import jax
+
+    combos = (("opt", 2), ("async", 1), ("discard", 1))
+    seed_list = tuple(range(seeds))
+    base = dict(devices=len(jax.devices()), grid="fig3b",
+                sims=len(combos) * seeds, rounds_timed=rounds)
+
+    if engine == "grid_loop":
+        from repro.core.hsfl import HSFLConfig, run_hsfl
+        t0 = time.time()
+        for scheme, b in combos:
+            for sd in seed_list:
+                run_hsfl(HSFLConfig(scheme=scheme, b=b, seed=sd,
+                                    rounds=rounds))
+        wall = time.time() - t0
+        return dict(base, engine=engine, wall_s=round(wall, 2),
+                    sim_rounds_per_sec=round(base["sims"] * rounds / wall, 3))
+
+    from repro.core.sweep import fig3b_spec, run_sweep
+    spec = fig3b_spec(rounds, seed_list)[0]
+    res = run_sweep(spec, timeit=True)
+    steady = sum(g.run_s for g in res.groups)
+    compile_s = sum(g.compile_s for g in res.groups)
+    wall = steady + compile_s
+    return dict(base, engine=engine, wall_s=round(wall, 2),
+                steady_wall_s=round(steady, 2),
+                compile_s=round(compile_s, 2),
+                sim_rounds_per_sec=round(base["sims"] * rounds / steady, 3))
 
 
 def measure(engine: str, warmup: int, rounds: int) -> dict:
@@ -61,7 +121,7 @@ def measure(engine: str, warmup: int, rounds: int) -> dict:
             "devices": len(jax.devices())}
 
 
-def run_child(engine: str, args, devices: int = 1) -> dict:
+def run_child(engine: str, args, devices: int = 1, tag: str = "") -> dict:
     env = dict(os.environ)
     env["PYTHONPATH"] = os.pathsep.join(
         [os.path.join(os.path.dirname(__file__), "..", "src")]
@@ -72,15 +132,24 @@ def run_child(engine: str, args, devices: int = 1) -> dict:
     out = subprocess.run(
         [sys.executable, "-m", "benchmarks.hsfl_round_bench",
          "--engine", engine, "--warmup", str(args.warmup),
-         "--rounds", str(args.rounds)],
+         "--rounds", str(args.rounds),
+         "--grid-rounds", str(args.grid_rounds),
+         "--grid-seeds", str(args.grid_seeds)],
         capture_output=True, text=True, env=env,
         cwd=os.path.join(os.path.dirname(__file__), ".."))
     if out.returncode != 0:
         raise RuntimeError(f"{engine} failed:\n{out.stdout}\n{out.stderr}")
     rec = json.loads(out.stdout.strip().splitlines()[-1])
-    print(f"{engine:14s} {rec['ms_per_round']:8.1f} ms/round "
-          f"({rec['rounds_per_sec']:.3f} rounds/s, "
-          f"devices={rec['devices']})")
+    name = tag or engine
+    rec["engine"] = name
+    if "ms_per_round" in rec:
+        print(f"{name:18s} {rec['ms_per_round']:8.1f} ms/round "
+              f"({rec['rounds_per_sec']:.3f} rounds/s, "
+              f"devices={rec['devices']})")
+    else:
+        print(f"{name:18s} {rec['wall_s']:8.2f} s grid "
+              f"({rec['sim_rounds_per_sec']:.3f} sim-rounds/s, "
+              f"sims={rec['sims']}, devices={rec['devices']})")
     return rec
 
 
@@ -89,14 +158,25 @@ def main() -> None:
     ap.add_argument("--rounds", type=int, default=12)
     ap.add_argument("--warmup", type=int, default=10)
     ap.add_argument("--devices", type=int, default=2,
-                    help="forced host devices for the sharded variant")
+                    help="forced host devices for the sharded variants")
+    ap.add_argument("--grid-rounds", type=int, default=8,
+                    help="rounds per simulation for the fig3b grid engines")
+    ap.add_argument("--grid-seeds", type=int, default=2,
+                    help="seeds per scheme for the fig3b grid engines")
+    ap.add_argument("--skip-grid", action="store_true",
+                    help="only run the single-round engines")
     ap.add_argument("--out", default="BENCH_hsfl.json")
     ap.add_argument("--engine", default=None,
                     help="(internal) measure one engine and print JSON")
     args = ap.parse_args()
 
     if args.engine:
-        print(json.dumps(measure(args.engine, args.warmup, args.rounds)))
+        if args.engine.startswith("grid_"):
+            rec = measure_grid(args.engine, args.grid_rounds,
+                               args.grid_seeds)
+        else:
+            rec = measure(args.engine, args.warmup, args.rounds)
+        print(json.dumps(rec))
         return
 
     recs = [run_child("host", args),
@@ -119,6 +199,33 @@ def main() -> None:
     print(f"\nspeedup fused vs host: {result['speedup_fused_vs_host']}x")
     if "speedup_sharded_vs_host" in result:
         print(f"speedup sharded vs host: {result['speedup_sharded_vs_host']}x")
+
+    if not args.skip_grid:
+        # -- fig3b grid: loop of fused run_hsfl cells vs one sweep program --
+        grid = [run_child("grid_loop", args),
+                run_child("grid_sweep", args)]
+        if args.devices > 1:
+            grid.append(run_child("grid_sweep", args, devices=args.devices,
+                                  tag="grid_sweep_sharded"))
+        loop_w = grid[0]["wall_s"]
+        gres = {
+            "config": {"grid": "fig3b", "schemes": 3,
+                       "seeds": args.grid_seeds,
+                       "rounds_timed": args.grid_rounds,
+                       "eval_every_round": True},
+            "engines": grid,
+            "speedup_sweep_vs_loop": round(loop_w / grid[1]["wall_s"], 2),
+        }
+        if args.devices > 1:
+            gres["speedup_sweep_sharded_vs_loop"] = round(
+                loop_w / grid[-1]["wall_s"], 2)
+        print(f"speedup sweep vs loop (fig3b grid): "
+              f"{gres['speedup_sweep_vs_loop']}x")
+        if "speedup_sweep_sharded_vs_loop" in gres:
+            print(f"speedup sweep sharded vs loop: "
+                  f"{gres['speedup_sweep_sharded_vs_loop']}x")
+        result["fig3b_grid"] = gres
+
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)
         f.write("\n")

@@ -4,76 +4,180 @@ Each returns a list of result dicts; benchmarks/run.py prints the CSV and
 EXPERIMENTS.md records the full-scale numbers.  Claims under test (DESIGN.md
 §1): C1 OPT>Async (accuracy + stability), C2 b=1->2 jump, C3 b sweep knee,
 C4 τ_max cliff, C5 iid robustness.
+
+Engines:
+
+- ``sweep`` (default) — the vectorized sweep engine (core/sweep): each
+  panel compiles to one program per scheme with seeds/distributions vmapped
+  on a (mesh-shardable) sim axis, configs (b, τ_max) vmapped on a traced
+  axis, and rounds scanned on-device.  Channel/batch RNG is jax.random
+  (seeded, but not the host numpy stream — see EXPERIMENTS.md).
+- ``loop`` — one ``run_hsfl`` per (scheme, seed, config) cell; the
+  delta-codec experiments stay here (the codec snapshot path is
+  host-presampled only).
+
+Timing fields: ``us_per_round`` is wall-µs per *simulated communication
+round* (grid wall-clock / total rounds simulated — for sweep records this
+is the panel-level amortized figure, identical across the panel's rows);
+``rounds_per_sec`` is its reciprocal throughput.  (The pre-PR-2 field
+``us_per_call`` reported the same per-round quantity under a misleading
+name.)
 """
 from __future__ import annotations
 
 import time
-from typing import Dict, List
+from typing import Dict, List, Sequence
 
 import numpy as np
 
 from repro.core.hsfl import HSFLConfig, run_hsfl
+from repro.core.sweep import (SweepSpec, fig3a_spec, fig3b_spec, fig3c_spec,
+                              fig3d_spec, run_sweep)
 
 
-def _run(tag: str, rounds: int, seeds=(0,), **kw) -> Dict:
-    t0 = time.time()
-    finals, comms, tail_stds, curves = [], [], [], []
-    rescues = drops = 0
-    for seed in seeds:
-        log = run_hsfl(HSFLConfig(rounds=rounds, seed=seed, **kw))
-        s = log.summary()
-        finals.append(s["final_acc"])
-        comms.append(s["avg_comm_mb"])
-        accs = [a for a in log.acc_curve if a == a]
-        tail_stds.append(float(np.std(accs[-10:])))
-        curves.append(accs)
-        rescues += s["snapshot_rescues"]
-        drops += s["drops"]
-    n_rounds_total = rounds * len(seeds)
+def _curve(accs: np.ndarray, rounds: int) -> List[float]:
+    """Mean accuracy curve, subsampled to ≤20 points.  accs: (S, rounds)."""
+    stride = max(1, rounds // 20)
+    return [round(float(accs[:, i].mean()), 4)
+            for i in range(0, rounds, stride)]
+
+
+def _record(tag: str, *, acc: np.ndarray, bytes_sent: np.ndarray,
+            rescued: np.ndarray, dropped: np.ndarray, rounds: int,
+            us_per_round: float, rounds_per_sec: float) -> Dict:
+    """One CSV row from per-round metric arrays shaped (S, rounds)."""
+    finals = acc[:, -5:].mean(axis=1)            # SimLog.final_acc
     return {
         "name": tag,
-        "us_per_call": (time.time() - t0) / n_rounds_total * 1e6,
-        "final_acc": float(np.mean(finals)),
-        "acc_std": float(np.std(finals)),
-        "avg_comm_mb": float(np.mean(comms)),
-        "tail_std": float(np.mean(tail_stds)),
-        "rescues": rescues,
-        "drops": drops,
-        "curve": [round(float(np.mean([c[i] for c in curves])), 4)
-                  for i in range(0, rounds, max(1, rounds // 20))],
+        "us_per_round": us_per_round,
+        "rounds_per_sec": round(rounds_per_sec, 3),
+        "final_acc": float(finals.mean()),
+        "acc_std": float(finals.std()),
+        "avg_comm_mb": float(bytes_sent.mean(axis=1).mean() / 1e6),
+        "tail_std": float(np.std(acc[:, -10:], axis=1).mean()),
+        "rescues": int(rescued.sum()),
+        "drops": int(dropped.sum()),
+        "curve": _curve(acc, rounds),
     }
 
 
-def fig3a_loss_by_distribution(rounds: int = 60, seeds=(0, 1)) -> List[Dict]:
-    """Fig. 3(a): OPT (b=2) vs discard across iid / non-iid / imbalanced."""
+# ---------------------------------------------------------------------------
+# loop engine (the per-cell reference; also the codec path)
+# ---------------------------------------------------------------------------
+
+def _run(tag: str, rounds: int, seeds=(0,), **kw) -> Dict:
+    t0 = time.time()
+    accs, bytes_, resc, drop = [], [], [], []
+    for seed in seeds:
+        log = run_hsfl(HSFLConfig(rounds=rounds, seed=seed, **kw))
+        accs.append([a for a in log.acc_curve if a == a])
+        bytes_.append([r.bytes_sent for r in log.rounds])
+        resc.append(sum(r.used_snapshot for r in log.rounds))
+        drop.append(sum(r.dropped for r in log.rounds))
+    elapsed = time.time() - t0
+    n_rounds_total = rounds * len(seeds)
+    return _record(tag, acc=np.asarray(accs), bytes_sent=np.asarray(bytes_),
+                   rescued=np.asarray(resc), dropped=np.asarray(drop),
+                   rounds=rounds,
+                   us_per_round=elapsed / n_rounds_total * 1e6,
+                   rounds_per_sec=n_rounds_total / max(elapsed, 1e-9))
+
+
+# ---------------------------------------------------------------------------
+# sweep engine: one compiled program per scheme group, records per cell
+# ---------------------------------------------------------------------------
+
+def _sweep_panel(specs: Sequence[SweepSpec], namer) -> List[Dict]:
+    """Run SweepSpecs and emit one record per (group, distribution, config).
+
+    ``namer(scheme, dist, cfg) -> tag or None`` (None skips the cell).
+    Wall-clock is amortized over every simulated round in the panel — the
+    whole point of the sweep engine — so each record carries the same
+    panel-level ``us_per_round``/``rounds_per_sec``.
+    """
+    t0 = time.time()
+    results = [run_sweep(spec) for spec in specs]
+    elapsed = time.time() - t0
+    rounds = results[0].rounds
+    total_rounds = sum(r.n_simulations for r in results) * rounds
+    upr = elapsed / max(total_rounds, 1) * 1e6
+    rps = total_rounds / max(elapsed, 1e-9)
+
     out = []
-    for dist in ("iid", "noniid", "imbalanced"):
-        out.append(_run(f"fig3a_{dist}_opt_b2", rounds, seeds,
-                        scheme="opt", b=2, distribution=dist))
-        out.append(_run(f"fig3a_{dist}_discard_b1", rounds, seeds,
-                        scheme="discard", b=1, distribution=dist))
+    for res in results:
+        for g in res.groups:
+            dists = sorted({d for _, d in g.sims},
+                           key=[d for _, d in g.sims].index)
+            for dist in dists:
+                rows = [i for i, (_, d) in enumerate(g.sims) if d == dist]
+                for ci, cfg in enumerate(g.cfgs):
+                    tag = namer(g.scheme, dist, cfg)
+                    if tag is None:
+                        continue
+                    m = g.metrics
+                    out.append(_record(
+                        tag,
+                        acc=m["test_acc"][rows, ci],
+                        bytes_sent=m["bytes_sent"][rows, ci],
+                        rescued=m["rescued"][rows, ci],
+                        dropped=m["dropped"][rows, ci],
+                        rounds=rounds, us_per_round=upr,
+                        rounds_per_sec=rps))
     return out
 
 
-def fig3b_opt_vs_async(rounds: int = 60, seeds=(0, 1)) -> List[Dict]:
+def fig3a_loss_by_distribution(rounds: int = 60, seeds=(0, 1),
+                               engine: str = "sweep") -> List[Dict]:
+    """Fig. 3(a): OPT (b=2) vs discard across iid / non-iid / imbalanced."""
+    if engine == "loop":
+        out = []
+        for dist in ("iid", "noniid", "imbalanced"):
+            out.append(_run(f"fig3a_{dist}_opt_b2", rounds, seeds,
+                            scheme="opt", b=2, distribution=dist))
+            out.append(_run(f"fig3a_{dist}_discard_b1", rounds, seeds,
+                            scheme="discard", b=1, distribution=dist))
+        return out
+    suffix = {"opt": "opt_b2", "discard": "discard_b1"}
+    return _sweep_panel(
+        fig3a_spec(rounds, seeds),
+        lambda scheme, dist, cfg: f"fig3a_{dist}_{suffix[scheme]}")
+
+
+def fig3b_opt_vs_async(rounds: int = 60, seeds=(0, 1),
+                       engine: str = "sweep") -> List[Dict]:
     """Fig. 3(b): OPT-HSFL vs Async-HSFL (staleness-weighted) on non-iid."""
-    return [
-        _run("fig3b_opt_b2", rounds, seeds, scheme="opt", b=2),
-        _run("fig3b_async", rounds, seeds, scheme="async", b=1),
-        _run("fig3b_discard_b1", rounds, seeds, scheme="discard", b=1),
-    ]
+    if engine == "loop":
+        return [
+            _run("fig3b_opt_b2", rounds, seeds, scheme="opt", b=2),
+            _run("fig3b_async", rounds, seeds, scheme="async", b=1),
+            _run("fig3b_discard_b1", rounds, seeds, scheme="discard", b=1),
+        ]
+    tags = {"opt": "fig3b_opt_b2", "async": "fig3b_async",
+            "discard": "fig3b_discard_b1"}
+    return _sweep_panel(fig3b_spec(rounds, seeds),
+                        lambda scheme, dist, cfg: tags[scheme])
 
 
-def fig3c_budget_sweep(rounds: int = 60, seeds=(0,)) -> List[Dict]:
+def fig3c_budget_sweep(rounds: int = 60, seeds=(0,),
+                       engine: str = "sweep") -> List[Dict]:
     """Fig. 3(c): accuracy & comm overhead vs transmission budget b."""
-    return [_run(f"fig3c_b{b}", rounds, seeds, scheme="opt", b=b)
-            for b in (1, 2, 3, 4, 5, 6)]
+    if engine == "loop":
+        return [_run(f"fig3c_b{b}", rounds, seeds, scheme="opt", b=b)
+                for b in (1, 2, 3, 4, 5, 6)]
+    return _sweep_panel(
+        fig3c_spec(rounds, seeds),
+        lambda scheme, dist, cfg: f"fig3c_b{int(cfg['b'])}")
 
 
-def fig3d_tau_sweep(rounds: int = 60, seeds=(0,)) -> List[Dict]:
+def fig3d_tau_sweep(rounds: int = 60, seeds=(0,),
+                    engine: str = "sweep") -> List[Dict]:
     """Fig. 3(d): accuracy & comm overhead vs one-round latency cap τ_max."""
-    return [_run(f"fig3d_tau{tau}", rounds, seeds, scheme="opt", b=2,
-                 tau_max=float(tau)) for tau in (7, 8, 9, 10, 11)]
+    if engine == "loop":
+        return [_run(f"fig3d_tau{tau}", rounds, seeds, scheme="opt", b=2,
+                     tau_max=float(tau)) for tau in (7, 8, 9, 10, 11)]
+    return _sweep_panel(
+        fig3d_spec(rounds, seeds),
+        lambda scheme, dist, cfg: f"fig3d_tau{int(cfg['tau_max'])}")
 
 
 def ablation_schedule_placement(rounds: int = 40, seeds=(0,)) -> List[Dict]:
@@ -106,7 +210,8 @@ def beyond_paper_delta_codec(rounds: int = 60, seeds=(0,)) -> List[Dict]:
     shrink eq. 15's payload ~4x -> more opportunistic windows affordable at
     the same wireless budget.  ``use_delta_codec`` runs the codec end to
     end: snapshots are stored/rescued as quantized deltas and the payload
-    ratio is derived from the actual int8+scale byte count."""
+    ratio is derived from the actual int8+scale byte count.  (Loop engine:
+    the codec snapshot path is host-presampled only.)"""
     return [
         _run("beyond_codec_off_b2", rounds, seeds, scheme="opt", b=2),
         _run("beyond_codec_on_b2", rounds, seeds, scheme="opt", b=2,

@@ -1,6 +1,7 @@
 """Benchmark harness — one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV.  Default scale is CI-friendly
+Prints ``name,us_per_round,derived`` CSV (kernel rows report per-call
+micros in the same column).  Default scale is CI-friendly
 (short sims); EXPERIMENTS.md's full-scale numbers come from
 ``--rounds 100 --seeds 3`` runs (same code).
 
@@ -15,11 +16,18 @@ import os
 import sys
 
 
+def _us_per_round(r) -> float:
+    # kernel/roofline rows still report us_per_call (per invocation);
+    # simulation rows report us_per_round (see paper_experiments docstring)
+    return r.get("us_per_round", r.get("us_per_call", 0.0))
+
+
 def _print_csv(rows) -> None:
     for r in rows:
         derived = {k: v for k, v in r.items()
-                   if k not in ("name", "us_per_call", "curve")}
-        print(f"{r['name']},{r['us_per_call']:.1f},"
+                   if k not in ("name", "us_per_round", "us_per_call",
+                                "curve")}
+        print(f"{r['name']},{_us_per_round(r):.1f},"
               f"\"{json.dumps(derived, sort_keys=True)}\"")
         sys.stdout.flush()
 
@@ -31,6 +39,9 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     choices=[None, "fig3a", "fig3b", "fig3c", "fig3d",
                              "beyond", "kernels", "roofline", "ablations"])
+    ap.add_argument("--engine", default="sweep", choices=["sweep", "loop"],
+                    help="fig3 panels: vectorized sweep engine (default) "
+                         "or the per-cell run_hsfl loop")
     ap.add_argument("--out", default=None, help="also append JSON rows here")
     args = ap.parse_args()
     seeds = tuple(range(args.seeds))
@@ -38,7 +49,7 @@ def main() -> None:
     from benchmarks import kernel_bench
     from benchmarks import paper_experiments as pe
 
-    print("name,us_per_call,derived")
+    print("name,us_per_round,derived")
     all_rows = []
 
     def emit(rows):
@@ -46,13 +57,13 @@ def main() -> None:
         all_rows.extend(rows)
 
     if args.only in (None, "fig3a"):
-        emit(pe.fig3a_loss_by_distribution(args.rounds, seeds))
+        emit(pe.fig3a_loss_by_distribution(args.rounds, seeds, args.engine))
     if args.only in (None, "fig3b"):
-        emit(pe.fig3b_opt_vs_async(args.rounds, seeds))
+        emit(pe.fig3b_opt_vs_async(args.rounds, seeds, args.engine))
     if args.only in (None, "fig3c"):
-        emit(pe.fig3c_budget_sweep(args.rounds, seeds))
+        emit(pe.fig3c_budget_sweep(args.rounds, seeds, args.engine))
     if args.only in (None, "fig3d"):
-        emit(pe.fig3d_tau_sweep(args.rounds, seeds))
+        emit(pe.fig3d_tau_sweep(args.rounds, seeds, args.engine))
     if args.only in (None, "beyond"):
         emit(pe.beyond_paper_delta_codec(args.rounds, seeds))
     if args.only == "ablations":     # beyond-paper ablations (EXPERIMENTS.md)

@@ -1,14 +1,17 @@
 """The paper's primary contribution: opportunistic-proactive transmission of
 distributed learning model updates (OPT-HSFL), plus the multi-pod
-OpportunisticSync generalization."""
+OpportunisticSync generalization and the vectorized sweep engine that runs
+whole Fig. 3 grids as single device programs."""
 from repro.core.aggregation import aggregate_round, fedavg, fedasync_weight
 from repro.core.channel import ChannelParams, UAVFleet, rate_bps
 from repro.core.hsfl import HSFLConfig, HSFLSimulation, run_hsfl
 from repro.core.opportunistic_sync import OppSyncConfig
+from repro.core.sweep import SweepSpec, run_hsfl_on_device, run_sweep
 from repro.core.transmission import OppTransmitter, scheduled_epochs
 
 __all__ = [
     "ChannelParams", "HSFLConfig", "HSFLSimulation", "OppSyncConfig",
-    "OppTransmitter", "UAVFleet", "aggregate_round", "fedavg",
-    "fedasync_weight", "rate_bps", "run_hsfl", "scheduled_epochs",
+    "OppTransmitter", "SweepSpec", "UAVFleet", "aggregate_round", "fedavg",
+    "fedasync_weight", "rate_bps", "run_hsfl", "run_hsfl_on_device",
+    "run_sweep", "scheduled_epochs",
 ]

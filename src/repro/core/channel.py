@@ -1,7 +1,10 @@
-"""Wireless channel model — Section II-A, eqs. (1)–(7) + Table I.
+"""Wireless channel model, host reference — Section II-A, eqs. (1)–(7).
 
-Rician fading with elevation-dependent LOS probability and additional path
-loss (Holis & Pechac model).  Implementation notes on the paper's units
+The equation math lives in ``core/channel_lib`` (one backend-agnostic
+implementation shared with the on-device ``FleetState`` path used by the
+sweep engine); this module binds it to numpy and keeps the stateful
+``UAVFleet`` whose ``np.random.Generator`` stream the fused-vs-host
+equivalence tests pin.  Implementation notes on the paper's units
 (documented interpretations, see DESIGN.md §2):
 
 - eq. (4) free-space term: the paper prints ``10·log10[4π d² f / c]²``; the
@@ -9,101 +12,63 @@ loss (Holis & Pechac model).  Implementation notes on the paper's units
   as a typo and use the standard form (with the paper's literal form the
   resulting rates are sub-bit/s at 500 m, contradicting Fig. 3's ~10 s model
   uploads).
+- eq. (4) additional loss: the printed -(η_l-η_n)/P_LOS term yields −200 dB+
+  over most of the cell; we read it as the Holis–Pechac / Al-Hourani
+  *expected* additional loss — the P_LOS-weighted mix of the LOS and NLOS
+  excess losses.
 - noise ``σ² = -174 dBm`` is read as the thermal density -174 dBm/Hz
   integrated over the allocated bandwidth (−174 + 10·log10(n_i·B_uav)).
 - the Rician factor "K (mW) 1.8~5 dBm" is read as K in dB, resampled
   uniformly each local round (Section IV).
 - eq. (5) uses the *expected* amplitude combination v+s (deterministic given
   K), exactly as printed.
-
-All functions are pure numpy (host-side control plane); the FL sim composes
-them with jitted training steps.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Tuple
 
 import numpy as np
 
-C_LIGHT = 299_792_458.0
+from repro.core.channel_lib import (C_LIGHT, ChannelParams, dbm_to_watt,
+                                    outage_transitions)
+from repro.core import channel_lib as _lib
 
-
-@dataclass
-class ChannelParams:
-    """Table I."""
-    p_uav_dbm: float = 24.0
-    noise_dbm_per_hz: float = -174.0
-    k_db_range: Tuple[float, float] = (1.8, 5.0)
-    carrier_hz: float = 2.0e9
-    bandwidth_uav_hz: float = 10.0e6
-    a0: float = 5.0188           # urban environment parameters
-    b0: float = 0.3511
-    eta_los_db: float = 21.0     # additional path loss LOS   (η_l)
-    eta_nlos_db: float = 1.0     # additional path loss NLOS  (η_n)
-    outage_prob: float = 0.30    # complete-interruption probability (Sec. IV)
-    outage_persistence: float = 0.70   # Gilbert-Elliott stay-bad per epoch
-    cell_radius_m: float = 500.0
-    bs_height_m: float = 20.0
-    uav_z_range: Tuple[float, float] = (20.0, 80.0)
-
-
-def dbm_to_watt(dbm: float) -> float:
-    return 10.0 ** (dbm / 10.0) * 1e-3
+__all__ = [
+    "C_LIGHT", "ChannelParams", "UAVFleet", "channel_gain", "dbm_to_watt",
+    "distance", "elevation_deg", "outage_transitions", "p_los",
+    "path_loss_db", "rate_bps",
+]
 
 
 def distance(pos: np.ndarray, bs_height: float) -> np.ndarray:
     """eq. (1).  pos: (..., 3) UAV coordinates; BS at (0, 0, z0)."""
-    dz = pos[..., 2] - bs_height
-    return np.sqrt(pos[..., 0] ** 2 + pos[..., 1] ** 2 + dz ** 2)
+    return _lib.distance(pos, bs_height, xp=np)
 
 
 def elevation_deg(pos: np.ndarray, bs_height: float) -> np.ndarray:
     """eq. (2), degrees in [0, 90)."""
-    d = np.maximum(distance(pos, bs_height), 1e-6)
-    return np.degrees(np.arcsin(np.abs(pos[..., 2] - bs_height) / d))
+    return _lib.elevation_deg(pos, bs_height, xp=np)
 
 
 def p_los(theta_deg: np.ndarray, p: ChannelParams) -> np.ndarray:
     """eq. (3)."""
-    return 1.0 / (1.0 + p.a0 * np.exp(-p.b0 * (theta_deg - p.a0)))
+    return _lib.p_los(theta_deg, p, xp=np)
 
 
 def path_loss_db(pos: np.ndarray, p: ChannelParams) -> np.ndarray:
-    """eq. (4) (negative dB = attenuation).
-
-    Printed form: -(η_l-η_n)/P_LOS - FSPL - η_n.  With Table I's values the
-    1/P_LOS division yields −200..−300 dB of *additional* loss over most of
-    the 500 m cell (median rate exactly 0 bit/s) — no experiment in Fig. 3
-    could run on that channel, so we read the term as the underlying
-    Holis–Pechac / Al-Hourani expected additional loss that [7] defines:
-    the P_LOS-weighted mix of the LOS (1 dB) and NLOS (21 dB) excess losses.
-    This calibration is recorded in DESIGN.md §2 and EXPERIMENTS.md.
-    """
-    d = np.maximum(distance(pos, p.bs_height_m), 1.0)
-    plos = p_los(elevation_deg(pos, p.bs_height_m), p)
-    fspl = 20.0 * np.log10(4.0 * np.pi * d * p.carrier_hz / C_LIGHT)
-    eta_los = min(p.eta_los_db, p.eta_nlos_db)       # LOS suffers less
-    eta_nlos = max(p.eta_los_db, p.eta_nlos_db)
-    extra = plos * eta_los + (1.0 - plos) * eta_nlos
-    return -fspl - extra
+    """eq. (4) (negative dB = attenuation; calibration notes above)."""
+    return _lib.path_loss_db(pos, p, xp=np)
 
 
 def channel_gain(pos: np.ndarray, k_db: np.ndarray, p: ChannelParams) -> np.ndarray:
     """eqs. (5)–(6): linear power gain x expected Rician amplitude (v+s)."""
-    k_lin = 10.0 ** (np.asarray(k_db) / 10.0)
-    v = np.sqrt(k_lin / (k_lin + 1.0))
-    s = np.sqrt(1.0 / (2.0 * (k_lin + 1.0)))
-    return 10.0 ** (path_loss_db(pos, p) / 10.0) * (v + s)
+    return _lib.channel_gain(pos, k_db, p, xp=np)
 
 
 def rate_bps(pos: np.ndarray, k_db: np.ndarray, p: ChannelParams,
              bandwidth_ratio: float = 1.0) -> np.ndarray:
     """eq. (7): Shannon rate in bits/s for allocated bandwidth n_i·B_uav."""
-    bw = bandwidth_ratio * p.bandwidth_uav_hz
-    noise_w = dbm_to_watt(p.noise_dbm_per_hz + 10.0 * np.log10(bw))
-    snr = channel_gain(pos, k_db, p) * dbm_to_watt(p.p_uav_dbm) / noise_w
-    return bw * np.log2(1.0 + snr)
+    return _lib.rate_bps(pos, k_db, p, bandwidth_ratio, xp=np)
 
 
 # ---------------------------------------------------------------------------
@@ -112,7 +77,13 @@ def rate_bps(pos: np.ndarray, k_db: np.ndarray, p: ChannelParams,
 
 @dataclass
 class UAVFleet:
-    """Random-flight UAVs inside the cell; channel resampled per local epoch."""
+    """Random-flight UAVs inside the cell; channel resampled per local epoch.
+
+    Host-side (numpy) twin of ``channel_lib.FleetState``: same equations and
+    transition probabilities, but stateful and driven by a
+    ``np.random.Generator`` whose draw order is a compatibility contract
+    (the fused-round equivalence tests replay it exactly).
+    """
     n: int
     params: ChannelParams = field(default_factory=ChannelParams)
     seed: int = 0
@@ -156,11 +127,12 @@ class UAVFleet:
     def outages(self) -> np.ndarray:
         """Advance the interruption chain one epoch and return the state.
 
-        stay_bad = outage_persistence; go_bad chosen so the stationary
-        marginal equals outage_prob (the paper's 30%)."""
+        Transition probabilities come from the shared
+        ``channel_lib.outage_transitions`` (go_bad clamped to [0, 1] — the
+        solved value exceeds 1 as outage_prob → 1)."""
         p = self.params
-        stay_bad = p.outage_persistence
-        go_bad = p.outage_prob * (1.0 - stay_bad) / max(1.0 - p.outage_prob, 1e-9)
+        go_bad, stay_bad = outage_transitions(p.outage_prob,
+                                              p.outage_persistence)
         u = self.rng.random(self.n)
         self._bad = np.where(self._bad, u < stay_bad, u < go_bad)
         return self._bad.copy()

@@ -1,0 +1,206 @@
+"""Backend-agnostic wireless channel core — Section II-A, eqs. (1)–(7).
+
+One implementation of the Rician/LOS channel math serves two control planes:
+
+- the **host reference** (``core/channel.py``): thin numpy wrappers around
+  these functions plus the stateful ``UAVFleet``; semantics (and the RNG
+  stream ``tests/test_fused_round.py`` pins) are unchanged.
+- the **device path** (``FleetState`` below): the same equations in pure
+  ``jnp`` with fleet mobility, per-round Rician-K resampling and the
+  Gilbert–Elliott outage chain expressed as a ``lax.scan``-able carry keyed
+  on ``jax.random`` — this is what lets a whole simulation (rounds × seeds ×
+  configs) compile to one program (``core/sweep.py``).
+
+Every equation function takes ``xp`` (numpy or jax.numpy); unit
+interpretations are documented in ``core/channel.py`` / DESIGN.md §2 and are
+identical in both backends.  The Gilbert–Elliott transition probabilities
+live here as a pure float function (``outage_transitions``) so the numpy
+chain and the jax chain cannot drift apart.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple, Tuple
+
+import numpy as np
+
+C_LIGHT = 299_792_458.0
+
+
+@dataclass
+class ChannelParams:
+    """Table I."""
+    p_uav_dbm: float = 24.0
+    noise_dbm_per_hz: float = -174.0
+    k_db_range: Tuple[float, float] = (1.8, 5.0)
+    carrier_hz: float = 2.0e9
+    bandwidth_uav_hz: float = 10.0e6
+    a0: float = 5.0188           # urban environment parameters
+    b0: float = 0.3511
+    eta_los_db: float = 21.0     # additional path loss LOS   (η_l)
+    eta_nlos_db: float = 1.0     # additional path loss NLOS  (η_n)
+    outage_prob: float = 0.30    # complete-interruption probability (Sec. IV)
+    outage_persistence: float = 0.70   # Gilbert-Elliott stay-bad per epoch
+    cell_radius_m: float = 500.0
+    bs_height_m: float = 20.0
+    uav_z_range: Tuple[float, float] = (20.0, 80.0)
+
+
+def dbm_to_watt(dbm: float) -> float:
+    return 10.0 ** (dbm / 10.0) * 1e-3
+
+
+def outage_transitions(outage_prob: float,
+                       persistence: float) -> Tuple[float, float]:
+    """Gilbert–Elliott (go_bad, stay_bad) for a target stationary marginal.
+
+    ``stay_bad`` is the persistence knob; ``go_bad`` is solved from the
+    stationary balance π_bad·(1−stay_bad) = (1−π_bad)·go_bad with
+    π_bad = outage_prob.  As ``outage_prob → 1`` the solved go_bad exceeds 1
+    (the target marginal is unreachable for the given persistence); it is
+    clamped to [0, 1] so the chain saturates at its true reachable marginal
+    instead of silently comparing uniforms against a probability > 1.
+    Shared single source of truth between the numpy ``UAVFleet`` chain and
+    the jax ``fleet_outage_step`` chain.
+    """
+    stay_bad = min(max(float(persistence), 0.0), 1.0)
+    go_bad = float(outage_prob) * (1.0 - stay_bad) \
+        / max(1.0 - float(outage_prob), 1e-9)
+    return min(max(go_bad, 0.0), 1.0), stay_bad
+
+
+# ---------------------------------------------------------------------------
+# eqs. (1)–(7), generic over the array backend (numpy / jax.numpy)
+# ---------------------------------------------------------------------------
+
+def distance(pos, bs_height: float, xp=np):
+    """eq. (1).  pos: (..., 3) UAV coordinates; BS at (0, 0, z0)."""
+    dz = pos[..., 2] - bs_height
+    return xp.sqrt(pos[..., 0] ** 2 + pos[..., 1] ** 2 + dz ** 2)
+
+
+def elevation_deg(pos, bs_height: float, xp=np):
+    """eq. (2), degrees in [0, 90)."""
+    d = xp.maximum(distance(pos, bs_height, xp), 1e-6)
+    return xp.degrees(xp.arcsin(xp.abs(pos[..., 2] - bs_height) / d))
+
+
+def p_los(theta_deg, p: ChannelParams, xp=np):
+    """eq. (3)."""
+    return 1.0 / (1.0 + p.a0 * xp.exp(-p.b0 * (theta_deg - p.a0)))
+
+
+def path_loss_db(pos, p: ChannelParams, xp=np):
+    """eq. (4) (negative dB = attenuation): standard Friis FSPL plus the
+    P_LOS-weighted Holis–Pechac expected additional loss (calibration
+    recorded in DESIGN.md §2 / core/channel.py)."""
+    d = xp.maximum(distance(pos, p.bs_height_m, xp), 1.0)
+    plos = p_los(elevation_deg(pos, p.bs_height_m, xp), p, xp)
+    fspl = 20.0 * xp.log10(4.0 * np.pi * d * p.carrier_hz / C_LIGHT)
+    eta_los = min(p.eta_los_db, p.eta_nlos_db)       # LOS suffers less
+    eta_nlos = max(p.eta_los_db, p.eta_nlos_db)
+    extra = plos * eta_los + (1.0 - plos) * eta_nlos
+    return -fspl - extra
+
+
+def channel_gain(pos, k_db, p: ChannelParams, xp=np):
+    """eqs. (5)–(6): linear power gain x expected Rician amplitude (v+s)."""
+    k_lin = 10.0 ** (xp.asarray(k_db) / 10.0)
+    v = xp.sqrt(k_lin / (k_lin + 1.0))
+    s = xp.sqrt(1.0 / (2.0 * (k_lin + 1.0)))
+    return 10.0 ** (path_loss_db(pos, p, xp) / 10.0) * (v + s)
+
+
+def rate_bps(pos, k_db, p: ChannelParams, bandwidth_ratio=1.0, xp=np):
+    """eq. (7): Shannon rate in bits/s for allocated bandwidth n_i·B_uav.
+
+    ``bandwidth_ratio`` may be a traced scalar under jax (a sweep axis)."""
+    bw = bandwidth_ratio * p.bandwidth_uav_hz
+    noise_w = dbm_to_watt(p.noise_dbm_per_hz + 10.0 * xp.log10(bw))
+    snr = channel_gain(pos, k_db, p, xp) * dbm_to_watt(p.p_uav_dbm) / noise_w
+    return bw * xp.log2(1.0 + snr)
+
+
+# ---------------------------------------------------------------------------
+# Device-side fleet: mobility + fading + outage chain as a scan-able carry
+# ---------------------------------------------------------------------------
+
+class FleetState(NamedTuple):
+    """On-device UAV fleet state (Section IV dynamics).
+
+    All leaves are device arrays, so a whole simulation can carry the fleet
+    through ``lax.scan`` without host round trips; ``key`` is the fleet's
+    private ``jax.random`` stream (split-and-consume per transition).  Note
+    this stream is *not* the numpy ``UAVFleet`` stream — seeded device runs
+    are self-consistent but not bit-identical to the host reference
+    (EXPERIMENTS.md, "on-device RNG").
+    """
+    pos: "jnp.ndarray"      # (N, 3) UAV coordinates
+    k_db: "jnp.ndarray"     # (N,) Rician factor, dB
+    bad: "jnp.ndarray"      # (N,) bool Gilbert–Elliott outage state
+    key: "jnp.ndarray"      # fleet PRNG key
+
+
+def _jnp():
+    import jax.numpy as jnp
+    return jnp
+
+
+def fleet_init(key, n: int, p: ChannelParams) -> FleetState:
+    """Mirror of ``UAVFleet.__post_init__``: uniform-in-disk xy, uniform z,
+    uniform K, outage state seeded at the stationary marginal."""
+    import jax
+    jnp = _jnp()
+    kr, ka, kz, kk, kb, key = jax.random.split(key, 6)
+    r = p.cell_radius_m * jnp.sqrt(jax.random.uniform(kr, (n,)))
+    ang = jax.random.uniform(ka, (n,)) * 2.0 * np.pi
+    z = jax.random.uniform(kz, (n,), minval=p.uav_z_range[0],
+                           maxval=p.uav_z_range[1])
+    pos = jnp.stack([r * jnp.cos(ang), r * jnp.sin(ang), z], axis=-1)
+    k_db = jax.random.uniform(kk, (n,), minval=p.k_db_range[0],
+                              maxval=p.k_db_range[1])
+    bad = jax.random.uniform(kb, (n,)) < p.outage_prob
+    return FleetState(pos=pos, k_db=k_db, bad=bad, key=key)
+
+
+def fleet_resample_fading(state: FleetState, p: ChannelParams) -> FleetState:
+    """New Rician K per local training round (Sec. IV)."""
+    import jax
+    kk, key = jax.random.split(state.key)
+    k_db = jax.random.uniform(kk, state.k_db.shape, minval=p.k_db_range[0],
+                              maxval=p.k_db_range[1])
+    return state._replace(k_db=k_db, key=key)
+
+
+def fleet_move(state: FleetState, p: ChannelParams, speed_mps: float,
+               dt: float) -> FleetState:
+    """Random-direction step, reflected into the cell (per local epoch)."""
+    import jax
+    jnp = _jnp()
+    ks, key = jax.random.split(state.key)
+    step = jax.random.normal(ks, state.pos.shape)
+    step = step / jnp.maximum(
+        jnp.linalg.norm(step, axis=-1, keepdims=True), 1e-9)
+    pos = state.pos + step * speed_mps * dt
+    rad = jnp.maximum(jnp.linalg.norm(pos[:, :2], axis=-1), 1e-9)
+    scale = jnp.where(rad > p.cell_radius_m, p.cell_radius_m / rad, 1.0)
+    pos = pos.at[:, :2].multiply(scale[:, None])
+    pos = pos.at[:, 2].set(jnp.clip(pos[:, 2], *p.uav_z_range))
+    return state._replace(pos=pos, key=key)
+
+
+def fleet_outage_step(state: FleetState, p: ChannelParams):
+    """Advance the Gilbert–Elliott chain one epoch; returns (state, bad)."""
+    import jax
+    jnp = _jnp()
+    go_bad, stay_bad = outage_transitions(p.outage_prob, p.outage_persistence)
+    ku, key = jax.random.split(state.key)
+    u = jax.random.uniform(ku, state.bad.shape)
+    bad = jnp.where(state.bad, u < stay_bad, u < go_bad)
+    return state._replace(bad=bad, key=key), bad
+
+
+def fleet_rates(state: FleetState, p: ChannelParams,
+                bandwidth_ratio=1.0):
+    """Current per-UAV uplink rate, bits/s (eq. 7)."""
+    return rate_bps(state.pos, state.k_db, p, bandwidth_ratio, xp=_jnp())

@@ -23,27 +23,39 @@ jitted function:
     contribution carries real quantization noise and the eq. 15 payload
     uses the actual int8+scale byte count.
 
-Inputs are presampled host-side once per round (``hsfl._presample_round``):
-batch tensors of shape (e, K, steps, bs, ...) and per-epoch rate/outage
-tensors — one host→device transfer per round instead of e·K.
+Two round builders share these pieces:
 
-The probe *schedule* (Alg. 2 line 12 / the manual override of Sec. III-B) is
-static per configuration, so probes are compiled only at scheduled epoch
-boundaries; everything data-dependent (outages, τ budget, arrival, rescue,
-staleness) stays branch-free on-device.
+- ``build_fused_round`` — inputs presampled host-side once per round
+  (``hsfl._presample_round``): batch tensors of shape (e, K, steps, bs, ...)
+  and per-epoch rate/outage tensors, one host→device transfer per round
+  instead of e·K.  The probe *schedule* (Alg. 2 line 12 / the manual
+  override of Sec. III-B) is static per configuration, so probes are
+  compiled only at scheduled epoch boundaries; everything data-dependent
+  (outages, τ budget, arrival, rescue, staleness) stays branch-free
+  on-device.  This path replays the host numpy RNG streams bit-for-bit
+  (the fused-vs-host equivalence contract).
+- ``build_device_round`` — the whole control plane on-device: channel/
+  mobility from a ``channel_lib.FleetState`` carry, greedy selection via
+  ``selection.select_users_jax``, batches gathered in-program, epochs
+  scanned, eval in-program.  This is the round the sweep engine
+  (``core/sweep``) chains with ``lax.scan`` and vmaps over seeds/configs.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple, Tuple
+from typing import Any, Callable, Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.channel_lib import (ChannelParams, FleetState,
+                                    fleet_move, fleet_outage_step,
+                                    fleet_rates, fleet_resample_fading)
 from repro.core.opportunistic_sync import snapshot_decision
+from repro.core.selection import select_users_jax
 from repro.kernels.delta_codec.kernel import dequantize_blocks, quantize_blocks
 from repro.kernels.delta_codec.ops import stacked_flatten, stacked_unflatten
 from repro.models import cnn as cnn_mod
-from repro.training.loss import cross_entropy
+from repro.training.loss import accuracy, cross_entropy
 
 
 class RoundStats(NamedTuple):
@@ -75,6 +87,66 @@ def _masked_mean(contrib, weights, fallback):
         contrib, fallback)
 
 
+def _make_epoch_fn(fwd: Callable, lr: float) -> Callable:
+    """One local epoch for one user: scan of SGD steps (Alg. 1 l. 8)."""
+    def epoch_fn(params, xs, ys):
+        def step(p, batch):
+            bx, by = batch
+
+            def loss(q):
+                return cross_entropy(fwd(q, bx), by)
+
+            g = jax.grad(loss)(p)
+            p = jax.tree_util.tree_map(lambda w, gg: w - lr * gg, p, g)
+            return p, ()
+
+        params, _ = jax.lax.scan(step, params, (xs, ys))
+        return params
+
+    return epoch_fn
+
+
+def _sync_aggregate(scheme: str, params, stacked, snap_tree, has_snap,
+                    arrived):
+    """opt/discard aggregation: masked mean over finals (+ rescues)."""
+    if scheme == "opt":
+        rescued = (~arrived) & has_snap
+        contrib = _tree_where_k(arrived, stacked, snap_tree)
+        weights = (arrived | rescued).astype(jnp.float32)
+    else:
+        rescued = jnp.zeros_like(arrived)
+        contrib = stacked
+        weights = arrived.astype(jnp.float32)
+    return _masked_mean(contrib, weights, params), rescued
+
+
+def _async_merge(params, stacked, delayed_stack, delayed_mask, arrived,
+                 aw: float, k_carry: int):
+    """Async aggregation: timely finals at weight 1, prior-round stragglers
+    at α(s+1)^(−a); a round with only stragglers falls back to the
+    sequential FedAsync server merge (never a full replace)."""
+    w_t = arrived.astype(jnp.float32)                      # (K,)
+    w_d = delayed_mask.astype(jnp.float32) * aw            # (k_carry,)
+    n_arr = jnp.sum(w_t)
+    total = n_arr + jnp.sum(w_d)
+    mixed = jax.tree_util.tree_map(
+        lambda s, d, p: jnp.where(
+            total > 0,
+            (jnp.sum(s * _kx(w_t, s), axis=0)
+             + jnp.sum(d * _kx(w_d, d), axis=0))
+            / jnp.maximum(total, 1e-9), p),
+        stacked, delayed_stack, params)
+
+    seq = params
+    for i in range(k_carry):          # static unroll; k_carry is small
+        seq = jax.tree_util.tree_map(
+            lambda acc, d: jnp.where(delayed_mask[i],
+                                     (1.0 - aw) * acc + aw * d[i], acc),
+            seq, delayed_stack)
+    return jax.tree_util.tree_map(
+        lambda a, b: jnp.where(n_arr > 0, a, b), mixed, seq)
+
+
 def build_fused_round(*, scheme: str, local_epochs: int, steps_per_epoch: int,
                       lr: float, tau_max: float, probe_epochs: Tuple[int, ...],
                       async_weight: float = 0.0, use_codec: bool = False,
@@ -94,22 +166,7 @@ def build_fused_round(*, scheme: str, local_epochs: int, steps_per_epoch: int,
     if scheme not in ("opt", "discard", "async"):
         raise ValueError(scheme)
 
-    def epoch_fn(params, xs, ys):
-        """One local epoch for one user: scan of SGD steps (Alg. 1 l. 8)."""
-        def step(p, batch):
-            bx, by = batch
-
-            def loss(q):
-                return cross_entropy(fwd(q, bx), by)
-
-            g = jax.grad(loss)(p)
-            p = jax.tree_util.tree_map(lambda w, gg: w - lr * gg, p, g)
-            return p, ()
-
-        params, _ = jax.lax.scan(step, params, (xs, ys))
-        return params
-
-    epoch_all = jax.vmap(epoch_fn)
+    epoch_all = jax.vmap(_make_epoch_fn(fwd, lr))
 
     def _encode(stacked, params):
         delta = jax.tree_util.tree_map(lambda s, p: s - p[None],
@@ -175,19 +232,12 @@ def build_fused_round(*, scheme: str, local_epochs: int, steps_per_epoch: int,
 
     def _round_sync(params, stacked, snap, has_snap, arrived, chan):
         """opt/discard aggregation: masked mean over finals (+ rescues)."""
-        if scheme == "opt":
-            rescued = chan["valid"] & (~arrived) & has_snap
-            if use_codec:
-                snap_tree = _decode(snap[0], snap[1], stacked, params)
-            else:
-                snap_tree = snap
-            contrib = _tree_where_k(arrived, stacked, snap_tree)
-            weights = (arrived | rescued).astype(jnp.float32)
+        if scheme == "opt" and use_codec:
+            snap_tree = _decode(snap[0], snap[1], stacked, params)
         else:
-            rescued = jnp.zeros_like(arrived)
-            contrib = stacked
-            weights = arrived.astype(jnp.float32)
-        return _masked_mean(contrib, weights, params), rescued
+            snap_tree = snap
+        return _sync_aggregate(scheme, params, stacked, snap_tree,
+                               has_snap, arrived)
 
     if scheme in ("opt", "discard"):
 
@@ -213,27 +263,8 @@ def build_fused_round(*, scheme: str, local_epochs: int, steps_per_epoch: int,
         stacked, _, _, nsent = _train_and_probe(params, xs, ys, chan)
         arrived = _final_arrival(chan)
         delayed_new = chan["valid"] & ~arrived
-
-        w_t = arrived.astype(jnp.float32)                      # (K,)
-        w_d = delayed_mask.astype(jnp.float32) * aw            # (k_carry,)
-        n_arr = jnp.sum(w_t)
-        total = n_arr + jnp.sum(w_d)
-        mixed = jax.tree_util.tree_map(
-            lambda s, d, p: jnp.where(
-                total > 0,
-                (jnp.sum(s * _kx(w_t, s), axis=0)
-                 + jnp.sum(d * _kx(w_d, d), axis=0))
-                / jnp.maximum(total, 1e-9), p),
-            stacked, delayed_stack, params)
-
-        seq = params
-        for i in range(k_carry):          # static unroll; k_carry is small
-            seq = jax.tree_util.tree_map(
-                lambda acc, d: jnp.where(delayed_mask[i],
-                                         (1.0 - aw) * acc + aw * d[i], acc),
-                seq, delayed_stack)
-        new_params = jax.tree_util.tree_map(
-            lambda a, b: jnp.where(n_arr > 0, a, b), mixed, seq)
+        new_params = _async_merge(params, stacked, delayed_stack,
+                                  delayed_mask, arrived, aw, k_carry)
 
         # next-round carry, padded to the fixed k_carry width
         k = chan["valid"].shape[0]
@@ -248,3 +279,207 @@ def build_fused_round(*, scheme: str, local_epochs: int, steps_per_epoch: int,
                 RoundStats(arrived, rescued, delayed_new, dropped, nsent))
 
     return jax.jit(round_fn)
+
+
+# ---------------------------------------------------------------------------
+# Fully on-device round: FleetState carry, channel realized in-program
+# ---------------------------------------------------------------------------
+
+class DeviceSimCarry(NamedTuple):
+    """lax.scan carry for a whole simulation (core/sweep.py).
+
+    ``delayed``/``delayed_mask`` are the async straggler carry; for
+    opt/discard they ride along untouched (zeros) so every scheme scans with
+    one carry structure."""
+    params: Any
+    fleet: FleetState
+    delayed: Any             # stacked (K, ...) params pytree
+    delayed_mask: jnp.ndarray   # (K,) bool
+
+
+class DeviceRoundMetrics(NamedTuple):
+    """Per-round scalars, device-resident until the sweep finishes."""
+    selected: jnp.ndarray    # int32 — users scheduled this round
+    arrived: jnp.ndarray     # int32 — finals that made it (Alg. 2 l. 14)
+    rescued: jnp.ndarray     # int32 — snapshot substitutions
+    delayed: jnp.ndarray     # int32 — carried to next round (async)
+    dropped: jnp.ndarray     # int32 — contributed nothing
+    bytes_sent: jnp.ndarray  # float32 — uplink bytes this round
+    test_loss: jnp.ndarray   # float32
+    test_acc: jnp.ndarray    # float32
+
+
+def probe_schedule_mask(e_t: int, local_epochs: int, b) -> jnp.ndarray:
+    """``transmission.scheduled_epochs`` membership with a *traced* budget.
+
+    The host schedule is {k·period : 1 ≤ k ≤ b−1, k·period < e} with
+    period = max(1, round(e/b)); that set is exactly the e_t with
+    e_t ≡ 0 (mod period), e_t < e and e_t ≤ (b−1)·period, which this
+    evaluates branch-free so ``b`` can live on a vmapped config axis.
+    ``tests/test_sweep.py`` pins the two over an (e, b) grid.
+    """
+    bf = jnp.asarray(b, jnp.float32)
+    period = jnp.clip(jnp.round(local_epochs / jnp.maximum(bf, 1.0)),
+                      1.0, float(local_epochs))
+    et = jnp.asarray(e_t, jnp.float32)
+    return ((jnp.mod(et, period) == 0) & (et < local_epochs)
+            & (et <= (bf - 1.0) * period))
+
+
+def build_device_round(*, scheme: str, local_epochs: int,
+                       steps_per_epoch: int, batch_size: int, lr: float,
+                       k_select: int, channel: ChannelParams,
+                       model_bytes: float, ue_model_fraction: float,
+                       compress_ratio: float = 1.0,
+                       speed_mps: float = 15.0, epoch_seconds: float = 1.0,
+                       schedule_override: Tuple[int, ...] = (),
+                       async_alpha: float = 0.4, async_a: float = 0.5,
+                       max_sl: int | None = None,
+                       act_bytes_per_sample: float = 3136.0,
+                       forward: Callable = None) -> Callable:
+    """One HSFL round with the *entire* control plane on-device.
+
+    Unlike ``build_fused_round`` (which consumes host-presampled channel
+    tensors so it can replay the numpy reference stream bit-for-bit), this
+    round takes a ``channel_lib.FleetState`` in its carry and realizes fleet
+    movement, Rician rates and the Gilbert–Elliott outage chain in-program,
+    selects users with ``select_users_jax``, and gathers training batches
+    from the stacked client datasets by on-device indices — so whole
+    simulations chain under ``lax.scan`` and whole sweeps under ``vmap``
+    (core/sweep.py) with zero host round trips.
+
+    Returns ``round_fn(carry, round_key, sim, cfg) -> (carry, metrics)``:
+
+    - ``carry``: ``DeviceSimCarry`` (global params, fleet, async stragglers);
+    - ``round_key``: per-round PRNG key (batch index stream);
+    - ``sim``: per-simulation constants — ``client_x`` (N, M, ...),
+      ``client_y`` (N, M), ``client_len``/``flops``/``samples`` (N,),
+      ``test_x``/``test_y``;
+    - ``cfg``: traced scalars ``b``/``tau_max``/``bandwidth_ratio`` — the
+      vmappable config axes of a sweep.
+
+    RNG streams (fleet state + batch indices) are jax.random, not the host
+    numpy generators: device runs are seeded and self-consistent but not
+    bit-identical to the host reference (see EXPERIMENTS.md).
+    """
+    fwd = forward or cnn_mod.forward_im2col
+    if scheme not in ("opt", "discard", "async"):
+        raise ValueError(scheme)
+    epoch_all = jax.vmap(_make_epoch_fn(fwd, lr))
+    aw = float(async_alpha) * 2.0 ** (-float(async_a))
+    ue_bytes = model_bytes * ue_model_fraction
+    K = k_select
+    p = channel
+
+    def round_fn(carry: DeviceSimCarry, rkey, sim: Dict[str, Any],
+                 cfg: Dict[str, Any]):
+        params, fleet = carry.params, carry.fleet
+        b, tau_max = cfg["b"], cfg["tau_max"]
+        bw = cfg.get("bandwidth_ratio", 1.0)
+
+        # -- schedule (Alg. 1 l. 3-5): fresh fading, greedy selection -------
+        fleet = fleet_resample_fading(fleet, p)
+        rates0 = fleet_rates(fleet, p, bw)
+        sel, mode_sl, valid, n_taken, tt_fl, tt_sl = select_users_jax(
+            rates0, sim["flops"], sim["samples"], b=b, tau_max=tau_max,
+            k_select=K, model_bytes=model_bytes, ue_model_bytes=ue_bytes,
+            local_epochs=local_epochs, max_sl=max_sl,
+            act_bytes_per_sample=act_bytes_per_sample)
+        train_time = jnp.where(mode_sl, tt_sl[sel], tt_fl[sel])
+        train_time = jnp.where(valid, train_time, 1e9)
+        payload_bits = jnp.where(mode_sl, ue_bytes, model_bytes) \
+            * compress_ratio * 8.0
+        tau_extra = jnp.maximum(b - 1.0, 0.0) * payload_bits \
+            / jnp.maximum(rates0[sel], 1e-9)                   # eq. (14)
+
+        # -- local training: epochs in lockstep, channel drifts per epoch.
+        # Epochs run as a lax.scan (one compiled epoch body — measurably
+        # faster than the unrolled python loop on CPU and ~e× smaller to
+        # compile, which matters when a sweep compiles 3 scheme programs).
+        # Probes therefore run masked every epoch via probe_schedule_mask
+        # (the schedule depends on the *traced* budget b anyway).
+        stacked = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (K,) + a.shape), params)
+        clen = jnp.maximum(sim["client_len"][sel], 1)
+        xshape = sim["client_x"].shape[2:]
+        override = (jnp.asarray(schedule_override, jnp.int32)
+                    if schedule_override else None)
+
+        def epoch_body(carry_e, e_t):
+            fleet, stacked, snap, has_snap, nsent, tau_extra = carry_e
+            fleet = fleet_move(fleet, p, speed_mps, epoch_seconds)
+            rate_e = fleet_rates(fleet, p, bw)[sel]
+            fleet, bad = fleet_outage_step(fleet, p)
+            out_e = bad[sel]
+            idx = jax.random.randint(
+                jax.random.fold_in(rkey, e_t),
+                (K, steps_per_epoch * batch_size), 0, clen[:, None])
+            # one fused (user, sample) gather — never materializes the
+            # (K, M, ...) per-round client slice under a config vmap
+            xs = sim["client_x"][sel[:, None], idx].reshape(
+                (K, steps_per_epoch, batch_size) + xshape)
+            ys = sim["client_y"][sel[:, None], idx].reshape(
+                (K, steps_per_epoch, batch_size))
+            stacked = epoch_all(stacked, xs, ys)
+            if scheme == "opt":
+                if override is not None:
+                    sched = jnp.any(e_t == override)
+                else:
+                    sched = probe_schedule_mask(e_t, local_epochs, b)
+                tau = payload_bits / jnp.maximum(rate_e, 1e-9)   # eq. (15)
+                ok, tau_extra = snapshot_decision(valid & sched, out_e,
+                                                  tau, tau_extra)
+                snap = _tree_where_k(ok, stacked, snap)
+                has_snap = has_snap | ok
+                nsent = nsent + ok.astype(jnp.int32)
+            return (fleet, stacked, snap, has_snap, nsent, tau_extra), ()
+
+        carry_e = (fleet, stacked, stacked, jnp.zeros((K,), bool),
+                   jnp.zeros((K,), jnp.int32), tau_extra)
+        carry_e, _ = jax.lax.scan(epoch_body, carry_e,
+                                  jnp.arange(1, local_epochs + 1))
+        fleet, stacked, snap, has_snap, nsent, tau_extra = carry_e
+
+        # -- final upload (Alg. 2 l. 14): no extra move -----------------------
+        rate_f = fleet_rates(fleet, p, bw)[sel]
+        fleet, bad_f = fleet_outage_step(fleet, p)
+        tau_f = payload_bits / jnp.maximum(rate_f, 1e-9)
+        arrived = valid & (~bad_f[sel]) & (train_time + tau_f <= tau_max)
+
+        # -- aggregation ------------------------------------------------------
+        if scheme == "async":
+            new_params = _async_merge(params, stacked, carry.delayed,
+                                      carry.delayed_mask, arrived, aw, K)
+            delayed_new = valid & ~arrived
+            rescued = jnp.zeros_like(arrived)
+            dropped = jnp.zeros_like(arrived)
+            new_carry = DeviceSimCarry(new_params, fleet, stacked,
+                                       delayed_new)
+        else:
+            new_params, rescued = _sync_aggregate(
+                scheme, params, stacked, snap, has_snap, arrived)
+            delayed_new = jnp.zeros_like(arrived)
+            dropped = valid & ~arrived & ~rescued
+            new_carry = DeviceSimCarry(new_params, fleet, carry.delayed,
+                                       carry.delayed_mask)
+
+        # -- byte accounting + eval ------------------------------------------
+        events = nsent + arrived.astype(jnp.int32)
+        bytes_sent = jnp.sum(jnp.where(valid,
+                                       payload_bits / 8.0 * events, 0.0))
+        act = act_bytes_per_sample * sim["samples"][sel]
+        bytes_sent = bytes_sent + jnp.sum(
+            jnp.where(valid & mode_sl & (events > 0), act, 0.0))
+        logits = fwd(new_params, sim["test_x"])
+        metrics = DeviceRoundMetrics(
+            selected=n_taken,
+            arrived=jnp.sum(arrived.astype(jnp.int32)),
+            rescued=jnp.sum(rescued.astype(jnp.int32)),
+            delayed=jnp.sum(delayed_new.astype(jnp.int32)),
+            dropped=jnp.sum(dropped.astype(jnp.int32)),
+            bytes_sent=bytes_sent.astype(jnp.float32),
+            test_loss=cross_entropy(logits, sim["test_y"]),
+            test_acc=accuracy(logits, sim["test_y"]))
+        return new_carry, metrics
+
+    return round_fn

@@ -7,11 +7,19 @@ under the relaxed budget (eq. 13); a mode is feasible if its latency ≤ τ_max;
 among feasible users greedily pick the K with the best energy-per-sample
 utility, assigning each user the cheaper feasible mode (computing-limited
 UAVs land on SL exactly as HSFL intends).
+
+Two implementations of the same policy:
+
+- ``schedule_users`` — the host reference (Python objects, float64).
+- ``select_users_jax`` — the on-device port used inside the scanned sweep
+  round (``core/sweep.py``): fully vectorized, works with *traced* b/τ_max
+  so a config axis can be vmapped over it, and returns fixed-width (K,)
+  slot arrays.  ``tests/test_sweep.py`` pins the two to identical picks.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Sequence
+from typing import List, Sequence, Tuple
 
 import numpy as np
 
@@ -80,3 +88,102 @@ def schedule_users(rates0: Sequence[float],
             sl_used += mode == "SL"
             break
     return out
+
+
+# ---------------------------------------------------------------------------
+# On-device port of the same greedy (the sweep engine's per-round scheduler)
+# ---------------------------------------------------------------------------
+
+def user_latency_energy(rates0, flops, samples, *, b, model_bytes,
+                        ue_model_bytes, local_epochs,
+                        flops_per_sample=2.0e6, ue_fraction=0.4,
+                        act_bytes_per_sample=3136.0,
+                        server_flops_per_sec=1.0e12, bs_rate_bps=400e6,
+                        power_compute_w=5.0, power_tx_w=0.25, xp=np):
+    """Vectorized eqs. (9)–(13) for all N users at once.
+
+    Returns (fl_lat, sl_lat, fl_en, sl_en, tt_fl, tt_sl) — the same numbers
+    ``latency.py``'s scalar functions produce for the default
+    Device/Workload profiles, but as arrays and with ``b`` possibly traced.
+    """
+    r0 = xp.maximum(rates0, 1e-9)
+    tt_fl = local_epochs * samples * flops_per_sample / flops
+    tt_sl = local_epochs * samples * (
+        ue_fraction * flops_per_sample / flops
+        + (1.0 - ue_fraction) * flops_per_sample / server_flops_per_sec)
+    act = act_bytes_per_sample * samples
+    up_fl = b * model_bytes * 8.0 / r0
+    up_sl = (b * ue_model_bytes + act) * 8.0 / r0
+    dl_sl = (ue_model_bytes + act) * 8.0 / bs_rate_bps
+    fl_lat = tt_fl + up_fl
+    sl_lat = tt_sl + up_sl + dl_sl
+    fl_en = tt_fl * power_compute_w + up_fl * power_tx_w
+    ue_t = local_epochs * samples * ue_fraction * flops_per_sample / flops
+    sl_en = ue_t * power_compute_w + up_sl * power_tx_w
+    return fl_lat, sl_lat, fl_en, sl_en, tt_fl, tt_sl
+
+
+def select_users_jax(rates0, flops, samples, *, b, tau_max, k_select: int,
+                     model_bytes: float, ue_model_bytes: float,
+                     local_epochs: int, max_sl: int | None = None,
+                     **lat_kw) -> Tuple:
+    """``schedule_users`` as one traced program (no host round trip).
+
+    ``b``/``tau_max`` may be traced scalars (sweep config axes).  Returns
+    fixed-width slot arrays: ``sel`` (K,) int32 user indices in greedy
+    order, ``mode_sl`` (K,) bool, ``valid`` (K,) bool (slot occupied),
+    ``n_taken`` int32, ``tt_fl``/``tt_sl`` (N,) training times for reuse by
+    the round's τ accounting.  Invalid slots point at user 0 and must be
+    masked by ``valid`` downstream.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    if max_sl is None:
+        max_sl = k_select // 2
+    n = rates0.shape[0]
+    fl_lat, sl_lat, fl_en, sl_en, tt_fl, tt_sl = user_latency_energy(
+        rates0, flops, samples, b=b, model_bytes=model_bytes,
+        ue_model_bytes=ue_model_bytes, local_epochs=local_epochs,
+        xp=jnp, **lat_kw)
+
+    feas_fl = fl_lat <= tau_max
+    feas_sl = sl_lat <= tau_max
+    feas_any = feas_fl | feas_sl
+    inf = jnp.inf
+    best_en = jnp.minimum(jnp.where(feas_fl, fl_en, inf),
+                          jnp.where(feas_sl, sl_en, inf))
+    utility = jnp.where(feas_any, samples / jnp.maximum(best_en, 1e-9), -inf)
+    order = jnp.argsort(-utility, stable=True)     # host sort is stable too
+
+    # the host greedy prefers the energy-cheaper feasible mode; on an
+    # fl_en == sl_en tie it takes FL (Python's stable sort keeps the dict's
+    # FL-first insertion order), hence the strict <
+    prefer_sl = feas_sl & (~feas_fl | (sl_en < fl_en))
+
+    def body(carry, i):
+        cnt, slu = carry
+        room = cnt < k_select
+        capped = slu >= max_sl
+        take_sl = prefer_sl[i] & ~capped
+        take_fl = feas_fl[i] & (~prefer_sl[i] | capped)
+        take = room & feas_any[i] & (take_sl | take_fl)
+        take_sl = take & take_sl
+        return ((cnt + take.astype(jnp.int32),
+                 slu + take_sl.astype(jnp.int32)),
+                (take, take_sl))
+
+    (n_taken, _), (take, take_sl) = jax.lax.scan(
+        body, (jnp.int32(0), jnp.int32(0)), order)
+
+    # pack taken users (in greedy order) into K fixed slots (n may be < K)
+    rank = jnp.cumsum(take.astype(jnp.int32)) - 1
+    slot_key = jnp.where(take, rank, n + 1)
+    k_eff = min(k_select, n)
+    pick = jnp.argsort(slot_key, stable=True)[:k_eff]
+    sel = jnp.zeros((k_select,), jnp.int32).at[:k_eff].set(
+        order[pick].astype(jnp.int32))
+    mode_sl = jnp.zeros((k_select,), bool).at[:k_eff].set(take_sl[pick])
+    valid = jnp.arange(k_select) < n_taken
+    sel = jnp.where(valid, sel, 0)
+    return sel, mode_sl & valid, valid, n_taken, tt_fl, tt_sl

@@ -1,0 +1,333 @@
+"""Vectorized sweep engine — an entire Fig. 3 panel as one device program.
+
+The loop engine (``run_hsfl``) simulates one (scheme, seed, config) cell at
+a time: per round it presamples the channel host-side, dispatches one fused
+device program, and syncs stats back — so a figure grid is a Python loop of
+hundreds of host↔device round trips.  This module compiles the whole grid:
+
+  - **rounds** chain under ``lax.scan`` over ``fused_round.build_device_round``
+    (channel/mobility/outages realized on-device from a
+    ``channel_lib.FleetState`` carry; greedy selection via
+    ``selection.select_users_jax``; batches gathered on-device);
+  - **configs** (b, τ_max, bandwidth_ratio — anything the round takes as a
+    traced scalar) ride an inner ``vmap``;
+  - **sims** (seed × distribution, i.e. everything that changes the *data*)
+    ride an outer ``vmap``, and that axis is sharded over a 1-D
+    ``("sweep",)`` mesh (``launch.mesh.make_sweep_mesh`` +
+    ``sharding.rules.shard_sweep_tree``) — simulations are independent, so
+    the mesh scales them with zero collectives;
+  - **schemes** (and any other static field) group into separate compiles of
+    the same program skeleton via the ``SweepSpec`` compiler below.
+
+RNG: device runs draw channel/mobility/batch streams from ``jax.random``
+(per-sim keys derived from the seed), NOT the host ``np.random`` streams —
+a sweep is seeded and reproducible, but not bit-identical to the host
+reference engine.  Datasets, partitions, device FLOPS profiles and initial
+params ARE identical to the host runs (``hsfl.build_sim_arrays``).
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from dataclasses import dataclass, field, replace
+from typing import Any, Dict, List, Tuple
+
+import numpy as np
+
+from repro.core.hsfl import HSFLConfig, build_sim_arrays
+from repro.core.metrics import RoundLog, SimLog
+
+# Fields of HSFLConfig a sweep may vary *per traced config axis* (the inner
+# vmap).  Everything else that varies must be a sim axis (data-level: seed,
+# distribution) or a group axis (static: scheme, local_epochs, ...).
+CFG_AXES = ("b", "tau_max", "bandwidth_ratio")
+
+
+@dataclass(frozen=True)
+class SweepSpec:
+    """A declarative experiment grid (one Fig. 3 panel, typically).
+
+    ``schemes`` entries are ``"opt"`` or ``("opt", {"b": 2})`` — the dict
+    pins traced-axis values for that scheme group (Fig. 3(b) compares
+    OPT at b=2 against async/discard at b=1).  ``b``/``tau_max``/
+    ``bandwidth_ratio`` are swept as a product on the traced config axis;
+    ``seeds`` × ``distributions`` form the (sharded) simulation axis.
+    """
+    base: HSFLConfig = field(default_factory=HSFLConfig)
+    seeds: Tuple[int, ...] = (0,)
+    schemes: Tuple = ()                  # () -> (base.scheme,)
+    distributions: Tuple[str, ...] = ()  # () -> (base.distribution,)
+    b: Tuple[float, ...] = ()            # () -> (base.b,)
+    tau_max: Tuple[float, ...] = ()      # () -> (base.tau_max,)
+    bandwidth_ratio: Tuple[float, ...] = ()   # () -> (1.0,)
+
+
+@dataclass(frozen=True)
+class CompiledGroup:
+    """One jit-compilable slice of a SweepSpec: fixed statics, stacked axes."""
+    scheme: str
+    base: HSFLConfig                      # statics for this group
+    sims: Tuple[Tuple[int, str], ...]     # (seed, distribution) per sim row
+    cfgs: Tuple[Dict[str, float], ...]    # traced scalars per config column
+
+
+def compile_spec(spec: SweepSpec) -> List[CompiledGroup]:
+    """SweepSpec -> stacked-config groups (one compile each).
+
+    Schemes become groups (static control flow differs); seeds ×
+    distributions become the sim rows; the b/τ_max/bandwidth_ratio product
+    becomes the traced config columns, with per-scheme pins applied.
+    """
+    schemes = spec.schemes or (spec.base.scheme,)
+    dists = spec.distributions or (spec.base.distribution,)
+    sims = tuple(itertools.product(spec.seeds, dists))
+    groups = []
+    for entry in schemes:
+        scheme, pins = entry if isinstance(entry, tuple) else (entry, {})
+        axes = {
+            "b": spec.b or (spec.base.b,),
+            "tau_max": spec.tau_max or (spec.base.tau_max,),
+            "bandwidth_ratio": spec.bandwidth_ratio or (1.0,),
+        }
+        for k, v in pins.items():         # pins win, even over swept axes
+            if k not in CFG_AXES:
+                raise ValueError(f"scheme pin {k!r} is not a traced axis "
+                                 f"{CFG_AXES}")
+            axes[k] = (v,)
+        cfgs = tuple({"b": float(b), "tau_max": float(t),
+                      "bandwidth_ratio": float(w)}
+                     for b, t, w in itertools.product(*axes.values()))
+        groups.append(CompiledGroup(
+            scheme=scheme,
+            base=replace(spec.base, scheme=scheme,
+                         b=int(max(1, round(cfgs[0]["b"])))),
+            sims=sims, cfgs=cfgs))
+    return groups
+
+
+# ---------------------------------------------------------------------------
+# engine
+# ---------------------------------------------------------------------------
+
+def _stack_sims(group: CompiledGroup) -> Dict[str, np.ndarray]:
+    """Build + stack per-sim constant arrays, padded to a common length."""
+    per_sim = []
+    for seed, dist in group.sims:
+        cfg = replace(group.base, seed=seed, distribution=dist)
+        per_sim.append(build_sim_arrays(cfg))
+    m = max(a["client_x"].shape[1] for a in per_sim)
+    for a in per_sim:
+        pad = m - a["client_x"].shape[1]
+        if pad:
+            a["client_x"] = np.pad(
+                a["client_x"],
+                ((0, 0), (0, pad)) + ((0, 0),) * (a["client_x"].ndim - 2))
+            a["client_y"] = np.pad(a["client_y"], ((0, 0), (0, pad)))
+    return {k: np.stack([a[k] for a in per_sim]) for k in per_sim[0]}
+
+
+def _build_group_fn(group: CompiledGroup):
+    """jit(vmap_sims(vmap_cfgs(scan_rounds(device_round))))."""
+    import jax
+
+    from repro.core.fused_round import build_device_round
+
+    base = group.base
+    round_fn = build_device_round(
+        scheme=group.scheme, local_epochs=base.local_epochs,
+        steps_per_epoch=base.steps_per_epoch, batch_size=base.batch_size,
+        lr=base.lr, k_select=base.k_select, channel=base.channel,
+        model_bytes=base.model_bytes,
+        ue_model_fraction=base.ue_model_fraction,
+        compress_ratio=base.compress_ratio,
+        schedule_override=tuple(base.schedule_override),
+        async_alpha=base.async_alpha, async_a=base.async_a)
+
+    def sim_one(carry0, round_keys, sim, cfgv):
+        def body(c, k):
+            return round_fn(c, k, sim, cfgv)
+
+        _, metrics = jax.lax.scan(body, carry0, round_keys)
+        return metrics                        # (rounds,) per field
+
+    over_cfg = jax.vmap(sim_one, in_axes=(None, None, None, 0))
+    over_sim = jax.vmap(over_cfg, in_axes=(0, 0, 0, None))
+    return jax.jit(over_sim)
+
+
+def _group_inputs(group: CompiledGroup, rounds: int):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.channel_lib import fleet_init
+    from repro.core.fused_round import DeviceSimCarry
+    from repro.models import cnn as cnn_mod
+
+    base = group.base
+    data = {k: jnp.asarray(v) for k, v in _stack_sims(group).items()}
+
+    params0, fleets, rkeys = [], [], []
+    for seed, _ in group.sims:
+        params0.append(cnn_mod.init_cnn(jax.random.PRNGKey(seed)))
+        fleets.append(jax.random.PRNGKey(seed + 1))
+        rkeys.append(jax.random.split(
+            jax.random.fold_in(jax.random.PRNGKey(seed), 2), rounds))
+    params0 = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *params0)
+    fleet0 = jax.vmap(
+        lambda k: fleet_init(k, base.n_uavs, base.channel))(
+            jnp.stack(fleets))
+    round_keys = jnp.stack(rkeys)             # (S, rounds, key)
+
+    k = base.k_select
+    zstack = jax.tree_util.tree_map(
+        lambda a: jnp.zeros((a.shape[0], k) + a.shape[1:], a.dtype), params0)
+    carry0 = DeviceSimCarry(
+        params=params0, fleet=fleet0, delayed=zstack,
+        delayed_mask=jnp.zeros((len(group.sims), k), bool))
+    cfg_stack = {key: jnp.asarray([c[key] for c in group.cfgs], jnp.float32)
+                 for key in CFG_AXES}
+    return carry0, round_keys, data, cfg_stack
+
+
+@dataclass
+class GroupResult:
+    scheme: str
+    sims: Tuple[Tuple[int, str], ...]
+    cfgs: Tuple[Dict[str, float], ...]
+    metrics: Dict[str, np.ndarray]        # each (S, C, rounds)
+    compile_s: float = 0.0
+    run_s: float = 0.0
+
+    def sim_log(self, sim_i: int, cfg_i: int) -> SimLog:
+        """Rebuild the loop engine's SimLog for one (sim, config) cell."""
+        log = SimLog()
+        m = self.metrics
+        for t in range(m["test_acc"].shape[-1]):
+            log.add(RoundLog(
+                round=t + 1,
+                selected=int(m["selected"][sim_i, cfg_i, t]),
+                arrived_final=int(m["arrived"][sim_i, cfg_i, t]),
+                used_snapshot=int(m["rescued"][sim_i, cfg_i, t]),
+                dropped=int(m["dropped"][sim_i, cfg_i, t]),
+                delayed=int(m["delayed"][sim_i, cfg_i, t]),
+                bytes_sent=float(m["bytes_sent"][sim_i, cfg_i, t]),
+                test_loss=float(m["test_loss"][sim_i, cfg_i, t]),
+                test_acc=float(m["test_acc"][sim_i, cfg_i, t])))
+        return log
+
+
+@dataclass
+class SweepResult:
+    groups: List[GroupResult]
+    rounds: int
+    wall_s: float = 0.0
+
+    @property
+    def n_simulations(self) -> int:
+        return sum(len(g.sims) * len(g.cfgs) for g in self.groups)
+
+
+def run_sweep(spec: SweepSpec, mesh: Any = "auto", verbose: bool = False,
+              timeit: bool = False) -> SweepResult:
+    """Execute a SweepSpec: one compiled program per scheme group.
+
+    ``mesh="auto"`` builds a ``("sweep",)`` mesh over all local devices when
+    there is more than one and shards the stacked-simulation axis over it
+    (inputs placed via ``sharding.rules.shard_sweep_tree``; XLA propagates
+    the sharding through scan/vmap).  Pass ``mesh=None`` to force
+    single-device, or an explicit 1-D ``("sweep",)`` mesh.
+
+    ``timeit=True`` executes each group twice so ``run_s`` is the
+    steady-state (compile-free) figure the benchmarks record; the default
+    single execution folds compile time into ``run_s``.
+    """
+    import jax
+
+    from repro.sharding.rules import shard_sweep_tree
+
+    if mesh == "auto":
+        if len(jax.devices()) > 1:
+            from repro.launch.mesh import make_sweep_mesh
+            mesh = make_sweep_mesh()
+        else:
+            mesh = None
+
+    rounds = spec.base.rounds
+    t_all = time.time()
+    out = []
+    for group in compile_spec(spec):
+        fn = _build_group_fn(group)
+        carry0, round_keys, data, cfg_stack = _group_inputs(group, rounds)
+        n_sims = len(group.sims)
+        carry0 = shard_sweep_tree(mesh, carry0, n_sims)
+        round_keys = shard_sweep_tree(mesh, round_keys, n_sims)
+        data = shard_sweep_tree(mesh, data, n_sims)
+
+        t0 = time.time()
+        metrics = fn(carry0, round_keys, data, cfg_stack)
+        jax.block_until_ready(metrics)
+        t1 = time.time()
+        compile_s, run_s = 0.0, t1 - t0
+        if timeit:
+            metrics = fn(carry0, round_keys, data, cfg_stack)
+            jax.block_until_ready(metrics)
+            run_s = time.time() - t1
+            compile_s = max(0.0, (t1 - t0) - run_s)
+        out.append(GroupResult(
+            scheme=group.scheme, sims=group.sims, cfgs=group.cfgs,
+            metrics={k: np.asarray(v)
+                     for k, v in metrics._asdict().items()},
+            compile_s=round(compile_s, 3), run_s=round(run_s, 3)))
+        if verbose:
+            accs = out[-1].metrics["test_acc"][..., -1]
+            print(f"[sweep/{group.scheme}] sims={n_sims} "
+                  f"cfgs={len(group.cfgs)} rounds={rounds} "
+                  f"run={out[-1].run_s:.2f}s final_acc={accs.mean():.4f}")
+    return SweepResult(groups=out, rounds=rounds,
+                       wall_s=round(time.time() - t_all, 3))
+
+
+def run_hsfl_on_device(cfg: HSFLConfig, mesh: Any = None) -> SimLog:
+    """Single-simulation convenience wrapper over the sweep engine —
+    ``run_hsfl`` with the whole control plane on-device (its own RNG
+    stream; see module docstring)."""
+    spec = SweepSpec(base=cfg, seeds=(cfg.seed,))
+    res = run_sweep(spec, mesh=mesh)
+    return res.groups[0].sim_log(0, 0)
+
+
+# ---------------------------------------------------------------------------
+# Fig. 3 panels as SweepSpecs (the grid benchmarks/paper_experiments runs)
+# ---------------------------------------------------------------------------
+
+def fig3a_spec(rounds: int = 60, seeds=(0, 1), **base_kw) -> List[SweepSpec]:
+    """Fig. 3(a): OPT (b=2) vs discard across iid/non-iid/imbalanced.
+    Distributions are a *data* axis, so they stack on the sim axis."""
+    base = HSFLConfig(rounds=rounds, **base_kw)
+    dists = ("iid", "noniid", "imbalanced")
+    return [SweepSpec(base=base, seeds=tuple(seeds), distributions=dists,
+                      schemes=(("opt", {"b": 2.0}),
+                               ("discard", {"b": 1.0})))]
+
+
+def fig3b_spec(rounds: int = 60, seeds=(0, 1), **base_kw) -> List[SweepSpec]:
+    """Fig. 3(b): OPT-HSFL vs Async-HSFL vs discard on non-iid."""
+    base = HSFLConfig(rounds=rounds, **base_kw)
+    return [SweepSpec(base=base, seeds=tuple(seeds),
+                      schemes=(("opt", {"b": 2.0}),
+                               ("async", {"b": 1.0}),
+                               ("discard", {"b": 1.0})))]
+
+
+def fig3c_spec(rounds: int = 60, seeds=(0,), **base_kw) -> List[SweepSpec]:
+    """Fig. 3(c): budget sweep — b rides the traced config axis."""
+    base = HSFLConfig(rounds=rounds, scheme="opt", **base_kw)
+    return [SweepSpec(base=base, seeds=tuple(seeds),
+                      b=(1.0, 2.0, 3.0, 4.0, 5.0, 6.0))]
+
+
+def fig3d_spec(rounds: int = 60, seeds=(0,), **base_kw) -> List[SweepSpec]:
+    """Fig. 3(d): τ_max sweep — the latency cliff on the config axis."""
+    base = HSFLConfig(rounds=rounds, scheme="opt", b=2, **base_kw)
+    return [SweepSpec(base=base, seeds=tuple(seeds),
+                      tau_max=(7.0, 8.0, 9.0, 10.0, 11.0))]

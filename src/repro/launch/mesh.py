@@ -17,6 +17,20 @@ def make_debug_mesh(n_pods: int = 2, n_data: int = 2, n_model: int = 2):
     return jax.make_mesh((n_pods, n_data, n_model), ("pod", "data", "model"))
 
 
+def make_sweep_mesh(n_devices: int | None = None):
+    """1-D ``("sweep",)`` mesh over the available devices.
+
+    The sweep engine (core/sweep.py) shards the stacked simulation axis
+    (seeds × data variants) of a Fig. 3 grid over this axis; each device
+    then runs its slice of independent simulations with no cross-device
+    collectives (embarrassingly parallel — the ideal mesh axis).
+    """
+    devs = jax.devices()
+    if n_devices is not None:
+        devs = devs[:n_devices]
+    return jax.make_mesh((len(devs),), ("sweep",), devices=devs)
+
+
 # TPU v5e hardware constants for the roofline (per chip)
 PEAK_FLOPS_BF16 = 197e12          # FLOP/s
 HBM_BW = 819e9                    # bytes/s

@@ -195,3 +195,37 @@ def logits_spec(multi_pod: bool, batch: int) -> P:
     if batch % n == 0 and batch > 1:
         return P(b_ax, None, MODEL)
     return P(None, None, MODEL)
+
+
+# ---------------------------------------------------------------------------
+# sweep engine (core/sweep.py): stacked-simulation axis over a 1-D mesh
+# ---------------------------------------------------------------------------
+
+SWEEP = "sweep"
+
+
+def sweep_leading_spec(ndim: int) -> P:
+    """Shard the leading (simulation) axis over ``sweep``; replicate rest."""
+    return P(SWEEP, *([None] * (ndim - 1)))
+
+
+def shard_sweep_tree(mesh, tree: Any, n_sims: int) -> Any:
+    """Place every leaf of a stacked-simulation pytree on ``mesh``.
+
+    Leaves whose leading dim is the simulation axis get
+    ``P("sweep", None, ...)``; when ``n_sims`` doesn't divide the mesh (or
+    ``mesh`` is None) the tree is returned as-is (replicated), so callers
+    never have to special-case single-device runs.
+    """
+    if mesh is None or n_sims % mesh.shape[SWEEP] != 0:
+        return tree
+    from jax.sharding import NamedSharding
+
+    def put(leaf):
+        nd = np.ndim(leaf)
+        if nd == 0:
+            return leaf
+        return jax.device_put(leaf, NamedSharding(mesh,
+                                                  sweep_leading_spec(nd)))
+
+    return jax.tree_util.tree_map(put, tree)

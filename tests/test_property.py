@@ -9,6 +9,7 @@ hypothesis = pytest.importorskip(
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
+from repro.core import channel_lib as cl
 from repro.core.aggregation import fedavg, fedasync_weight
 from repro.core.latency import extra_allowance, snapshot_delay
 from repro.core.transmission import OppTransmitter, scheduled_epochs
@@ -84,3 +85,26 @@ def test_codec_error_bounded_by_half_scale(scale, seed):
 def test_snapshot_delay_monotone_in_rate(m, r1, r2):
     lo, hi = min(r1, r2), max(r1, r2)
     assert snapshot_delay(m, hi) <= snapshot_delay(m, lo)
+
+
+@given(x=st.floats(-500, 500), y=st.floats(-500, 500), z=st.floats(20, 80),
+       k_db=st.floats(1.8, 5.0))
+@settings(**SETTINGS)
+def test_numpy_jax_channel_core_agree(x, y, z, k_db):
+    """The jax binding of channel_lib (the sweep engine's channel) matches
+    the numpy host reference pointwise over the cell's position/K ranges."""
+    pos = np.array([[x, y, z]])
+    k = np.array([k_db])
+    host = rate_bps(pos, k, ChannelParams())
+    dev = np.asarray(cl.rate_bps(jnp.asarray(pos, jnp.float32),
+                                 jnp.asarray(k, jnp.float32),
+                                 ChannelParams(), xp=jnp))
+    assert np.isfinite(dev[0]) and dev[0] >= 0
+    np.testing.assert_allclose(dev, host, rtol=5e-4)
+
+
+@given(prob=st.floats(0.0, 1.0), pers=st.floats(0.0, 1.0))
+@settings(**SETTINGS)
+def test_outage_transitions_are_probabilities(prob, pers):
+    go, stay = cl.outage_transitions(prob, pers)
+    assert 0.0 <= go <= 1.0 and 0.0 <= stay <= 1.0

@@ -1,0 +1,174 @@
+"""Sweep engine tests (core/sweep + the on-device round's control plane).
+
+Device runs use their own jax.random streams, so trajectories are not
+bit-compared against the host reference; instead the *deterministic* parts
+of the control plane are pinned exactly (greedy selection port, probe
+schedule mask) and the stochastic engine is checked for invariants,
+reproducibility and mesh-sharding consistency.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import latency as lat
+from repro.core.fused_round import probe_schedule_mask
+from repro.core.hsfl import HSFLConfig, build_sim_arrays
+from repro.core.selection import schedule_users, select_users_jax
+from repro.core.sweep import (SweepSpec, compile_spec, run_hsfl_on_device,
+                              run_sweep)
+from repro.core.transmission import scheduled_epochs
+
+
+def tiny_base(**kw):
+    base = dict(rounds=2, n_uavs=8, k_select=4, n_train=400, n_test=100,
+                steps_per_epoch=2, local_epochs=4)
+    base.update(kw)
+    return HSFLConfig(**base)
+
+
+# -- deterministic control-plane ports pinned to the host reference ----------
+
+def test_probe_schedule_mask_matches_scheduled_epochs():
+    for e in (2, 3, 4, 6, 8, 12):
+        for b in range(1, 9):
+            want = set(scheduled_epochs(e, b))
+            got = {e_t for e_t in range(1, e + 1)
+                   if bool(probe_schedule_mask(e_t, e, float(b)))}
+            assert got == want, (e, b, got, want)
+
+
+def test_select_users_jax_matches_host_greedy():
+    rng = np.random.default_rng(0)
+    for trial in range(12):
+        n = int(rng.integers(3, 25))
+        k = int(rng.integers(2, 9))
+        b = int(rng.integers(1, 5))
+        tau = float(rng.uniform(6, 12))
+        rates0 = rng.uniform(1e6, 1e8, n)
+        flops = rng.uniform(0.8e8, 4e8, n)
+        samples = rng.integers(50, 400, n)
+        devices = [lat.DeviceProfile(flops_per_sec=float(f)) for f in flops]
+        wls = [lat.WorkloadProfile(local_epochs=6, samples=int(s))
+               for s in samples]
+        host = schedule_users(rates0, devices, wls, 10e6, 2.5e6, b, tau, k)
+        sel, mode_sl, valid, n_taken, _, _ = select_users_jax(
+            jnp.asarray(rates0, jnp.float32), jnp.asarray(flops, jnp.float32),
+            jnp.asarray(samples, jnp.float32), b=jnp.float32(b),
+            tau_max=jnp.float32(tau), k_select=k, model_bytes=10e6,
+            ue_model_bytes=2.5e6, local_epochs=6)
+        got = [(int(sel[j]), "SL" if bool(mode_sl[j]) else "FL")
+               for j in range(k) if bool(valid[j])]
+        assert got == [(u.index, u.mode) for u in host], trial
+        assert int(n_taken) == len(host)
+
+
+# -- SweepSpec compiler -------------------------------------------------------
+
+def test_compile_spec_groups_and_axes():
+    spec = SweepSpec(base=tiny_base(), seeds=(0, 1),
+                     distributions=("iid", "noniid"),
+                     schemes=(("opt", {"b": 2.0}), ("discard", {"b": 1.0})),
+                     tau_max=(8.0, 9.0))
+    groups = compile_spec(spec)
+    assert [g.scheme for g in groups] == ["opt", "discard"]
+    for g in groups:
+        assert len(g.sims) == 4               # 2 seeds x 2 distributions
+        assert len(g.cfgs) == 2               # tau axis
+    assert {c["b"] for c in groups[0].cfgs} == {2.0}
+    assert {c["b"] for c in groups[1].cfgs} == {1.0}
+    assert {c["tau_max"] for c in groups[0].cfgs} == {8.0, 9.0}
+
+
+def test_compile_spec_rejects_static_pin():
+    spec = SweepSpec(base=tiny_base(), schemes=(("opt", {"rounds": 3}),))
+    with pytest.raises(ValueError):
+        compile_spec(spec)
+
+
+def test_build_sim_arrays_shapes_and_padding():
+    cfg = tiny_base()
+    sim = build_sim_arrays(cfg)
+    n = cfg.n_uavs
+    assert sim["client_x"].shape[0] == n
+    assert sim["client_len"].max() == sim["client_x"].shape[1]
+    assert sim["flops"].shape == (n,) and np.all(sim["flops"] > 0)
+    assert sim["test_x"].shape[0] == cfg.n_test
+    padded = build_sim_arrays(cfg, pad_len=sim["client_x"].shape[1] + 7)
+    assert padded["client_x"].shape[1] == sim["client_x"].shape[1] + 7
+    np.testing.assert_array_equal(padded["client_len"], sim["client_len"])
+
+
+# -- engine smoke: invariants, reproducibility, sharding ----------------------
+
+@pytest.fixture(scope="module")
+def small_sweep():
+    spec = SweepSpec(base=tiny_base(), seeds=(0, 1),
+                     schemes=(("opt", {"b": 2.0}), ("async", {"b": 1.0})))
+    return spec, run_sweep(spec, mesh=None)
+
+
+def test_sweep_shapes_and_invariants(small_sweep):
+    spec, res = small_sweep
+    assert res.n_simulations == 4
+    k = spec.base.k_select
+    for g in res.groups:
+        m = g.metrics
+        assert m["test_acc"].shape == (2, 1, spec.base.rounds)
+        assert np.all((m["selected"] >= 0) & (m["selected"] <= k))
+        assert np.all(m["arrived"] + m["dropped"] + m["delayed"]
+                      + m["rescued"] <= m["selected"])
+        assert np.all((m["test_acc"] >= 0) & (m["test_acc"] <= 1))
+        assert np.all(np.isfinite(m["test_loss"]))
+        assert np.all(m["bytes_sent"] >= 0)
+    opt, asy = res.groups
+    assert np.all(opt.metrics["delayed"] == 0)      # opt never delays
+    assert np.all(asy.metrics["rescued"] == 0)      # async never rescues
+
+
+def test_sweep_is_deterministic(small_sweep):
+    spec, res = small_sweep
+    res2 = run_sweep(spec, mesh=None)
+    for g1, g2 in zip(res.groups, res2.groups):
+        for key in g1.metrics:
+            np.testing.assert_array_equal(g1.metrics[key], g2.metrics[key])
+
+
+def test_sweep_sim_log_roundtrip(small_sweep):
+    spec, res = small_sweep
+    log = res.groups[0].sim_log(1, 0)
+    assert len(log.rounds) == spec.base.rounds
+    s = log.summary()
+    assert 0.0 <= s["final_acc"] <= 1.0
+    assert s["rounds"] == spec.base.rounds
+
+
+def test_sweep_config_axis_orders_budget():
+    """More budget -> never fewer opportunistic rescues (same channel/data
+    stream across the vmapped config axis: common random numbers)."""
+    spec = SweepSpec(base=tiny_base(rounds=3, local_epochs=6), seeds=(1,),
+                     b=(1.0, 3.0))
+    res = run_sweep(spec, mesh=None)
+    resc = res.groups[0].metrics["rescued"].sum(axis=-1)[0]   # (C,)
+    sends = res.groups[0].metrics["bytes_sent"].sum(axis=-1)[0]
+    assert resc[0] == 0                       # b=1: no snapshots exist
+    assert sends[1] >= sends[0]               # budget can only add uplink
+
+
+def test_sweep_on_mesh_matches_unsharded(small_sweep):
+    """The mesh path (1 device in the tier-1 run; 2+ forced host devices in
+    the CI sweep-smoke job) must not change results."""
+    from repro.launch.mesh import make_sweep_mesh
+    spec, res = small_sweep
+    res_mesh = run_sweep(spec, mesh=make_sweep_mesh())
+    for g1, g2 in zip(res.groups, res_mesh.groups):
+        for key in g1.metrics:
+            np.testing.assert_allclose(g1.metrics[key], g2.metrics[key],
+                                       rtol=1e-5, atol=1e-6)
+
+
+def test_run_hsfl_on_device_single_sim():
+    log = run_hsfl_on_device(tiny_base(scheme="discard", b=1))
+    assert len(log.rounds) == 2
+    assert all(r.selected <= 4 for r in log.rounds)
