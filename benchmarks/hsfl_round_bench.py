@@ -23,6 +23,10 @@ plus the PR-2 *grid* engines, which time the whole Fig. 3(b) panel
                   ``wall_s`` is end-to-end with compiles, with
                   ``steady_wall_s``/``compile_s`` split out since its per-
                   scheme programs are compiled once and reusable
+  grid_sweep_codec — the same panel with int8 delta-codec snapshots
+                  (``use_delta_codec``): compiles opt-codec + async only —
+                  discard lowers onto the opt program at b=1
+                  (``compiled_programs`` records the count)
 
 Methodology: each engine runs in its own subprocess (so XLA device forcing
 can't leak); per engine we run ``--warmup`` rounds first on the same
@@ -42,7 +46,7 @@ import sys
 
 
 ENGINES = ("host", "fused", "fused_codec", "fused_sharded",
-           "grid_loop", "grid_sweep")
+           "grid_loop", "grid_sweep", "grid_sweep_codec")
 
 
 def measure_grid(engine: str, rounds: int, seeds: int) -> dict:
@@ -78,7 +82,10 @@ def measure_grid(engine: str, rounds: int, seeds: int) -> dict:
                     sim_rounds_per_sec=round(base["sims"] * rounds / wall, 3))
 
     from repro.core.sweep import fig3b_spec, run_sweep
-    spec = fig3b_spec(rounds, seed_list)[0]
+    # grid_sweep_codec: the same fig3b panel with int8 delta-codec
+    # snapshots — opt-codec + async compile; discard lowers onto opt@b=1
+    spec = fig3b_spec(rounds, seed_list,
+                      use_delta_codec=engine == "grid_sweep_codec")[0]
     res = run_sweep(spec, timeit=True)
     steady = sum(g.run_s for g in res.groups)
     compile_s = sum(g.compile_s for g in res.groups)
@@ -86,6 +93,7 @@ def measure_grid(engine: str, rounds: int, seeds: int) -> dict:
     return dict(base, engine=engine, wall_s=round(wall, 2),
                 steady_wall_s=round(steady, 2),
                 compile_s=round(compile_s, 2),
+                compiled_programs=res.n_programs,
                 sim_rounds_per_sec=round(base["sims"] * rounds / steady, 3))
 
 
@@ -203,7 +211,8 @@ def main() -> None:
     if not args.skip_grid:
         # -- fig3b grid: loop of fused run_hsfl cells vs one sweep program --
         grid = [run_child("grid_loop", args),
-                run_child("grid_sweep", args)]
+                run_child("grid_sweep", args),
+                run_child("grid_sweep_codec", args)]
         if args.devices > 1:
             grid.append(run_child("grid_sweep", args, devices=args.devices,
                                   tag="grid_sweep_sharded"))

@@ -12,9 +12,8 @@ Engines:
   on a (mesh-shardable) sim axis, configs (b, τ_max) vmapped on a traced
   axis, and rounds scanned on-device.  Channel/batch RNG is jax.random
   (seeded, but not the host numpy stream — see EXPERIMENTS.md).
-- ``loop`` — one ``run_hsfl`` per (scheme, seed, config) cell; the
-  delta-codec experiments stay here (the codec snapshot path is
-  host-presampled only).
+- ``loop`` — one ``run_hsfl`` per (scheme, seed, config) cell (the
+  host-RNG reference engine; every panel, codec included, also runs here).
 
 Timing fields: ``us_per_round`` is wall-µs per *simulated communication
 round* (grid wall-clock / total rounds simulated — for sweep records this
@@ -90,7 +89,9 @@ def _run(tag: str, rounds: int, seeds=(0,), **kw) -> Dict:
 def _sweep_panel(specs: Sequence[SweepSpec], namer) -> List[Dict]:
     """Run SweepSpecs and emit one record per (group, distribution, config).
 
-    ``namer(scheme, dist, cfg) -> tag or None`` (None skips the cell).
+    ``namer(label, dist, cfg) -> tag or None`` (None skips the cell);
+    ``label`` is the group label — the scheme, plus ``"+codec"`` for
+    delta-codec groups, so codec × scheme grids name their rows apart.
     Wall-clock is amortized over every simulated round in the panel — the
     whole point of the sweep engine — so each record carries the same
     panel-level ``us_per_round``/``rounds_per_sec``.
@@ -111,7 +112,7 @@ def _sweep_panel(specs: Sequence[SweepSpec], namer) -> List[Dict]:
             for dist in dists:
                 rows = [i for i, (_, d) in enumerate(g.sims) if d == dist]
                 for ci, cfg in enumerate(g.cfgs):
-                    tag = namer(g.scheme, dist, cfg)
+                    tag = namer(g.label or g.scheme, dist, cfg)
                     if tag is None:
                         continue
                     m = g.metrics
@@ -205,17 +206,33 @@ def ablation_local_epochs(rounds: int = 40, seeds=(0,)) -> List[Dict]:
     return out
 
 
-def beyond_paper_delta_codec(rounds: int = 60, seeds=(0,)) -> List[Dict]:
+def beyond_paper_delta_codec(rounds: int = 60, seeds=(0,),
+                             engine: str = "sweep") -> List[Dict]:
     """Beyond-paper: int8 delta-codec compressed snapshots (kernels/delta_codec)
     shrink eq. 15's payload ~4x -> more opportunistic windows affordable at
     the same wireless budget.  ``use_delta_codec`` runs the codec end to
     end: snapshots are stored/rescued as quantized deltas and the payload
-    ratio is derived from the actual int8+scale byte count.  (Loop engine:
-    the codec snapshot path is host-presampled only.)"""
-    return [
-        _run("beyond_codec_off_b2", rounds, seeds, scheme="opt", b=2),
-        _run("beyond_codec_on_b2", rounds, seeds, scheme="opt", b=2,
-             use_delta_codec=True),
-        _run("beyond_codec_on_b4", rounds, seeds, scheme="opt", b=4,
-             use_delta_codec=True),
-    ]
+    ratio is derived from the actual int8+scale byte count.
+
+    On the sweep engine the codec is a *group static*
+    (``("opt", {"b": 2.0, "use_delta_codec": True})``), so the codec ×
+    budget grid compiles as one codec program plus the uncompressed
+    baseline — the panel that used to be loop-engine-only."""
+    if engine == "loop":
+        return [
+            _run("beyond_codec_off_b2", rounds, seeds, scheme="opt", b=2),
+            _run("beyond_codec_on_b2", rounds, seeds, scheme="opt", b=2,
+                 use_delta_codec=True),
+            _run("beyond_codec_on_b4", rounds, seeds, scheme="opt", b=4,
+                 use_delta_codec=True),
+        ]
+    base = HSFLConfig(rounds=rounds, scheme="opt")
+    spec = SweepSpec(base=base, seeds=tuple(seeds),
+                     schemes=(("opt", {"b": 2.0}),
+                              ("opt", {"b": 2.0, "use_delta_codec": True}),
+                              ("opt", {"b": 4.0, "use_delta_codec": True})))
+    return _sweep_panel(
+        [spec],
+        lambda label, dist, cfg: ("beyond_codec_"
+                                  f"{'on' if label.endswith('+codec') else 'off'}"
+                                  f"_b{int(cfg['b'])}"))

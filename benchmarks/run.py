@@ -65,7 +65,7 @@ def main() -> None:
     if args.only in (None, "fig3d"):
         emit(pe.fig3d_tau_sweep(args.rounds, seeds, args.engine))
     if args.only in (None, "beyond"):
-        emit(pe.beyond_paper_delta_codec(args.rounds, seeds))
+        emit(pe.beyond_paper_delta_codec(args.rounds, seeds, args.engine))
     if args.only == "ablations":     # beyond-paper ablations (EXPERIMENTS.md)
         emit(pe.ablation_schedule_placement(args.rounds, seeds))
         emit(pe.ablation_local_epochs(args.rounds, seeds))

@@ -27,6 +27,10 @@ ap.add_argument("--seed", type=int, default=0)
 ap.add_argument("--seeds", type=int, default=1,
                 help="number of seeds (stacked on the sweep's sim axis)")
 ap.add_argument("--engine", default="sweep", choices=["sweep", "loop"])
+ap.add_argument("--codec", action="store_true",
+                help="int8 delta-codec snapshots (kernels/delta_codec): "
+                     "payloads shrink ~4x and rescues carry quantization "
+                     "noise — runs on either engine")
 args = ap.parse_args()
 
 seed_list = tuple(args.seed + i for i in range(args.seeds))
@@ -37,10 +41,14 @@ if args.engine == "sweep":
     from repro.core.hsfl import HSFLConfig
     from repro.core.sweep import SweepSpec, run_sweep
 
-    base = HSFLConfig(rounds=args.rounds, distribution=args.distribution)
+    base = HSFLConfig(rounds=args.rounds, distribution=args.distribution,
+                      use_delta_codec=args.codec)
     spec = SweepSpec(base=base, seeds=seed_list,
                      schemes=tuple((s, {"b": float(b)}) for s, b in SCHEMES))
     res = run_sweep(spec, verbose=True)
+    if args.codec:
+        print(f"[codec] panel compiled as {res.n_programs} programs "
+              f"(discard lowered onto opt@b=1)")
     for g in res.groups:
         # seed 0's trajectory represents the scheme (summary averages seeds)
         results[g.scheme] = [g.sim_log(i, 0) for i in range(len(g.sims))]
@@ -51,7 +59,8 @@ else:
         print(f"--- {scheme} (b={b}) on {args.distribution} ---")
         results[scheme] = [
             run_hsfl(HSFLConfig(scheme=scheme, b=b, rounds=args.rounds,
-                                distribution=args.distribution, seed=sd),
+                                distribution=args.distribution, seed=sd,
+                                use_delta_codec=args.codec),
                      verbose=True)
             for sd in seed_list]
 

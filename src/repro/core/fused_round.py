@@ -39,6 +39,9 @@ Two round builders share these pieces:
   ``selection.select_users_jax``, batches gathered in-program, epochs
   scanned, eval in-program.  This is the round the sweep engine
   (``core/sweep``) chains with ``lax.scan`` and vmaps over seeds/configs.
+  ``use_codec`` gives it the same int8 snapshot path: the codec state
+  (int8 blocks + scales) rides the epoch scan carry, and the derived
+  ``compress_ratio`` feeds selection, τ budgeting and byte metrics.
 """
 from __future__ import annotations
 
@@ -78,13 +81,47 @@ def _tree_where_k(flags, a, b):
 
 
 def _masked_mean(contrib, weights, fallback):
-    """Σ_i w_i·x_i / Σ_i w_i over the K axis; ``fallback`` when Σ w = 0."""
+    """Σ_i w_i·x_i / Σ_i w_i over the K axis; ``fallback`` when Σ w = 0.
+
+    The denominator is the *true* positive sum — clamping it to 1 (the old
+    ``jnp.maximum(num, 1.0)``) silently shrinks the mean whenever the
+    weights are fractional and sum below 1 (the async staleness weights
+    α(s+1)^(−a) ≈ 0.283 do exactly that; same bug class as the fixed
+    ``opportunistic_sync.round_sync``)."""
     num = jnp.sum(weights)
+    denom = jnp.where(num > 0, num, 1.0)
     return jax.tree_util.tree_map(
         lambda c, p: jnp.where(
-            num > 0,
-            jnp.sum(c * _kx(weights, c), axis=0) / jnp.maximum(num, 1.0), p),
+            num > 0, jnp.sum(c * _kx(weights, c), axis=0) / denom, p),
         contrib, fallback)
+
+
+def _codec_encode(stacked, params, interpret: bool):
+    """Quantize the stacked users' delta vs the round-start global params
+    into the int8 codec state ``(q (K, M, BLOCK), scales (K, M, 1))``."""
+    delta = jax.tree_util.tree_map(lambda s, p: s - p[None], stacked, params)
+    flat, _ = stacked_flatten(delta)
+    k, rows, blk = flat.shape
+    q, s = quantize_blocks(flat.reshape(k * rows, blk), interpret=interpret)
+    return q.reshape(k, rows, blk), s.reshape(k, rows, 1)
+
+
+def _codec_decode(q, s, stacked_like, params, interpret: bool):
+    """Dequantize the codec state back to a stacked params pytree — the
+    rescued contribution carries true int8 quantization noise."""
+    k, rows, blk = q.shape
+    flat = dequantize_blocks(q.reshape(k * rows, blk),
+                             s.reshape(k * rows, 1), interpret=interpret)
+    delta = stacked_unflatten(flat.reshape(k, rows, blk), stacked_like)
+    return jax.tree_util.tree_map(lambda d, p: p[None] + d, delta, params)
+
+
+def _codec_zero_state(stacked):
+    """All-zero codec state shaped for ``stacked`` (decodes to the global
+    params; never aggregated before a probe succeeds — ``has_snap`` gates)."""
+    flat, _ = stacked_flatten(stacked)
+    return (jnp.zeros(flat.shape, jnp.int8),
+            jnp.zeros(flat.shape[:2] + (1,), jnp.float32))
 
 
 def _make_epoch_fn(fwd: Callable, lr: float) -> Callable:
@@ -166,24 +203,12 @@ def build_fused_round(*, scheme: str, local_epochs: int, steps_per_epoch: int,
     if scheme not in ("opt", "discard", "async"):
         raise ValueError(scheme)
 
+    if scheme == "async" and k_carry < 1:
+        raise ValueError(
+            f"async build_fused_round needs k_carry >= 1 (the fixed width "
+            f"of the straggler carry), got k_carry={k_carry}")
+
     epoch_all = jax.vmap(_make_epoch_fn(fwd, lr))
-
-    def _encode(stacked, params):
-        delta = jax.tree_util.tree_map(lambda s, p: s - p[None],
-                                       stacked, params)
-        flat, _ = stacked_flatten(delta)
-        k, rows, blk = flat.shape
-        q, s = quantize_blocks(flat.reshape(k * rows, blk),
-                               interpret=interpret)
-        return q.reshape(k, rows, blk), s.reshape(k, rows, 1)
-
-    def _decode(q, s, stacked_like, params):
-        k, rows, blk = q.shape
-        flat = dequantize_blocks(q.reshape(k * rows, blk),
-                                 s.reshape(k * rows, 1),
-                                 interpret=interpret)
-        delta = stacked_unflatten(flat.reshape(k, rows, blk), stacked_like)
-        return jax.tree_util.tree_map(lambda d, p: p[None] + d, delta, params)
 
     def _train_and_probe(params, xs, ys, chan):
         k = chan["valid"].shape[0]
@@ -198,12 +223,7 @@ def build_fused_round(*, scheme: str, local_epochs: int, steps_per_epoch: int,
         tau_extra = chan["tau_extra0"]
         has_snap = jnp.zeros((k,), bool)
         nsent = jnp.zeros((k,), jnp.int32)
-        if use_codec:
-            flat, _ = stacked_flatten(stacked)
-            snap = (jnp.zeros(flat.shape, jnp.int8),
-                    jnp.zeros(flat.shape[:2] + (1,), jnp.float32))
-        else:
-            snap = stacked
+        snap = _codec_zero_state(stacked) if use_codec else stacked
 
         # epochs advance in lockstep; the probe schedule is static, so the
         # OPT transmission logic is only compiled at scheduled boundaries
@@ -216,7 +236,7 @@ def build_fused_round(*, scheme: str, local_epochs: int, steps_per_epoch: int,
                 ok, tau_extra = snapshot_decision(chan["valid"], outage,
                                                   tau, tau_extra)
                 if use_codec:
-                    q_new, s_new = _encode(stacked, params)
+                    q_new, s_new = _codec_encode(stacked, params, interpret)
                     snap = (jnp.where(_kx(ok, q_new), q_new, snap[0]),
                             jnp.where(_kx(ok, s_new), s_new, snap[1]))
                 else:
@@ -233,7 +253,8 @@ def build_fused_round(*, scheme: str, local_epochs: int, steps_per_epoch: int,
     def _round_sync(params, stacked, snap, has_snap, arrived, chan):
         """opt/discard aggregation: masked mean over finals (+ rescues)."""
         if scheme == "opt" and use_codec:
-            snap_tree = _decode(snap[0], snap[1], stacked, params)
+            snap_tree = _codec_decode(snap[0], snap[1], stacked, params,
+                                      interpret)
         else:
             snap_tree = snap
         return _sync_aggregate(scheme, params, stacked, snap_tree,
@@ -260,6 +281,13 @@ def build_fused_round(*, scheme: str, local_epochs: int, steps_per_epoch: int,
     aw = float(async_weight)
 
     def round_fn(params, delayed_stack, delayed_mask, xs, ys, chan):
+        k = chan["valid"].shape[0]
+        if k > k_carry:
+            raise ValueError(
+                f"async round got K={k} stacked users but the straggler "
+                f"carry is only k_carry={k_carry} wide; build_fused_round "
+                f"needs k_carry >= the padded user bucket K (pass "
+                f"k_carry=k_select as HSFLSimulation does)")
         stacked, _, _, nsent = _train_and_probe(params, xs, ys, chan)
         arrived = _final_arrival(chan)
         delayed_new = chan["valid"] & ~arrived
@@ -267,7 +295,6 @@ def build_fused_round(*, scheme: str, local_epochs: int, steps_per_epoch: int,
                                   delayed_mask, arrived, aw, k_carry)
 
         # next-round carry, padded to the fixed k_carry width
-        k = chan["valid"].shape[0]
         pad = k_carry - k
         carry_stack = jax.tree_util.tree_map(
             lambda s: jnp.pad(s, ((0, pad),) + ((0, 0),) * (s.ndim - 1)),
@@ -331,6 +358,7 @@ def build_device_round(*, scheme: str, local_epochs: int,
                        k_select: int, channel: ChannelParams,
                        model_bytes: float, ue_model_fraction: float,
                        compress_ratio: float = 1.0,
+                       use_codec: bool = False, interpret: bool = False,
                        speed_mps: float = 15.0, epoch_seconds: float = 1.0,
                        schedule_override: Tuple[int, ...] = (),
                        async_alpha: float = 0.4, async_a: float = 0.5,
@@ -347,6 +375,19 @@ def build_device_round(*, scheme: str, local_epochs: int,
     from the stacked client datasets by on-device indices — so whole
     simulations chain under ``lax.scan`` and whole sweeps under ``vmap``
     (core/sweep.py) with zero host round trips.
+
+    ``use_codec`` (opt scheme) stores snapshots as the int8 delta-codec
+    state (``kernels/delta_codec``): scheduled probes quantize
+    params − round-start-global through the Pallas kernel into a
+    ``(K, M, BLOCK)`` int8 + per-block-scale carry that rides the epoch
+    ``lax.scan``, and rescues dequantize at aggregation, so a rescued
+    contribution carries true quantization noise.  ``compress_ratio``
+    (derive it from ``delta_codec.ops.codec_ratio`` when the codec is on)
+    scales the eq. 15 ``payload_bits`` — and, through them, the
+    ``select_users_jax`` latency/energy accounting, the eq. 14 τ_extra
+    budget, the final-arrival τ and the wire-byte metrics.  Everything is
+    a ``where`` over the traced ``b``/``tau_max``/``bandwidth_ratio``
+    config axes, so codec grids vmap/shard exactly like uncompressed ones.
 
     Returns ``round_fn(carry, round_key, sim, cfg) -> (carry, metrics)``:
 
@@ -367,7 +408,12 @@ def build_device_round(*, scheme: str, local_epochs: int,
         raise ValueError(scheme)
     epoch_all = jax.vmap(_make_epoch_fn(fwd, lr))
     aw = float(async_alpha) * 2.0 ** (-float(async_a))
-    ue_bytes = model_bytes * ue_model_fraction
+    # the codec (or a manual compress_ratio) shrinks every model payload on
+    # the wire, so the *effective* bytes drive selection feasibility/energy
+    # (eqs. 9–13), the eq. 14/15 τ budgets and the byte metrics alike
+    eff_model_bytes = model_bytes * compress_ratio
+    eff_ue_bytes = eff_model_bytes * ue_model_fraction
+    use_codec = bool(use_codec) and scheme == "opt"
     K = k_select
     p = channel
 
@@ -382,13 +428,14 @@ def build_device_round(*, scheme: str, local_epochs: int,
         rates0 = fleet_rates(fleet, p, bw)
         sel, mode_sl, valid, n_taken, tt_fl, tt_sl = select_users_jax(
             rates0, sim["flops"], sim["samples"], b=b, tau_max=tau_max,
-            k_select=K, model_bytes=model_bytes, ue_model_bytes=ue_bytes,
+            k_select=K, model_bytes=eff_model_bytes,
+            ue_model_bytes=eff_ue_bytes,
             local_epochs=local_epochs, max_sl=max_sl,
             act_bytes_per_sample=act_bytes_per_sample)
         train_time = jnp.where(mode_sl, tt_sl[sel], tt_fl[sel])
         train_time = jnp.where(valid, train_time, 1e9)
-        payload_bits = jnp.where(mode_sl, ue_bytes, model_bytes) \
-            * compress_ratio * 8.0
+        payload_bits = jnp.where(mode_sl, eff_ue_bytes, eff_model_bytes) \
+            * 8.0                                              # eq. (15) m_i
         tau_extra = jnp.maximum(b - 1.0, 0.0) * payload_bits \
             / jnp.maximum(rates0[sel], 1e-9)                   # eq. (14)
 
@@ -429,12 +476,21 @@ def build_device_round(*, scheme: str, local_epochs: int,
                 tau = payload_bits / jnp.maximum(rate_e, 1e-9)   # eq. (15)
                 ok, tau_extra = snapshot_decision(valid & sched, out_e,
                                                   tau, tau_extra)
-                snap = _tree_where_k(ok, stacked, snap)
+                if use_codec:
+                    # the snapshot carry is the int8 payload itself, so the
+                    # epoch scan carries ~4x fewer snapshot bytes and the
+                    # rescue later decodes with true quantization noise
+                    q_new, s_new = _codec_encode(stacked, params, interpret)
+                    snap = (jnp.where(_kx(ok, q_new), q_new, snap[0]),
+                            jnp.where(_kx(ok, s_new), s_new, snap[1]))
+                else:
+                    snap = _tree_where_k(ok, stacked, snap)
                 has_snap = has_snap | ok
                 nsent = nsent + ok.astype(jnp.int32)
             return (fleet, stacked, snap, has_snap, nsent, tau_extra), ()
 
-        carry_e = (fleet, stacked, stacked, jnp.zeros((K,), bool),
+        snap0 = _codec_zero_state(stacked) if use_codec else stacked
+        carry_e = (fleet, stacked, snap0, jnp.zeros((K,), bool),
                    jnp.zeros((K,), jnp.int32), tau_extra)
         carry_e, _ = jax.lax.scan(epoch_body, carry_e,
                                   jnp.arange(1, local_epochs + 1))
@@ -456,6 +512,9 @@ def build_device_round(*, scheme: str, local_epochs: int,
             new_carry = DeviceSimCarry(new_params, fleet, stacked,
                                        delayed_new)
         else:
+            if use_codec:
+                snap = _codec_decode(snap[0], snap[1], stacked, params,
+                                     interpret)
             new_params, rescued = _sync_aggregate(
                 scheme, params, stacked, snap, has_snap, arrived)
             delayed_new = jnp.zeros_like(arrived)

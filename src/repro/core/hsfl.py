@@ -47,7 +47,6 @@ from repro.data.synthetic import Dataset, make_digits
 from repro.data.partition import partition
 from repro.kernels.delta_codec.ops import codec_ratio, decode_delta, encode_delta
 from repro.models import cnn as cnn_mod
-from repro.models import module as m
 from repro.training.loss import accuracy, cross_entropy
 
 
@@ -87,6 +86,24 @@ class HSFLConfig:
     channel: ChannelParams = field(default_factory=ChannelParams)
     async_alpha: float = 0.4
     async_a: float = 0.5
+
+
+def model_compress_ratio(cfg: HSFLConfig) -> float:
+    """The effective snapshot compression ratio for ``cfg``.
+
+    With ``use_delta_codec`` the knob is *derived* — the actual int8+scale
+    byte count of this config's CNN over its float32 bytes
+    (``delta_codec.ops.codec_ratio``), computed from abstract shapes so no
+    params are materialized; otherwise it is the hand-set
+    ``cfg.compress_ratio``.  Shared by ``HSFLSimulation`` (host/fused
+    engines) and ``core/sweep`` (device engine) so the eq. 14/15 payload
+    accounting cannot drift between them."""
+    if not cfg.use_delta_codec:
+        return cfg.compress_ratio
+    shapes = jax.eval_shape(lambda: cnn_mod.init_cnn(jax.random.PRNGKey(0)))
+    n = sum(int(np.prod(l.shape))
+            for l in jax.tree_util.tree_leaves(shapes))
+    return codec_ratio(n)
 
 
 def _heterogeneous_devices(n: int, rng: np.random.Generator,
@@ -177,8 +194,7 @@ class HSFLSimulation:
         self._interpret = jax.default_backend() != "tpu"
         # the codec makes the compress knob real: actual int8+scale bytes
         # over float32 bytes for this model, not a hand-set scalar
-        self.compress_ratio = (codec_ratio(m.param_count(self.params))
-                               if cfg.use_delta_codec else cfg.compress_ratio)
+        self.compress_ratio = model_compress_ratio(cfg)
         self._probe_epochs = self._static_schedule()
         self._stack_shard = self._batch_shard = None
         self._shard_ndev = 1

@@ -123,8 +123,13 @@ def round_sync(cfg: OppSyncConfig, state: TrainState,
     num = jax.lax.psum(valid, cfg.axis)
     summed = jax.tree_util.tree_map(
         lambda x: jax.lax.psum(x * valid, cfg.axis), contrib)
+    # divide by the TRUE positive sum: async validity weights are fractional
+    # (α(s+1)^(−a) ≈ 0.283), so an all-delayed round has 0 < Σvalid < 1 and
+    # clamping the denominator to 1 would silently shrink the aggregate
+    # toward zero.  num > 0 still guards the empty round.
+    denom = jnp.where(num > 0, num, 1.0)
     new_params = jax.tree_util.tree_map(
-        lambda s, p: jnp.where(num > 0, s / jnp.maximum(num, 1.0), p),
+        lambda s, p: jnp.where(num > 0, s / denom, p),
         summed, state.params)
     return state._replace(
         params=new_params,

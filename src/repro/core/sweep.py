@@ -16,8 +16,11 @@ hundreds of host↔device round trips.  This module compiles the whole grid:
     ``("sweep",)`` mesh (``launch.mesh.make_sweep_mesh`` +
     ``sharding.rules.shard_sweep_tree``) — simulations are independent, so
     the mesh scales them with zero collectives;
-  - **schemes** (and any other static field) group into separate compiles of
-    the same program skeleton via the ``SweepSpec`` compiler below.
+  - **schemes** (and any other static field, e.g. the ``use_delta_codec``
+    group static) group into separate compiles of the same program skeleton
+    via the ``SweepSpec`` compiler below — except that a b=1 discard group
+    is *lowered onto the OPT program* (discard is exactly opt with zero
+    probes), so a Fig. 3(b) panel compiles 2 programs instead of 3.
 
 RNG: device runs draw channel/mobility/batch streams from ``jax.random``
 (per-sim keys derived from the seed), NOT the host ``np.random`` streams —
@@ -42,6 +45,18 @@ from repro.core.metrics import RoundLog, SimLog
 # distribution) or a group axis (static: scheme, local_epochs, ...).
 CFG_AXES = ("b", "tau_max", "bandwidth_ratio")
 
+# HSFLConfig fields a scheme entry may pin as *group statics*: they fork a
+# separate compile of the round program instead of riding a traced axis.
+# ``use_delta_codec`` is the flagship — codec × scheme × budget grids are
+# first-class sweeps (``("opt", {"b": 2.0, "use_delta_codec": True})``).
+GROUP_STATICS = ("use_delta_codec",)
+
+# Poison value ``compile_spec`` writes into ``group.base.b`` when b rides
+# the traced config axis: the real values live in ``group.cfgs`` and
+# nothing static may read ``base.b`` (the old behaviour silently pinned it
+# to the first config column).
+B_SWEPT = -1
+
 
 @dataclass(frozen=True)
 class SweepSpec:
@@ -64,19 +79,42 @@ class SweepSpec:
 
 @dataclass(frozen=True)
 class CompiledGroup:
-    """One jit-compilable slice of a SweepSpec: fixed statics, stacked axes."""
+    """One result slice of a SweepSpec: fixed statics, stacked axes.
+
+    ``program_scheme`` is the scheme whose round program actually executes
+    this group — normally ``scheme``, but a discard group pinned at b=1
+    lowers onto the OPT program (discard IS opt with zero probes: at b=1
+    the probe schedule is empty and the eq. 14 allowance is 0, so no
+    snapshot ever exists and the rescue weights vanish identically), which
+    lets a Fig. 3(b)-style panel share one compile between opt and discard.
+    ``label`` distinguishes groups whose scheme coincides (codec forks)."""
     scheme: str
     base: HSFLConfig                      # statics for this group
     sims: Tuple[Tuple[int, str], ...]     # (seed, distribution) per sim row
     cfgs: Tuple[Dict[str, float], ...]    # traced scalars per config column
+    label: str = ""
+    program_scheme: str = ""
 
 
-def compile_spec(spec: SweepSpec) -> List[CompiledGroup]:
-    """SweepSpec -> stacked-config groups (one compile each).
+def compile_spec(spec: SweepSpec,
+                 lower_discard: bool = True) -> List[CompiledGroup]:
+    """SweepSpec -> stacked-config groups.
 
     Schemes become groups (static control flow differs); seeds ×
     distributions become the sim rows; the b/τ_max/bandwidth_ratio product
-    becomes the traced config columns, with per-scheme pins applied.
+    becomes the traced config columns, with per-scheme pins applied.  Pins
+    of ``GROUP_STATICS`` fields fork the group's static config instead
+    (codec on/off groups in one spec).  ``lower_discard`` reroutes b=1
+    discard groups onto the OPT program so they share its compile
+    (``lower_discard=False`` keeps the dedicated discard program — the
+    bit-for-bit reference ``tests/test_sweep.py`` compares against).
+
+    ``base.b`` is pinned only when the group's config axis holds a single
+    b; when b is genuinely swept it is poisoned to ``B_SWEPT`` (nothing
+    static may follow one column — the old code silently pinned the first),
+    and a static ``schedule_override`` is rejected outright: the manual
+    probe schedule is compiled per group while its budget semantics would
+    vary along the traced axis.
     """
     schemes = spec.schemes or (spec.base.scheme,)
     dists = spec.distributions or (spec.base.distribution,)
@@ -89,19 +127,38 @@ def compile_spec(spec: SweepSpec) -> List[CompiledGroup]:
             "tau_max": spec.tau_max or (spec.base.tau_max,),
             "bandwidth_ratio": spec.bandwidth_ratio or (1.0,),
         }
+        statics = {}
         for k, v in pins.items():         # pins win, even over swept axes
-            if k not in CFG_AXES:
-                raise ValueError(f"scheme pin {k!r} is not a traced axis "
-                                 f"{CFG_AXES}")
-            axes[k] = (v,)
+            if k in GROUP_STATICS:
+                statics[k] = v
+            elif k in CFG_AXES:
+                axes[k] = (v,)
+            else:
+                raise ValueError(f"scheme pin {k!r} is neither a traced "
+                                 f"axis {CFG_AXES} nor a group static "
+                                 f"{GROUP_STATICS}")
         cfgs = tuple({"b": float(b), "tau_max": float(t),
                       "bandwidth_ratio": float(w)}
                      for b, t, w in itertools.product(*axes.values()))
+        base = replace(spec.base, scheme=scheme, **statics)
+        b_vals = sorted({c["b"] for c in cfgs})
+        if len(b_vals) == 1:
+            base = replace(base, b=int(max(1, round(b_vals[0]))))
+        else:
+            if spec.base.schedule_override:
+                raise ValueError(
+                    "schedule_override is a static of the compiled round "
+                    "program, but b is swept on the traced config axis "
+                    f"({b_vals}); pin b per scheme or drop the override")
+            base = replace(base, b=B_SWEPT)
+        program = scheme
+        if (lower_discard and scheme == "discard"
+                and b_vals == [1.0]):
+            program = "opt"
         groups.append(CompiledGroup(
-            scheme=scheme,
-            base=replace(spec.base, scheme=scheme,
-                         b=int(max(1, round(cfgs[0]["b"])))),
-            sims=sims, cfgs=cfgs))
+            scheme=scheme, base=base, sims=sims, cfgs=cfgs,
+            label=scheme + ("+codec" if base.use_delta_codec else ""),
+            program_scheme=program))
     return groups
 
 
@@ -126,22 +183,50 @@ def _stack_sims(group: CompiledGroup) -> Dict[str, np.ndarray]:
     return {k: np.stack([a[k] for a in per_sim]) for k in per_sim[0]}
 
 
+def _group_build_kwargs(group: CompiledGroup) -> Dict[str, Any]:
+    """The static kwargs ``build_device_round`` gets for this group.
+
+    Single source of truth for BOTH the program build (``_build_group_fn``)
+    and the program-cache identity (``_program_key``): a static added here
+    automatically invalidates cache sharing, so the two cannot drift.
+    Deliberately NOT ``base.scheme``/``base.b`` — the program runs
+    ``program_scheme`` and b is traced, which is exactly what lets a
+    b=1-pinned discard group hash onto the opt program.
+    """
+    import jax
+
+    from repro.core.hsfl import model_compress_ratio
+
+    base = group.base
+    return dict(
+        scheme=group.program_scheme or group.scheme,
+        local_epochs=base.local_epochs,
+        steps_per_epoch=base.steps_per_epoch, batch_size=base.batch_size,
+        lr=base.lr, k_select=base.k_select, channel=base.channel,
+        model_bytes=base.model_bytes,
+        ue_model_fraction=base.ue_model_fraction,
+        compress_ratio=model_compress_ratio(base),
+        use_codec=base.use_delta_codec,
+        # Pallas codec kernels run in interpret mode off-TPU
+        interpret=jax.default_backend() != "tpu",
+        schedule_override=tuple(base.schedule_override),
+        async_alpha=base.async_alpha, async_a=base.async_a)
+
+
+def _program_key(group: CompiledGroup) -> Tuple:
+    """Hashable identity of the compiled program a group needs."""
+    kw = _group_build_kwargs(group)
+    kw["channel"] = repr(kw["channel"])       # mutable dataclass -> repr
+    return tuple(sorted(kw.items()))
+
+
 def _build_group_fn(group: CompiledGroup):
     """jit(vmap_sims(vmap_cfgs(scan_rounds(device_round))))."""
     import jax
 
     from repro.core.fused_round import build_device_round
 
-    base = group.base
-    round_fn = build_device_round(
-        scheme=group.scheme, local_epochs=base.local_epochs,
-        steps_per_epoch=base.steps_per_epoch, batch_size=base.batch_size,
-        lr=base.lr, k_select=base.k_select, channel=base.channel,
-        model_bytes=base.model_bytes,
-        ue_model_fraction=base.ue_model_fraction,
-        compress_ratio=base.compress_ratio,
-        schedule_override=tuple(base.schedule_override),
-        async_alpha=base.async_alpha, async_a=base.async_a)
+    round_fn = build_device_round(**_group_build_kwargs(group))
 
     def sim_one(carry0, round_keys, sim, cfgv):
         def body(c, k):
@@ -155,7 +240,8 @@ def _build_group_fn(group: CompiledGroup):
     return jax.jit(over_sim)
 
 
-def _group_inputs(group: CompiledGroup, rounds: int):
+def _group_inputs(group: CompiledGroup, rounds: int,
+                  data: Dict[str, Any] | None = None):
     import jax
     import jax.numpy as jnp
 
@@ -164,7 +250,8 @@ def _group_inputs(group: CompiledGroup, rounds: int):
     from repro.models import cnn as cnn_mod
 
     base = group.base
-    data = {k: jnp.asarray(v) for k, v in _stack_sims(group).items()}
+    if data is None:
+        data = {k: jnp.asarray(v) for k, v in _stack_sims(group).items()}
 
     params0, fleets, rkeys = [], [], []
     for seed, _ in group.sims:
@@ -197,6 +284,8 @@ class GroupResult:
     metrics: Dict[str, np.ndarray]        # each (S, C, rounds)
     compile_s: float = 0.0
     run_s: float = 0.0
+    label: str = ""                       # scheme (+ "+codec")
+    program_id: int = 0                   # groups sharing an id share a jit
 
     def sim_log(self, sim_i: int, cfg_i: int) -> SimLog:
         """Rebuild the loop engine's SimLog for one (sim, config) cell."""
@@ -221,6 +310,7 @@ class SweepResult:
     groups: List[GroupResult]
     rounds: int
     wall_s: float = 0.0
+    n_programs: int = 0                   # distinct jitted round programs
 
     @property
     def n_simulations(self) -> int:
@@ -228,8 +318,13 @@ class SweepResult:
 
 
 def run_sweep(spec: SweepSpec, mesh: Any = "auto", verbose: bool = False,
-              timeit: bool = False) -> SweepResult:
-    """Execute a SweepSpec: one compiled program per scheme group.
+              timeit: bool = False,
+              lower_discard: bool = True) -> SweepResult:
+    """Execute a SweepSpec: one compiled program per *distinct* group
+    program.  Groups are keyed by ``_program_key`` — a b=1 discard group
+    reuses the opt program's jitted fn (``lower_discard``; discard is
+    exactly opt with zero probes), so a Fig. 3(b)-style panel compiles 2
+    programs instead of 3; ``SweepResult.n_programs`` records the count.
 
     ``mesh="auto"`` builds a ``("sweep",)`` mesh over all local devices when
     there is more than one and shards the stacked-simulation axis over it
@@ -255,9 +350,24 @@ def run_sweep(spec: SweepSpec, mesh: Any = "auto", verbose: bool = False,
     rounds = spec.base.rounds
     t_all = time.time()
     out = []
-    for group in compile_spec(spec):
-        fn = _build_group_fn(group)
-        carry0, round_keys, data, cfg_stack = _group_inputs(group, rounds)
+    programs: Dict[Tuple, Tuple[Any, int]] = {}
+    # nothing a scheme entry can pin (CFG_AXES / GROUP_STATICS) changes the
+    # *data*, so the stacked per-sim arrays are built once per sim-row set
+    # and shared across groups instead of re-synthesized per scheme
+    sims_data: Dict[Tuple, Any] = {}
+    for group in compile_spec(spec, lower_discard=lower_discard):
+        key = _program_key(group)
+        if key in programs:
+            fn, pid = programs[key]
+        else:
+            fn, pid = _build_group_fn(group), len(programs)
+            programs[key] = (fn, pid)
+        if group.sims not in sims_data:
+            import jax.numpy as jnp
+            sims_data[group.sims] = {k: jnp.asarray(v)
+                                     for k, v in _stack_sims(group).items()}
+        carry0, round_keys, data, cfg_stack = _group_inputs(
+            group, rounds, sims_data[group.sims])
         n_sims = len(group.sims)
         carry0 = shard_sweep_tree(mesh, carry0, n_sims)
         round_keys = shard_sweep_tree(mesh, round_keys, n_sims)
@@ -277,14 +387,16 @@ def run_sweep(spec: SweepSpec, mesh: Any = "auto", verbose: bool = False,
             scheme=group.scheme, sims=group.sims, cfgs=group.cfgs,
             metrics={k: np.asarray(v)
                      for k, v in metrics._asdict().items()},
-            compile_s=round(compile_s, 3), run_s=round(run_s, 3)))
+            compile_s=round(compile_s, 3), run_s=round(run_s, 3),
+            label=group.label or group.scheme, program_id=pid))
         if verbose:
             accs = out[-1].metrics["test_acc"][..., -1]
-            print(f"[sweep/{group.scheme}] sims={n_sims} "
+            print(f"[sweep/{out[-1].label}] sims={n_sims} "
                   f"cfgs={len(group.cfgs)} rounds={rounds} "
                   f"run={out[-1].run_s:.2f}s final_acc={accs.mean():.4f}")
     return SweepResult(groups=out, rounds=rounds,
-                       wall_s=round(time.time() - t_all, 3))
+                       wall_s=round(time.time() - t_all, 3),
+                       n_programs=len(programs))
 
 
 def run_hsfl_on_device(cfg: HSFLConfig, mesh: Any = None) -> SimLog:

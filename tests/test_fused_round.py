@@ -106,6 +106,85 @@ def test_forward_im2col_matches_reference():
                                rtol=1e-6, atol=1e-6)
 
 
+# -- async carry width + fractional-weight aggregation ------------------------
+
+def _linear_forward(params, x):
+    return x @ params["w"]
+
+
+def _async_round_inputs(K, e=2, steps=1, bs=2, dim=4, ncls=3):
+    rng = np.random.default_rng(0)
+    xs = jnp.asarray(rng.normal(size=(e, K, steps, bs, dim)), jnp.float32)
+    ys = jnp.asarray(rng.integers(0, ncls, (e, K, steps, bs)))
+    chan = {
+        "rates": jnp.full((e, K), 1e6, jnp.float32),
+        "outages": jnp.zeros((e, K), bool),
+        "payload_bits": jnp.full((K,), 8e6, jnp.float32),
+        "tau_extra0": jnp.zeros((K,), jnp.float32),
+        "final_rate": jnp.full((K,), 1e6, jnp.float32),
+        "final_outage": jnp.zeros((K,), bool),
+        "train_time": jnp.full((K,), 1.0, jnp.float32),
+        "valid": jnp.ones((K,), bool),
+    }
+    params = {"w": jnp.asarray(rng.normal(size=(dim, ncls)), jnp.float32)}
+    return params, xs, ys, chan
+
+
+def test_async_k_carry_too_small_raises_clearly():
+    """K > k_carry used to hit jnp.pad with a negative width — a cryptic
+    error deep inside the jit.  It must be a clear ValueError instead."""
+    from repro.core.fused_round import build_fused_round
+    K, k_carry = 4, 2
+    fn = build_fused_round(scheme="async", local_epochs=2, steps_per_epoch=1,
+                           lr=0.1, tau_max=30.0, probe_epochs=(),
+                           async_weight=0.3, k_carry=k_carry,
+                           forward=_linear_forward)
+    params, xs, ys, chan = _async_round_inputs(K)
+    dstack = {"w": jnp.zeros((k_carry,) + params["w"].shape)}
+    dmask = jnp.zeros((k_carry,), bool)
+    with pytest.raises(ValueError, match="k_carry"):
+        fn(params, dstack, dmask, xs, ys, chan)
+
+
+def test_async_k_carry_zero_rejected_at_build():
+    from repro.core.fused_round import build_fused_round
+    with pytest.raises(ValueError, match="k_carry"):
+        build_fused_round(scheme="async", local_epochs=2, steps_per_epoch=1,
+                          lr=0.1, tau_max=30.0, probe_epochs=(),
+                          k_carry=0, forward=_linear_forward)
+
+
+def test_async_k_carry_equals_K_boundary():
+    """k_carry == K is valid (zero pad) and must round-trip the carry."""
+    from repro.core.fused_round import build_fused_round
+    K = 2
+    fn = build_fused_round(scheme="async", local_epochs=2, steps_per_epoch=1,
+                           lr=0.1, tau_max=30.0, probe_epochs=(),
+                           async_weight=0.3, k_carry=K,
+                           forward=_linear_forward)
+    params, xs, ys, chan = _async_round_inputs(K)
+    dstack = {"w": jnp.zeros((K,) + params["w"].shape)}
+    dmask = jnp.zeros((K,), bool)
+    new_params, c_stack, c_mask, stats = fn(params, dstack, dmask,
+                                            xs, ys, chan)
+    assert c_mask.shape == (K,)
+    assert c_stack["w"].shape == (K,) + params["w"].shape
+    assert np.asarray(stats.arrived).shape == (K,)
+
+
+def test_masked_mean_fractional_weights():
+    """Audit companion to the round_sync fix: Σw < 1 must divide by Σw,
+    not by the old ``maximum(Σw, 1)`` clamp."""
+    from repro.core.fused_round import _masked_mean
+    contrib = {"w": jnp.asarray([[2.0], [10.0]])}
+    weights = jnp.asarray([0.3, 0.3])
+    fallback = {"w": jnp.asarray([-1.0])}
+    out = _masked_mean(contrib, weights, fallback)
+    np.testing.assert_allclose(np.asarray(out["w"]), [6.0], rtol=1e-6)
+    empty = _masked_mean(contrib, jnp.zeros(2), fallback)
+    np.testing.assert_allclose(np.asarray(empty["w"]), [-1.0])
+
+
 # -- delta codec flatten/pad contract ---------------------------------------
 
 def _odd_tree(key):

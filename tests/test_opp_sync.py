@@ -10,11 +10,14 @@ import subprocess
 import sys
 import textwrap
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.opportunistic_sync import OppSyncConfig, is_scheduled
+from repro.core.opportunistic_sync import (OppSyncConfig, is_scheduled,
+                                           round_sync)
+from repro.training.train_state import TrainState
 
 
 def test_schedule_matches_alg2():
@@ -34,6 +37,48 @@ def test_budget1_never_schedules():
 def test_tau_extra0_eq14():
     cfg = OppSyncConfig(budget=4, payload=2.0, rate0=0.5)
     assert cfg.tau_extra0 == pytest.approx(3 * 2.0 / 0.5)
+
+
+def _pod_state(p):
+    return TrainState(params={"w": p}, opt_state=(),
+                      step=jnp.asarray(4, jnp.int32),
+                      snapshot={"w": jnp.zeros_like(p)},
+                      snapshot_step=jnp.asarray(-1, jnp.int32),
+                      tau_extra=jnp.asarray(0.0, jnp.float32))
+
+
+def test_round_sync_all_delayed_fractional_weights():
+    """Regression: the async scheme's validity weights are fractional
+    (α(s+1)^(−a) ≈ 0.283), so a round where EVERY pod is delayed has
+    0 < Σvalid < 1.  The old denominator clamp ``maximum(num, 1.0)``
+    silently divided the weighted sum by 1 instead of Σvalid, shrinking the
+    aggregated params toward zero; the aggregate must be the true weighted
+    mean (= plain mean here, since all weights are equal)."""
+    cfg = OppSyncConfig(scheme="async", axis="pod")
+    pods = jnp.asarray([[1.0, 2.0], [3.0, 4.0]])       # 2 pods, Σvalid ≈ 0.57
+
+    def one(p, arrived):
+        return round_sync(cfg, _pod_state(p), arrived).params["w"]
+
+    out = jax.vmap(one, axis_name="pod")(pods, jnp.zeros((2,), bool))
+    np.testing.assert_allclose(np.asarray(out),
+                               [[2.0, 3.0], [2.0, 3.0]], rtol=1e-6)
+
+
+def test_round_sync_mixed_arrivals_weighted_mean():
+    """Timely pod at weight 1, delayed pod at w=α·2^(−a): the aggregate is
+    (1·p₀ + w·p₁)/(1 + w) — also exercises num > 1 (no clamp effect)."""
+    cfg = OppSyncConfig(scheme="async", axis="pod")
+    pods = jnp.asarray([[2.0], [10.0]])
+    arrived = jnp.asarray([True, False])
+
+    def one(p, arr):
+        return round_sync(cfg, _pod_state(p), arr).params["w"]
+
+    out = jax.vmap(one, axis_name="pod")(pods, arrived)
+    w = cfg.async_alpha * 2.0 ** (-cfg.async_a)
+    want = (2.0 + w * 10.0) / (1.0 + w)
+    np.testing.assert_allclose(np.asarray(out), want, rtol=1e-6)
 
 
 _SUBPROCESS_SCRIPT = textwrap.dedent("""

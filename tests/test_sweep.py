@@ -14,10 +14,11 @@ import jax.numpy as jnp
 
 from repro.core import latency as lat
 from repro.core.fused_round import probe_schedule_mask
-from repro.core.hsfl import HSFLConfig, build_sim_arrays
+from repro.core.hsfl import (HSFLConfig, build_sim_arrays,
+                             model_compress_ratio)
 from repro.core.selection import schedule_users, select_users_jax
-from repro.core.sweep import (SweepSpec, compile_spec, run_hsfl_on_device,
-                              run_sweep)
+from repro.core.sweep import (B_SWEPT, SweepSpec, compile_spec, fig3c_spec,
+                              run_hsfl_on_device, run_sweep)
 from repro.core.transmission import scheduled_epochs
 
 
@@ -85,6 +86,45 @@ def test_compile_spec_rejects_static_pin():
     spec = SweepSpec(base=tiny_base(), schemes=(("opt", {"rounds": 3}),))
     with pytest.raises(ValueError):
         compile_spec(spec)
+
+
+def test_compile_spec_swept_b_is_poisoned():
+    """When b rides the traced config axis, ``base.b`` must NOT silently pin
+    to the first column (the old behaviour): it is poisoned to B_SWEPT so
+    any static consumer fails loudly, and a static ``schedule_override``
+    (the one genuinely b-coupled static) is rejected outright."""
+    spec = SweepSpec(base=tiny_base(), seeds=(0,), b=(1.0, 2.0, 3.0))
+    g = compile_spec(spec)[0]
+    assert g.base.b == B_SWEPT
+    assert [c["b"] for c in g.cfgs] == [1.0, 2.0, 3.0]
+    # the real Fig. 3(c) panel spec sweeps b the same way
+    for g3 in compile_spec(fig3c_spec(rounds=2)[0]):
+        assert g3.base.b == B_SWEPT
+    # a single-valued b axis still pins base.b for static consumers
+    assert compile_spec(SweepSpec(base=tiny_base(), b=(4.0,)))[0].base.b == 4
+    bad = SweepSpec(base=tiny_base(schedule_override=(1,)), b=(1.0, 2.0))
+    with pytest.raises(ValueError, match="schedule_override"):
+        compile_spec(bad)
+
+
+def test_compile_spec_group_statics_labels_and_lowering():
+    """``use_delta_codec`` pins as a *group static* (codec on/off groups in
+    one spec), labels tell same-scheme groups apart, and a b=1 discard
+    group lowers onto the OPT program (discard is opt with zero probes)."""
+    spec = SweepSpec(base=tiny_base(), seeds=(0,),
+                     schemes=(("opt", {"b": 2.0}),
+                              ("opt", {"b": 2.0, "use_delta_codec": True}),
+                              ("discard", {"b": 1.0})))
+    gs = compile_spec(spec)
+    assert [g.label for g in gs] == ["opt", "opt+codec", "discard"]
+    assert gs[1].base.use_delta_codec and not gs[0].base.use_delta_codec
+    assert gs[2].program_scheme == "opt"
+    assert compile_spec(spec, lower_discard=False)[2].program_scheme \
+        == "discard"
+    # discard at b != 1 is NOT opt (the budget still shapes selection):
+    # it must keep its dedicated program
+    spec2 = SweepSpec(base=tiny_base(), schemes=(("discard", {"b": 2.0}),))
+    assert compile_spec(spec2)[0].program_scheme == "discard"
 
 
 def test_build_sim_arrays_shapes_and_padding():
@@ -172,3 +212,129 @@ def test_run_hsfl_on_device_single_sim():
     log = run_hsfl_on_device(tiny_base(scheme="discard", b=1))
     assert len(log.rounds) == 2
     assert all(r.selected <= 4 for r in log.rounds)
+
+
+# -- int8 delta-codec snapshots on the device round / sweep engine ------------
+
+@pytest.fixture(scope="module")
+def codec_panel():
+    """A Fig. 3(b)-shaped panel with codec snapshots: opt(b=2) vs async vs
+    discard, all on the delta codec."""
+    spec = SweepSpec(base=tiny_base(rounds=3, local_epochs=6,
+                                    use_delta_codec=True),
+                     seeds=(0,),
+                     schemes=(("opt", {"b": 2.0}), ("async", {"b": 1.0}),
+                              ("discard", {"b": 1.0})))
+    return spec, run_sweep(spec, mesh=None)
+
+
+def test_codec_panel_compiles_two_programs(codec_panel):
+    """Acceptance: a fig3b-style codec panel is at most 2 compiled programs
+    — opt-codec + async; discard rides the opt program pinned at b=1."""
+    spec, res = codec_panel
+    assert res.n_programs == 2
+    assert [g.program_id for g in res.groups] == [0, 1, 0]
+    assert [g.label for g in res.groups] == ["opt+codec", "async+codec",
+                                             "discard+codec"]
+    for g in res.groups:
+        m = g.metrics
+        assert np.all((m["test_acc"] >= 0) & (m["test_acc"] <= 1))
+        assert np.all(np.isfinite(m["test_loss"]))
+        # codec payload accounting: every wire byte is ≤ codec_ratio of the
+        # uncompressed model payload (plus the small SL activation rider)
+        cap = (0.26 * spec.base.model_bytes * spec.base.k_select
+               * max(spec.base.b, 2) + 1e6)
+        assert np.all(m["bytes_sent"] <= cap)
+
+
+def test_codec_discard_lowering_bitforbit(codec_panel):
+    """The lowered discard group (opt program @ b=1) must reproduce the
+    dedicated discard program exactly, metric for metric."""
+    spec, res = codec_panel
+    ref = run_sweep(spec, mesh=None, lower_discard=False)
+    assert ref.n_programs == 3
+    got = next(g for g in res.groups if g.scheme == "discard")
+    want = next(g for g in ref.groups if g.scheme == "discard")
+    for key in want.metrics:
+        np.testing.assert_array_equal(got.metrics[key], want.metrics[key],
+                                      err_msg=key)
+
+
+def test_codec_sweep_sharded_smoke():
+    """Tiny codec sweep on the ("sweep",) mesh (1 device under tier-1; the
+    CI sweep-smoke job forces 2 host devices): opt + lowered discard share
+    one program and the sharded run stays deterministic."""
+    from repro.launch.mesh import make_sweep_mesh
+    spec = SweepSpec(base=tiny_base(use_delta_codec=True), seeds=(0, 1),
+                     schemes=(("opt", {"b": 2.0}), ("discard", {"b": 1.0})))
+    res = run_sweep(spec, mesh=make_sweep_mesh())
+    assert res.n_programs == 1                  # discard reuses opt-codec
+    for g in res.groups:
+        assert g.metrics["test_acc"].shape == (2, 1, spec.base.rounds)
+        assert np.all(np.isfinite(g.metrics["test_loss"]))
+    assert np.all(res.groups[1].metrics["rescued"] == 0)
+
+
+def test_device_round_codec_matches_matched_channels():
+    """Seeded equivalence of device-round codec rescues: against an
+    uncompressed device run with ``compress_ratio`` pinned to the same
+    ``codec_ratio`` value, the RNG streams, selection, τ budgets and
+    probe/arrival decisions are identical — so the per-round count/byte
+    trajectories must match EXACTLY, and the aggregated params may differ
+    only by the int8 quantization noise that rescued contributions carry
+    (the test_fused_round tolerance policy, scaled for compounding over
+    rounds).  This is the device-engine analogue of
+    ``test_fused_matches_host_with_delta_codec`` — the host-vs-device RNG
+    streams themselves are intentionally different (EXPERIMENTS.md), so
+    the matched realization is constructed on the device side."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.channel_lib import fleet_init
+    from repro.core.fused_round import DeviceSimCarry, build_device_round
+    from repro.models import cnn as cnn_mod
+
+    base = dict(rounds=4, n_uavs=8, k_select=4, n_train=400, n_test=100,
+                steps_per_epoch=2, local_epochs=6, scheme="opt", b=3,
+                seed=1)
+    ratio = model_compress_ratio(HSFLConfig(use_delta_codec=True, **base))
+
+    def run_dev(cfg):
+        sim = {k: jnp.asarray(v)
+               for k, v in build_sim_arrays(cfg).items()}
+        params0 = cnn_mod.init_cnn(jax.random.PRNGKey(cfg.seed))
+        fleet0 = fleet_init(jax.random.PRNGKey(cfg.seed + 1), cfg.n_uavs,
+                            cfg.channel)
+        rkeys = jax.random.split(
+            jax.random.fold_in(jax.random.PRNGKey(cfg.seed), 2), cfg.rounds)
+        k = cfg.k_select
+        zstack = jax.tree_util.tree_map(
+            lambda a: jnp.zeros((k,) + a.shape, a.dtype), params0)
+        carry = DeviceSimCarry(params0, fleet0, zstack,
+                               jnp.zeros((k,), bool))
+        rf = jax.jit(build_device_round(
+            scheme="opt", local_epochs=cfg.local_epochs,
+            steps_per_epoch=cfg.steps_per_epoch, batch_size=cfg.batch_size,
+            lr=cfg.lr, k_select=k, channel=cfg.channel,
+            model_bytes=cfg.model_bytes,
+            ue_model_fraction=cfg.ue_model_fraction,
+            compress_ratio=model_compress_ratio(cfg),
+            use_codec=cfg.use_delta_codec,
+            interpret=jax.default_backend() != "tpu"))
+        cfgv = {"b": jnp.float32(cfg.b), "tau_max": jnp.float32(cfg.tau_max),
+                "bandwidth_ratio": jnp.float32(1.0)}
+        traj = []
+        for t in range(cfg.rounds):
+            carry, m = rf(carry, rkeys[t], sim, cfgv)
+            traj.append((int(m.selected), int(m.arrived), int(m.rescued),
+                         int(m.dropped), float(m.bytes_sent)))
+        return traj, carry.params
+
+    traj_c, p_c = run_dev(HSFLConfig(use_delta_codec=True, **base))
+    traj_p, p_p = run_dev(HSFLConfig(compress_ratio=ratio, **base))
+    assert sum(t[2] for t in traj_c) > 0, "fixture no longer rescues"
+    assert traj_c == traj_p, (traj_c, traj_p)
+    diff = max(float(np.max(np.abs(np.asarray(x) - np.asarray(y))))
+               for x, y in zip(jax.tree_util.tree_leaves(p_c),
+                               jax.tree_util.tree_leaves(p_p)))
+    assert diff < 5e-3, diff
