@@ -4,9 +4,22 @@ Measures rounds/sec of ``HSFLSimulation.run_round`` at the paper's scale
 (30 UAVs, K=10 selected, e=6 local epochs, b=2, OPT scheme) for:
 
   host          — the original Python control loop over OppTransmitter
-  fused         — the single-jit device round (core/fused_round)
-  fused_sharded — same, with the stacked-user axis sharded over N forced
-                  host devices (bench-only: XLA_FLAGS set in a subprocess)
+  fused         — the single-jit device round (core/fused_round) on the
+                  default forward policy: the pool-first custom-VJP
+                  training step (kernels/fused_cnn) + donated round
+                  carries.  ``--kernel``/``--precision`` reroute it.
+  fused_im2col  — the same round on the PR-1 step (forward_im2col +
+                  autodiff, no donation-relevant change): the compute
+                  floor the custom-VJP step is measured against,
+                  *within the same run*
+  fused_bf16    — default kernel at precision=bf16 (mixed precision; on
+                  CPU bf16 is emulated, so this row is a numerics
+                  regression canary, not a speed win — on TPU it is the
+                  point)
+  fused_pallas  — the Pallas kernel suite; interpret mode off-TPU (value
+                  pin + smoke, expect it slower on CPU)
+  fused_sharded — default policy, with the stacked-user axis sharded over
+                  N forced host devices (bench-only XLA_FLAGS subprocess)
   fused_codec   — fused with int8 delta-codec snapshots
 
 plus the PR-2 *grid* engines, which time the whole Fig. 3(b) panel
@@ -31,7 +44,12 @@ plus the PR-2 *grid* engines, which time the whole Fig. 3(b) panel
 Methodology: each engine runs in its own subprocess (so XLA device forcing
 can't leak); per engine we run ``--warmup`` rounds first on the same
 simulation instance so every K-bucket jit variant is compiled, then time
-``--rounds`` rounds and report the mean.  Results append to BENCH_hsfl.json.
+``--rounds`` rounds and report the mean.  Exception: the ``fused`` vs
+``fused_im2col`` comparison is measured *interleaved in one process*
+(round of one, round of the other, repeated): the bench container's
+throughput swings ±50% minute to minute, so sequential subprocesses
+minutes apart cannot resolve the 3–30% step-level delta — those two rows
+carry ``"paired": true``.  Results append to BENCH_hsfl.json.
 
   PYTHONPATH=src python -m benchmarks.hsfl_round_bench
   PYTHONPATH=src python -m benchmarks.hsfl_round_bench --rounds 20 --devices 2
@@ -45,8 +63,14 @@ import subprocess
 import sys
 
 
-ENGINES = ("host", "fused", "fused_codec", "fused_sharded",
+ENGINES = ("host", "fused", "fused_im2col", "fused_bf16", "fused_pallas",
+           "fused_codec", "fused_sharded",
            "grid_loop", "grid_sweep", "grid_sweep_codec")
+
+# engine name -> forward-policy override (None = use the CLI flags)
+ENGINE_POLICY = {"fused_im2col": ("im2col", "f32"),
+                 "fused_bf16": (None, "bf16"),
+                 "fused_pallas": ("pallas", None)}
 
 
 def measure_grid(engine: str, rounds: int, seeds: int) -> dict:
@@ -89,15 +113,68 @@ def measure_grid(engine: str, rounds: int, seeds: int) -> dict:
     res = run_sweep(spec, timeit=True)
     steady = sum(g.run_s for g in res.groups)
     compile_s = sum(g.compile_s for g in res.groups)
-    wall = steady + compile_s
+    # background AOT compiles overlap execution, so the critical-path wall
+    # is the compile total minus what was hidden behind running groups
+    wall = steady + compile_s - res.compile_overlap_s
     return dict(base, engine=engine, wall_s=round(wall, 2),
                 steady_wall_s=round(steady, 2),
                 compile_s=round(compile_s, 2),
+                compile_overlap_s=round(res.compile_overlap_s, 2),
                 compiled_programs=res.n_programs,
                 sim_rounds_per_sec=round(base["sims"] * rounds / steady, 3))
 
 
-def measure(engine: str, warmup: int, rounds: int) -> dict:
+def measure_pair(warmup: int, rounds: int, kernel: str = "xla",
+                 precision: str = "f32") -> dict:
+    """Interleave the policy-selected fused engine (``--kernel``/
+    ``--precision``; default the custom-VJP xla/f32 step) against the PR-1
+    autodiff baseline (kernel=im2col) round by round in ONE process, so
+    both see the same container throttling — the only way this box can
+    resolve their delta (see module docstring)."""
+    import time
+
+    import jax
+
+    from repro.core.hsfl import HSFLConfig, HSFLSimulation
+
+    pair = {"fused": (kernel, precision), "fused_im2col": ("im2col", "f32")}
+    sims, state = {}, {}
+    for name, (kern, prec) in pair.items():
+        cfg = HSFLConfig(scheme="opt", b=2, rounds=warmup + rounds,
+                         kernel=kern, precision=prec)
+        sims[name] = HSFLSimulation(cfg)
+        state[name] = ([], 1)
+    for name, sim in sims.items():
+        delayed, t = state[name]
+        for _ in range(warmup):
+            _, delayed = sim.run_round(t, delayed)
+            t += 1
+        jax.block_until_ready(sim.params)
+        state[name] = (delayed, t)
+    tot = {k: 0.0 for k in sims}
+    sel = {k: 0 for k in sims}
+    for _ in range(rounds):
+        for name, sim in sims.items():
+            delayed, t = state[name]
+            t0 = time.time()
+            log, delayed = sim.run_round(t, delayed)
+            jax.block_until_ready(sim.params)
+            tot[name] += time.time() - t0
+            sel[name] += log.selected
+            state[name] = (delayed, t + 1)
+    rows = []
+    for name, (kern, prec) in pair.items():
+        ms = tot[name] / rounds * 1e3
+        rows.append({"engine": name, "ms_per_round": round(ms, 1),
+                     "rounds_per_sec": round(1e3 / ms, 3),
+                     "mean_selected": round(sel[name] / rounds, 1),
+                     "kernel": kern, "precision": prec, "paired": True,
+                     "devices": len(jax.devices())})
+    return {"engine": "fused_pair", "rows": rows}
+
+
+def measure(engine: str, warmup: int, rounds: int,
+            kernel: str = "xla", precision: str = "f32") -> dict:
     import time
 
     import jax
@@ -106,9 +183,11 @@ def measure(engine: str, warmup: int, rounds: int) -> dict:
 
     if engine not in ENGINES:
         raise SystemExit(f"unknown engine {engine!r}; choose from {ENGINES}")
+    k_over, p_over = ENGINE_POLICY.get(engine, (None, None))
     cfg = HSFLConfig(scheme="opt", b=2, rounds=warmup + rounds,
                      use_fused_round=engine != "host",
-                     use_delta_codec=engine == "fused_codec")
+                     use_delta_codec=engine == "fused_codec",
+                     kernel=k_over or kernel, precision=p_over or precision)
     sim = HSFLSimulation(cfg)
     delayed, t = [], 1
     for _ in range(warmup):
@@ -126,10 +205,12 @@ def measure(engine: str, warmup: int, rounds: int) -> dict:
     return {"engine": engine, "ms_per_round": round(ms, 1),
             "rounds_per_sec": round(1e3 / ms, 3),
             "mean_selected": round(selected / rounds, 1),
+            "kernel": cfg.kernel, "precision": cfg.precision,
             "devices": len(jax.devices())}
 
 
-def run_child(engine: str, args, devices: int = 1, tag: str = "") -> dict:
+def run_child(engine: str, args, devices: int = 1, tag: str = "",
+              rounds: int | None = None, warmup: int | None = None) -> dict:
     env = dict(os.environ)
     env["PYTHONPATH"] = os.pathsep.join(
         [os.path.join(os.path.dirname(__file__), "..", "src")]
@@ -139,8 +220,10 @@ def run_child(engine: str, args, devices: int = 1, tag: str = "") -> dict:
                             f" --xla_force_host_platform_device_count={devices}")
     out = subprocess.run(
         [sys.executable, "-m", "benchmarks.hsfl_round_bench",
-         "--engine", engine, "--warmup", str(args.warmup),
-         "--rounds", str(args.rounds),
+         "--engine", engine,
+         "--warmup", str(args.warmup if warmup is None else warmup),
+         "--rounds", str(args.rounds if rounds is None else rounds),
+         "--kernel", args.kernel, "--precision", args.precision,
          "--grid-rounds", str(args.grid_rounds),
          "--grid-seeds", str(args.grid_seeds)],
         capture_output=True, text=True, env=env,
@@ -149,6 +232,11 @@ def run_child(engine: str, args, devices: int = 1, tag: str = "") -> dict:
         raise RuntimeError(f"{engine} failed:\n{out.stdout}\n{out.stderr}")
     rec = json.loads(out.stdout.strip().splitlines()[-1])
     name = tag or engine
+    if "rows" in rec:
+        for row in rec["rows"]:
+            print(f"{row['engine']:18s} {row['ms_per_round']:8.1f} ms/round "
+                  f"({row['rounds_per_sec']:.3f} rounds/s, paired)")
+        return rec
     rec["engine"] = name
     if "ms_per_round" in rec:
         print(f"{name:18s} {rec['ms_per_round']:8.1f} ms/round "
@@ -173,6 +261,15 @@ def main() -> None:
                     help="seeds per scheme for the fig3b grid engines")
     ap.add_argument("--skip-grid", action="store_true",
                     help="only run the single-round engines")
+    ap.add_argument("--kernel", default="xla",
+                    choices=["xla", "pallas", "im2col"],
+                    help="forward policy for the default fused engine "
+                         "(kernels/fused_cnn.ForwardPolicy)")
+    ap.add_argument("--precision", default="f32", choices=["f32", "bf16"],
+                    help="compute precision for the default fused engine")
+    ap.add_argument("--skip-policy-rows", action="store_true",
+                    help="skip the fused_im2col/fused_bf16/fused_pallas "
+                         "policy comparison rows")
     ap.add_argument("--out", default="BENCH_hsfl.json")
     ap.add_argument("--engine", default=None,
                     help="(internal) measure one engine and print JSON")
@@ -182,29 +279,50 @@ def main() -> None:
         if args.engine.startswith("grid_"):
             rec = measure_grid(args.engine, args.grid_rounds,
                                args.grid_seeds)
+        elif args.engine == "fused_pair":
+            rec = measure_pair(args.warmup, args.rounds,
+                               kernel=args.kernel, precision=args.precision)
         else:
-            rec = measure(args.engine, args.warmup, args.rounds)
+            rec = measure(args.engine, args.warmup, args.rounds,
+                          kernel=args.kernel, precision=args.precision)
         print(json.dumps(rec))
         return
 
-    recs = [run_child("host", args),
-            run_child("fused", args),
-            run_child("fused_codec", args)]
+    recs = [run_child("host", args)]
+    recs += run_child("fused_pair", args)["rows"]
+    if not args.skip_policy_rows:
+        # bf16 at full length (it is a numerics canary); the interpret-mode
+        # Pallas row at reduced length — off-TPU it only pins that the
+        # kernel path runs end to end, not its speed
+        recs.append(run_child("fused_bf16", args))
+        recs.append(run_child("fused_pallas", args,
+                              rounds=max(2, args.rounds // 4),
+                              warmup=min(2, args.warmup)))
+    recs.append(run_child("fused_codec", args))
     if args.devices > 1:
         recs.append(run_child("fused_sharded", args, devices=args.devices))
 
-    host_ms = recs[0]["ms_per_round"]
+    by = {r["engine"]: r for r in recs}
+    host_ms = by["host"]["ms_per_round"]
     result = {
         "config": {"n_uavs": 30, "k_select": 10, "local_epochs": 6, "b": 2,
                    "scheme": "opt", "steps_per_epoch": 4, "batch_size": 10,
                    "rounds_timed": args.rounds, "warmup": args.warmup},
         "engines": recs,
-        "speedup_fused_vs_host": round(host_ms / recs[1]["ms_per_round"], 2),
+        "speedup_fused_vs_host": round(host_ms / by["fused"]["ms_per_round"],
+                                       2),
+        # the compute-floor comparison: custom-VJP step vs the PR-1
+        # autodiff step, same container, same run
+        "speedup_fused_vs_im2col": round(
+            by["fused_im2col"]["ms_per_round"] / by["fused"]["ms_per_round"],
+            2),
     }
     if args.devices > 1:
         result["speedup_sharded_vs_host"] = round(
-            host_ms / recs[-1]["ms_per_round"], 2)
+            host_ms / by["fused_sharded"]["ms_per_round"], 2)
     print(f"\nspeedup fused vs host: {result['speedup_fused_vs_host']}x")
+    print(f"speedup fused (custom-VJP) vs im2col step: "
+          f"{result['speedup_fused_vs_im2col']}x")
     if "speedup_sharded_vs_host" in result:
         print(f"speedup sharded vs host: {result['speedup_sharded_vs_host']}x")
 

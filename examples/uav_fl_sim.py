@@ -31,6 +31,13 @@ ap.add_argument("--codec", action="store_true",
                 help="int8 delta-codec snapshots (kernels/delta_codec): "
                      "payloads shrink ~4x and rescues carry quantization "
                      "noise — runs on either engine")
+ap.add_argument("--kernel", default="xla", choices=["xla", "pallas", "im2col"],
+                help="CNN hot-path kernel (kernels/fused_cnn): the "
+                     "custom-VJP fused step (default), the Pallas suite "
+                     "(interpret off-TPU), or the PR-1 autodiff baseline")
+ap.add_argument("--precision", default="f32", choices=["f32", "bf16"],
+                help="compute precision of the training step (bf16 keeps "
+                     "f32 master params and loss)")
 args = ap.parse_args()
 
 seed_list = tuple(args.seed + i for i in range(args.seeds))
@@ -42,7 +49,8 @@ if args.engine == "sweep":
     from repro.core.sweep import SweepSpec, run_sweep
 
     base = HSFLConfig(rounds=args.rounds, distribution=args.distribution,
-                      use_delta_codec=args.codec)
+                      use_delta_codec=args.codec, kernel=args.kernel,
+                      precision=args.precision)
     spec = SweepSpec(base=base, seeds=seed_list,
                      schemes=tuple((s, {"b": float(b)}) for s, b in SCHEMES))
     res = run_sweep(spec, verbose=True)
@@ -60,7 +68,9 @@ else:
         results[scheme] = [
             run_hsfl(HSFLConfig(scheme=scheme, b=b, rounds=args.rounds,
                                 distribution=args.distribution, seed=sd,
-                                use_delta_codec=args.codec),
+                                use_delta_codec=args.codec,
+                                kernel=args.kernel,
+                                precision=args.precision),
                      verbose=True)
             for sd in seed_list]
 

@@ -8,9 +8,13 @@ jitted function:
 
   - the K selected users live on a leading stacked axis (one ``vmap``);
   - the e local epochs run as ``lax.scan`` segments inside one jit, with the
-    per-user SGD step lowered through ``cnn.forward_im2col`` (matmul
-    convolutions — ~4x faster than the vmapped ``conv_general_dilated``
-    lowering on CPU);
+    per-user SGD step lowered through the ``kernels/fused_cnn`` forward
+    policy — by default the pool-first fused step with a hand-written VJP
+    and a closed-form softmax-CE cotangent (bit-identical forward to
+    ``cnn.forward_im2col`` at f32; ``kernel="pallas"`` routes the same
+    algorithm through the Pallas kernel suite, ``precision="bf16"`` runs
+    bf16 compute against f32 master params, ``kernel="im2col"`` restores
+    the PR-1 autodiff step);
   - the OPT scheduler (eqs. 14–16: scheduled probes, outage voids, snapshot
     overwrite, τ_extra bookkeeping) runs on-device and branch-free through
     ``opportunistic_sync.snapshot_decision`` — the same algorithmic core the
@@ -55,9 +59,10 @@ from repro.core.channel_lib import (ChannelParams, FleetState,
                                     fleet_rates, fleet_resample_fading)
 from repro.core.opportunistic_sync import snapshot_decision
 from repro.core.selection import select_users_jax
-from repro.kernels.delta_codec.kernel import dequantize_blocks, quantize_blocks
+from repro.kernels.delta_codec.kernel import (BLOCK, dequantize_blocks,
+                                              quantize_blocks)
 from repro.kernels.delta_codec.ops import stacked_flatten, stacked_unflatten
-from repro.models import cnn as cnn_mod
+from repro.kernels.fused_cnn.ops import resolve_train_step
 from repro.training.loss import accuracy, cross_entropy
 
 
@@ -96,11 +101,11 @@ def _masked_mean(contrib, weights, fallback):
         contrib, fallback)
 
 
-def _codec_encode(stacked, params, interpret: bool):
+def _codec_encode(stacked, params, interpret: bool, block: int = BLOCK):
     """Quantize the stacked users' delta vs the round-start global params
-    into the int8 codec state ``(q (K, M, BLOCK), scales (K, M, 1))``."""
+    into the int8 codec state ``(q (K, M, block), scales (K, M, 1))``."""
     delta = jax.tree_util.tree_map(lambda s, p: s - p[None], stacked, params)
-    flat, _ = stacked_flatten(delta)
+    flat, _ = stacked_flatten(delta, block=block)
     k, rows, blk = flat.shape
     q, s = quantize_blocks(flat.reshape(k * rows, blk), interpret=interpret)
     return q.reshape(k, rows, blk), s.reshape(k, rows, 1)
@@ -116,24 +121,28 @@ def _codec_decode(q, s, stacked_like, params, interpret: bool):
     return jax.tree_util.tree_map(lambda d, p: p[None] + d, delta, params)
 
 
-def _codec_zero_state(stacked):
+def _codec_zero_state(stacked, block: int = BLOCK):
     """All-zero codec state shaped for ``stacked`` (decodes to the global
     params; never aggregated before a probe succeeds — ``has_snap`` gates)."""
-    flat, _ = stacked_flatten(stacked)
+    flat, _ = stacked_flatten(stacked, block=block)
     return (jnp.zeros(flat.shape, jnp.int8),
             jnp.zeros(flat.shape[:2] + (1,), jnp.float32))
 
 
-def _make_epoch_fn(fwd: Callable, lr: float) -> Callable:
-    """One local epoch for one user: scan of SGD steps (Alg. 1 l. 8)."""
+def _make_epoch_fn(loss_grad: Callable, lr: float) -> Callable:
+    """One local epoch for one user: scan of SGD steps (Alg. 1 l. 8).
+
+    ``loss_grad`` is the policy-resolved fused training step
+    (``kernels/fused_cnn.make_loss_grad``): under the default policy the
+    hand-written backward (plus the closed-form softmax-CE cotangent)
+    replaces autodiff, and under ``precision="bf16"`` it computes in bf16
+    internally while keeping the loss and the returned grads f32 — so the
+    master params this scan carries and the SGD update stay f32 regardless
+    of the compute precision."""
     def epoch_fn(params, xs, ys):
         def step(p, batch):
             bx, by = batch
-
-            def loss(q):
-                return cross_entropy(fwd(q, bx), by)
-
-            g = jax.grad(loss)(p)
+            _, g = loss_grad(p, bx, by)
             p = jax.tree_util.tree_map(lambda w, gg: w - lr * gg, p, g)
             return p, ()
 
@@ -188,7 +197,7 @@ def build_fused_round(*, scheme: str, local_epochs: int, steps_per_epoch: int,
                       lr: float, tau_max: float, probe_epochs: Tuple[int, ...],
                       async_weight: float = 0.0, use_codec: bool = False,
                       interpret: bool = False, k_carry: int = 0,
-                      forward: Callable = None,
+                      forward: Any = None, codec_block: int = BLOCK,
                       stacked_sharding: Any = None) -> Callable:
     """Compile one HSFL round for a fixed (scheme, e, steps, schedule).
 
@@ -198,8 +207,18 @@ def build_fused_round(*, scheme: str, local_epochs: int, steps_per_epoch: int,
     of device arrays: rates/outages (e, K), payload_bits/tau_extra0/
     final_rate/train_time (K,), final_outage/valid (K,) bool.  The result is
     ``(new_params, stats)`` plus ``new_delayed_stack`` for async.
+
+    ``forward`` is a ``kernels/fused_cnn.ForwardPolicy`` (or ``None`` for
+    the default xla/f32 policy; a bare callable is a legacy hook used by
+    tests that push non-CNN models through the round).  The round carries
+    are **donated**: the caller's ``params`` (and, for async, the straggler
+    ``delayed_stack``/``delayed_mask``) buffers alias the returned ones, so
+    chaining rounds the way ``HSFLSimulation`` does stops copying the full
+    parameter state every dispatch — do not reuse those arrays after the
+    call.  ``codec_block`` is the delta-codec quantization group width
+    (``HSFLConfig.codec_block``).
     """
-    fwd = forward or cnn_mod.forward_im2col
+    loss_grad, _ = resolve_train_step(forward, interpret)
     if scheme not in ("opt", "discard", "async"):
         raise ValueError(scheme)
 
@@ -208,7 +227,7 @@ def build_fused_round(*, scheme: str, local_epochs: int, steps_per_epoch: int,
             f"async build_fused_round needs k_carry >= 1 (the fixed width "
             f"of the straggler carry), got k_carry={k_carry}")
 
-    epoch_all = jax.vmap(_make_epoch_fn(fwd, lr))
+    epoch_all = jax.vmap(_make_epoch_fn(loss_grad, lr))
 
     def _train_and_probe(params, xs, ys, chan):
         k = chan["valid"].shape[0]
@@ -223,7 +242,8 @@ def build_fused_round(*, scheme: str, local_epochs: int, steps_per_epoch: int,
         tau_extra = chan["tau_extra0"]
         has_snap = jnp.zeros((k,), bool)
         nsent = jnp.zeros((k,), jnp.int32)
-        snap = _codec_zero_state(stacked) if use_codec else stacked
+        snap = (_codec_zero_state(stacked, codec_block) if use_codec
+                else stacked)
 
         # epochs advance in lockstep; the probe schedule is static, so the
         # OPT transmission logic is only compiled at scheduled boundaries
@@ -236,7 +256,8 @@ def build_fused_round(*, scheme: str, local_epochs: int, steps_per_epoch: int,
                 ok, tau_extra = snapshot_decision(chan["valid"], outage,
                                                   tau, tau_extra)
                 if use_codec:
-                    q_new, s_new = _codec_encode(stacked, params, interpret)
+                    q_new, s_new = _codec_encode(stacked, params, interpret,
+                                                 codec_block)
                     snap = (jnp.where(_kx(ok, q_new), q_new, snap[0]),
                             jnp.where(_kx(ok, s_new), s_new, snap[1]))
                 else:
@@ -273,7 +294,9 @@ def build_fused_round(*, scheme: str, local_epochs: int, steps_per_epoch: int,
             return new_params, RoundStats(arrived, rescued, delayed,
                                           dropped, nsent)
 
-        return jax.jit(round_fn)
+        # params -> new_params aliases in place: the round loop stops
+        # copying the global model every dispatch
+        return jax.jit(round_fn, donate_argnums=(0,))
 
     # -- async: timely finals at weight 1, prior-round stragglers at
     #    α(s+1)^(−a); a round with only stragglers falls back to the
@@ -305,7 +328,10 @@ def build_fused_round(*, scheme: str, local_epochs: int, steps_per_epoch: int,
         return (new_params, carry_stack, carry_mask,
                 RoundStats(arrived, rescued, delayed_new, dropped, nsent))
 
-    return jax.jit(round_fn)
+    # params + the (k_carry, ...) straggler stack/mask alias their outputs:
+    # the async chain stops copying the full per-user parameter stack
+    # every round
+    return jax.jit(round_fn, donate_argnums=(0, 1, 2))
 
 
 # ---------------------------------------------------------------------------
@@ -364,7 +390,8 @@ def build_device_round(*, scheme: str, local_epochs: int,
                        async_alpha: float = 0.4, async_a: float = 0.5,
                        max_sl: int | None = None,
                        act_bytes_per_sample: float = 3136.0,
-                       forward: Callable = None) -> Callable:
+                       codec_block: int = BLOCK,
+                       forward: Any = None) -> Callable:
     """One HSFL round with the *entire* control plane on-device.
 
     Unlike ``build_fused_round`` (which consumes host-presampled channel
@@ -402,11 +429,19 @@ def build_device_round(*, scheme: str, local_epochs: int,
     RNG streams (fleet state + batch indices) are jax.random, not the host
     numpy generators: device runs are seeded and self-consistent but not
     bit-identical to the host reference (see EXPERIMENTS.md).
+
+    ``forward`` is a ``kernels/fused_cnn.ForwardPolicy`` (``None`` → the
+    default xla/f32 policy): local training runs through its custom-VJP
+    training step, in-program eval through its (value-identical) plain
+    forward.  ``codec_block`` is the quantization group width of the
+    delta-codec snapshot carry.  The returned ``round_fn`` is *unjitted* —
+    the sweep engine scans it and donates the whole ``DeviceSimCarry``
+    (params, fleet, stragglers) at its own jit boundary.
     """
-    fwd = forward or cnn_mod.forward_im2col
+    loss_grad, fwd_eval = resolve_train_step(forward, interpret)
     if scheme not in ("opt", "discard", "async"):
         raise ValueError(scheme)
-    epoch_all = jax.vmap(_make_epoch_fn(fwd, lr))
+    epoch_all = jax.vmap(_make_epoch_fn(loss_grad, lr))
     aw = float(async_alpha) * 2.0 ** (-float(async_a))
     # the codec (or a manual compress_ratio) shrinks every model payload on
     # the wire, so the *effective* bytes drive selection feasibility/energy
@@ -480,7 +515,8 @@ def build_device_round(*, scheme: str, local_epochs: int,
                     # the snapshot carry is the int8 payload itself, so the
                     # epoch scan carries ~4x fewer snapshot bytes and the
                     # rescue later decodes with true quantization noise
-                    q_new, s_new = _codec_encode(stacked, params, interpret)
+                    q_new, s_new = _codec_encode(stacked, params, interpret,
+                                                 codec_block)
                     snap = (jnp.where(_kx(ok, q_new), q_new, snap[0]),
                             jnp.where(_kx(ok, s_new), s_new, snap[1]))
                 else:
@@ -489,7 +525,8 @@ def build_device_round(*, scheme: str, local_epochs: int,
                 nsent = nsent + ok.astype(jnp.int32)
             return (fleet, stacked, snap, has_snap, nsent, tau_extra), ()
 
-        snap0 = _codec_zero_state(stacked) if use_codec else stacked
+        snap0 = (_codec_zero_state(stacked, codec_block) if use_codec
+                 else stacked)
         carry_e = (fleet, stacked, snap0, jnp.zeros((K,), bool),
                    jnp.zeros((K,), jnp.int32), tau_extra)
         carry_e, _ = jax.lax.scan(epoch_body, carry_e,
@@ -529,7 +566,7 @@ def build_device_round(*, scheme: str, local_epochs: int,
         act = act_bytes_per_sample * sim["samples"][sel]
         bytes_sent = bytes_sent + jnp.sum(
             jnp.where(valid & mode_sl & (events > 0), act, 0.0))
-        logits = fwd(new_params, sim["test_x"])
+        logits = fwd_eval(new_params, sim["test_x"])
         metrics = DeviceRoundMetrics(
             selected=n_taken,
             arrived=jnp.sum(arrived.astype(jnp.int32)),

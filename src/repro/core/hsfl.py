@@ -75,9 +75,19 @@ class HSFLConfig:
     compress_ratio: float = 1.0    # <1 when snapshots are compressed
     # int8 delta-codec snapshots (kernels/delta_codec): compress_ratio is
     # then derived from the actual int8+scale byte count of the model, and
-    # rescued snapshots carry real quantization noise.
+    # rescued snapshots carry real quantization noise.  codec_block is the
+    # quantization group width (lanes per absmax scale) — sweepable as a
+    # group static: smaller blocks mean tighter scales (less noise) but a
+    # higher wire-byte overhead (the eq. 15 frontier of arXiv:2405.00681).
     use_delta_codec: bool = False
+    codec_block: int = 512
     use_fused_round: bool = True   # False -> host OppTransmitter reference
+    # CNN hot-path policy (kernels/fused_cnn.ForwardPolicy), device engines
+    # only — the host reference loop always runs the autodiff step:
+    #   kernel:    xla (custom-VJP fused step, default) | pallas | im2col
+    #   precision: f32 (value-pinned) | bf16 (mixed precision)
+    kernel: str = "xla"
+    precision: str = "f32"
     schedule_override: tuple = ()  # manual opportunistic schedule (Sec. III-B)
     # UAV on-board compute range (FLOP/s).  Sec. IV doesn't specify device
     # compute; the default straddles the paper's 8-11 s tau_max sweep so the
@@ -103,7 +113,7 @@ def model_compress_ratio(cfg: HSFLConfig) -> float:
     shapes = jax.eval_shape(lambda: cnn_mod.init_cnn(jax.random.PRNGKey(0)))
     n = sum(int(np.prod(l.shape))
             for l in jax.tree_util.tree_leaves(shapes))
-    return codec_ratio(n)
+    return codec_ratio(n, cfg.codec_block)
 
 
 def _heterogeneous_devices(n: int, rng: np.random.Generator,
@@ -206,7 +216,6 @@ class HSFLSimulation:
             self._stack_shard = NamedSharding(mesh, P("users"))
             self._batch_shard = NamedSharding(mesh, P(None, "users"))
             self._shard_ndev = len(devs)
-        self._zero_carry = None
         self._build_jits()
 
     def _static_schedule(self) -> tuple:
@@ -246,13 +255,17 @@ class HSFLSimulation:
         # host path: all selected users advance one epoch at once (K, ...)
         self._epoch_all = jax.jit(jax.vmap(epoch_fn))
         self._eval = jax.jit(eval_fn)
+        from repro.kernels.fused_cnn.ops import ForwardPolicy
         self._fused = build_fused_round(
             scheme=cfg.scheme, local_epochs=cfg.local_epochs,
             steps_per_epoch=cfg.steps_per_epoch, lr=lr, tau_max=cfg.tau_max,
             probe_epochs=self._probe_epochs,
             async_weight=cfg.async_alpha * 2.0 ** (-cfg.async_a),
             use_codec=cfg.use_delta_codec, interpret=self._interpret,
-            k_carry=cfg.k_select, stacked_sharding=self._stack_shard)
+            k_carry=cfg.k_select, codec_block=cfg.codec_block,
+            forward=ForwardPolicy(kernel=cfg.kernel,
+                                  precision=cfg.precision).validate(),
+            stacked_sharding=self._stack_shard)
 
     def evaluate(self) -> Tuple[float, float]:
         l, a = self._eval(self.params, self._test_x, self._test_y)
@@ -264,9 +277,15 @@ class HSFLSimulation:
         self.fleet.resample_fading()           # per local-round K (Sec. IV)
         rates0 = self.fleet.rates()
         ue_bytes = cfg.model_bytes * cfg.ue_model_fraction
+        # selection budgets the *effective* wire bytes: with the delta
+        # codec on, the greedy's eq. 9-13 latency/energy (incl. the final
+        # upload) must see the compressed payload — byte parity with the
+        # device engine's eff_model_bytes (it used to budget the
+        # uncompressed model and under-select)
         sched = schedule_users(
             rates0, self.devices, self.workloads,
-            cfg.model_bytes, ue_bytes, cfg.b, cfg.tau_max, cfg.k_select)
+            cfg.model_bytes * self.compress_ratio,
+            ue_bytes * self.compress_ratio, cfg.b, cfg.tau_max, cfg.k_select)
         return sched, ue_bytes
 
     def run_round(self, t: int, carry_delayed) -> Tuple[RoundLog, object]:
@@ -325,12 +344,13 @@ class HSFLSimulation:
         return payload, tau_extra0, train_time, valid
 
     def _empty_carry(self):
-        if self._zero_carry is None:
-            k = self.cfg.k_select
-            stack = jax.tree_util.tree_map(
-                lambda a: jnp.zeros((k,) + a.shape, a.dtype), self.params)
-            self._zero_carry = (stack, jnp.zeros((k,), bool))
-        return self._zero_carry
+        # built fresh every time: the fused round *donates* the straggler
+        # carry buffers, so a cached zero stack would be consumed by its
+        # first use
+        k = self.cfg.k_select
+        stack = jax.tree_util.tree_map(
+            lambda a: jnp.zeros((k,) + a.shape, a.dtype), self.params)
+        return (stack, jnp.zeros((k,), bool))
 
     def _run_round_fused(self, t: int, carry_delayed):
         cfg = self.cfg
@@ -437,7 +457,8 @@ class HSFLSimulation:
             # quantize-dequantize round trip: the server only ever holds the
             # int8 delta payload, so the stored snapshot carries codec noise
             payload = encode_delta(user_tree(i), self.params,
-                                   interpret=self._interpret)
+                                   interpret=self._interpret,
+                                   block=cfg.codec_block)
             return decode_delta(payload, self.params,
                                 interpret=self._interpret)
 

@@ -49,7 +49,11 @@ CFG_AXES = ("b", "tau_max", "bandwidth_ratio")
 # separate compile of the round program instead of riding a traced axis.
 # ``use_delta_codec`` is the flagship — codec × scheme × budget grids are
 # first-class sweeps (``("opt", {"b": 2.0, "use_delta_codec": True})``).
-GROUP_STATICS = ("use_delta_codec",)
+# ``codec_block`` sweeps the quantization group width (the eq. 15
+# overhead-vs-delay frontier), and ``kernel``/``precision`` fork the CNN
+# hot-path policy (kernels/fused_cnn): xla-vs-pallas, f32-vs-bf16 groups
+# can sit side by side in one spec.
+GROUP_STATICS = ("use_delta_codec", "codec_block", "kernel", "precision")
 
 # Poison value ``compile_spec`` writes into ``group.base.b`` when b rides
 # the traced config axis: the real values live in ``group.cfgs`` and
@@ -196,6 +200,7 @@ def _group_build_kwargs(group: CompiledGroup) -> Dict[str, Any]:
     import jax
 
     from repro.core.hsfl import model_compress_ratio
+    from repro.kernels.fused_cnn.ops import ForwardPolicy
 
     base = group.base
     return dict(
@@ -206,9 +211,11 @@ def _group_build_kwargs(group: CompiledGroup) -> Dict[str, Any]:
         model_bytes=base.model_bytes,
         ue_model_fraction=base.ue_model_fraction,
         compress_ratio=model_compress_ratio(base),
-        use_codec=base.use_delta_codec,
-        # Pallas codec kernels run in interpret mode off-TPU
+        use_codec=base.use_delta_codec, codec_block=base.codec_block,
+        # Pallas kernels (codec + fused CNN) run in interpret mode off-TPU
         interpret=jax.default_backend() != "tpu",
+        forward=ForwardPolicy(kernel=base.kernel,
+                              precision=base.precision).validate(),
         schedule_override=tuple(base.schedule_override),
         async_alpha=base.async_alpha, async_a=base.async_a)
 
@@ -221,7 +228,14 @@ def _program_key(group: CompiledGroup) -> Tuple:
 
 
 def _build_group_fn(group: CompiledGroup):
-    """jit(vmap_sims(vmap_cfgs(scan_rounds(device_round))))."""
+    """jit(vmap_sims(vmap_cfgs(scan_rounds(device_round)))).
+
+    The simulation carry enters with the config axis already materialized
+    (leaves ``(S, C, ...)``, see ``_group_inputs``) and the final carry is
+    returned next to the metrics — that is what makes ``donate_argnums``
+    real: the whole round state (params stack, FleetState, async straggler
+    stack, codec state) aliases its output instead of being copied at the
+    dispatch boundary, and the scan keeps it in-place between rounds."""
     import jax
 
     from repro.core.fused_round import build_device_round
@@ -232,12 +246,12 @@ def _build_group_fn(group: CompiledGroup):
         def body(c, k):
             return round_fn(c, k, sim, cfgv)
 
-        _, metrics = jax.lax.scan(body, carry0, round_keys)
-        return metrics                        # (rounds,) per field
+        carry, metrics = jax.lax.scan(body, carry0, round_keys)
+        return carry, metrics                 # (rounds,) per metric field
 
-    over_cfg = jax.vmap(sim_one, in_axes=(None, None, None, 0))
+    over_cfg = jax.vmap(sim_one, in_axes=(0, None, None, 0))
     over_sim = jax.vmap(over_cfg, in_axes=(0, 0, 0, None))
-    return jax.jit(over_sim)
+    return jax.jit(over_sim, donate_argnums=(0,))
 
 
 def _group_inputs(group: CompiledGroup, rounds: int,
@@ -271,7 +285,13 @@ def _group_inputs(group: CompiledGroup, rounds: int,
     carry0 = DeviceSimCarry(
         params=params0, fleet=fleet0, delayed=zstack,
         delayed_mask=jnp.zeros((len(group.sims), k), bool))
-    cfg_stack = {key: jnp.asarray([c[key] for c in group.cfgs], jnp.float32)
+    # materialize the config axis on the carry (every config evolves its
+    # own state anyway) so the jit can donate it: leaves become (S, C, ...)
+    c = len(group.cfgs)
+    carry0 = jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[:, None], a.shape[:1] + (c,)
+                                   + a.shape[1:]), carry0)
+    cfg_stack = {key: jnp.asarray([cf[key] for cf in group.cfgs], jnp.float32)
                  for key in CFG_AXES}
     return carry0, round_keys, data, cfg_stack
 
@@ -311,6 +331,7 @@ class SweepResult:
     rounds: int
     wall_s: float = 0.0
     n_programs: int = 0                   # distinct jitted round programs
+    compile_overlap_s: float = 0.0        # compile time hidden behind runs
 
     @property
     def n_simulations(self) -> int:
@@ -318,13 +339,21 @@ class SweepResult:
 
 
 def run_sweep(spec: SweepSpec, mesh: Any = "auto", verbose: bool = False,
-              timeit: bool = False,
-              lower_discard: bool = True) -> SweepResult:
+              timeit: bool = False, lower_discard: bool = True,
+              overlap_compile: bool = True) -> SweepResult:
     """Execute a SweepSpec: one compiled program per *distinct* group
     program.  Groups are keyed by ``_program_key`` — a b=1 discard group
     reuses the opt program's jitted fn (``lower_discard``; discard is
     exactly opt with zero probes), so a Fig. 3(b)-style panel compiles 2
     programs instead of 3; ``SweepResult.n_programs`` records the count.
+
+    Programs are AOT-compiled (``lower().compile()``), and with
+    ``overlap_compile`` the *next* group's compile runs on a background
+    thread while the current group executes (XLA releases the GIL), so a
+    multi-scheme panel pays at most one compile on the critical path;
+    ``SweepResult.compile_overlap_s`` records how much compile time was
+    hidden behind execution.  Each group's ``DeviceSimCarry`` is donated
+    to its program (see ``_build_group_fn``).
 
     ``mesh="auto"`` builds a ``("sweep",)`` mesh over all local devices when
     there is more than one and shards the stacked-simulation axis over it
@@ -332,13 +361,17 @@ def run_sweep(spec: SweepSpec, mesh: Any = "auto", verbose: bool = False,
     the sharding through scan/vmap).  Pass ``mesh=None`` to force
     single-device, or an explicit 1-D ``("sweep",)`` mesh.
 
-    ``timeit=True`` executes each group twice so ``run_s`` is the
-    steady-state (compile-free) figure the benchmarks record; the default
-    single execution folds compile time into ``run_s``.
+    ``timeit=True`` executes each group twice (rebuilding the donated
+    carry) so ``run_s`` is the steady-state figure the benchmarks record;
+    compiles are AOT either way, so ``compile_s`` is always the true
+    compile duration rather than a first-minus-second-run residual.
     """
-    import jax
+    import threading
 
-    from repro.sharding.rules import shard_sweep_tree
+    import jax
+    import jax.numpy as jnp
+
+    from repro.sharding.rules import shard_sweep_specs, shard_sweep_tree
 
     if mesh == "auto":
         if len(jax.devices()) > 1:
@@ -349,54 +382,117 @@ def run_sweep(spec: SweepSpec, mesh: Any = "auto", verbose: bool = False,
 
     rounds = spec.base.rounds
     t_all = time.time()
-    out = []
     programs: Dict[Tuple, Tuple[Any, int]] = {}
     # nothing a scheme entry can pin (CFG_AXES / GROUP_STATICS) changes the
     # *data*, so the stacked per-sim arrays are built once per sim-row set
     # and shared across groups instead of re-synthesized per scheme
     sims_data: Dict[Tuple, Any] = {}
-    for group in compile_spec(spec, lower_discard=lower_discard):
-        key = _program_key(group)
-        if key in programs:
-            fn, pid = programs[key]
-        else:
-            fn, pid = _build_group_fn(group), len(programs)
-            programs[key] = (fn, pid)
-        if group.sims not in sims_data:
-            import jax.numpy as jnp
-            sims_data[group.sims] = {k: jnp.asarray(v)
-                                     for k, v in _stack_sims(group).items()}
+
+    def build_inputs(group):
         carry0, round_keys, data, cfg_stack = _group_inputs(
             group, rounds, sims_data[group.sims])
         n_sims = len(group.sims)
         carry0 = shard_sweep_tree(mesh, carry0, n_sims)
         round_keys = shard_sweep_tree(mesh, round_keys, n_sims)
         data = shard_sweep_tree(mesh, data, n_sims)
+        return carry0, round_keys, data, cfg_stack
 
+    def input_specs(group):
+        """Avals (+ the shardings ``build_inputs`` would apply) without
+        materializing the carry: programs lower/compile from these, so a
+        background compile never holds a second group's device state —
+        only the group being *executed* has its inputs live."""
+        carry0, round_keys, data, cfg_stack = jax.eval_shape(
+            lambda: _group_inputs(group, rounds, sims_data[group.sims]))
+        n_sims = len(group.sims)
+        carry0 = shard_sweep_specs(mesh, carry0, n_sims)
+        round_keys = shard_sweep_specs(mesh, round_keys, n_sims)
+        data = shard_sweep_specs(mesh, data, n_sims)
+        return carry0, round_keys, data, cfg_stack
+
+    entries = []
+    for group in compile_spec(spec, lower_discard=lower_discard):
+        key = _program_key(group)
+        if key not in programs:
+            programs[key] = (_build_group_fn(group), len(programs))
+        fn, pid = programs[key]
+        if group.sims not in sims_data:
+            sims_data[group.sims] = {k: jnp.asarray(v)
+                                     for k, v in _stack_sims(group).items()}
+        specs = input_specs(group)
+        sig = (pid,) + tuple((l.shape, str(l.dtype))
+                             for l in jax.tree_util.tree_leaves(specs))
+        entries.append((group, fn, pid, specs, sig))
+
+    # -- execute; AOT-compile the next distinct program in the background --
+    compiled: Dict[Tuple, Tuple[Any, float, float]] = {}
+    threads: Dict[Tuple, threading.Thread] = {}
+
+    def compile_one(sig, fn, specs):
         t0 = time.time()
-        metrics = fn(carry0, round_keys, data, cfg_stack)
+        ex = fn.lower(*specs).compile()
+        compiled[sig] = (ex, t0, time.time())
+
+    out, exec_windows, overlap_s = [], [], 0.0
+    overlap_credited, compile_credited = set(), set()
+    for i, (group, fn, pid, specs, sig) in enumerate(entries):
+        if sig in threads:
+            threads.pop(sig).join()
+        background = sig in compiled
+        if not background:
+            compile_one(sig, fn, specs)
+        ex, c0, c1 = compiled[sig]
+        if background and sig not in overlap_credited:
+            overlap_credited.add(sig)
+            overlap_s += sum(max(0.0, min(c1, e1) - max(c0, e0))
+                             for e0, e1 in exec_windows)
+        # the first group using a program pays its compile; cache hits
+        # (e.g. discard lowered onto the opt program) report 0
+        if sig in compile_credited:
+            group_compile_s = 0.0
+        else:
+            compile_credited.add(sig)
+            group_compile_s = c1 - c0
+        if overlap_compile:
+            for g2, f2, p2, sp2, s2 in entries[i + 1:]:
+                if s2 not in compiled and s2 not in threads:
+                    th = threading.Thread(target=compile_one,
+                                          args=(s2, f2, sp2), daemon=True)
+                    th.start()
+                    threads[s2] = th
+                    break
+
+        args = build_inputs(group)            # lazily: one group at a time
+        t0 = time.time()
+        _, metrics = ex(*args)
         jax.block_until_ready(metrics)
         t1 = time.time()
-        compile_s, run_s = 0.0, t1 - t0
+        exec_windows.append((t0, t1))
+        run_s = t1 - t0
         if timeit:
-            metrics = fn(carry0, round_keys, data, cfg_stack)
+            args = build_inputs(group)        # the carry was donated
+            t2 = time.time()
+            _, metrics = ex(*args)
             jax.block_until_ready(metrics)
-            run_s = time.time() - t1
-            compile_s = max(0.0, (t1 - t0) - run_s)
+            t3 = time.time()
+            exec_windows.append((t2, t3))
+            run_s = t3 - t2
+        del args
         out.append(GroupResult(
             scheme=group.scheme, sims=group.sims, cfgs=group.cfgs,
             metrics={k: np.asarray(v)
                      for k, v in metrics._asdict().items()},
-            compile_s=round(compile_s, 3), run_s=round(run_s, 3),
+            compile_s=round(group_compile_s, 3), run_s=round(run_s, 3),
             label=group.label or group.scheme, program_id=pid))
         if verbose:
             accs = out[-1].metrics["test_acc"][..., -1]
-            print(f"[sweep/{out[-1].label}] sims={n_sims} "
+            print(f"[sweep/{out[-1].label}] sims={len(group.sims)} "
                   f"cfgs={len(group.cfgs)} rounds={rounds} "
                   f"run={out[-1].run_s:.2f}s final_acc={accs.mean():.4f}")
     return SweepResult(groups=out, rounds=rounds,
                        wall_s=round(time.time() - t_all, 3),
-                       n_programs=len(programs))
+                       n_programs=len(programs),
+                       compile_overlap_s=round(overlap_s, 3))
 
 
 def run_hsfl_on_device(cfg: HSFLConfig, mesh: Any = None) -> SimLog:

@@ -16,8 +16,19 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-BLOCK = 512          # lanes per quantization group
+BLOCK = 512          # default lanes per quantization group
 TILE_ROWS = 256      # rows per grid step
+
+
+def validate_block(block: int) -> int:
+    """A quantization group width must be a positive lane-aligned multiple
+    of 128 (the TPU lane count) — the sweepable ``HSFLConfig.codec_block``
+    is validated through here before it reaches a kernel grid."""
+    if block <= 0 or block % 128:
+        raise ValueError(
+            f"codec block width must be a positive multiple of 128 "
+            f"(TPU lane alignment), got {block}")
+    return block
 
 
 def _quant_kernel(x_ref, q_ref, s_ref):
@@ -34,9 +45,12 @@ def _dequant_kernel(q_ref, s_ref, x_ref, *, dtype):
 
 
 def quantize_blocks(x: jnp.ndarray, interpret: bool = False):
-    """x: (M, BLOCK) -> (q int8 (M, BLOCK), scales f32 (M, 1))."""
+    """x: (M, block) -> (q int8 (M, block), scales f32 (M, 1)).
+
+    The group width is the trailing dimension of ``x`` (``BLOCK`` by
+    default; any ``validate_block``-accepted width sweeps)."""
     M, B = x.shape
-    assert B == BLOCK, (B, BLOCK)
+    validate_block(B)
     rows = min(TILE_ROWS, M)
     assert M % rows == 0
     return pl.pallas_call(

@@ -25,27 +25,28 @@ import jax.numpy as jnp
 
 from repro.kernels.delta_codec.kernel import (BLOCK, TILE_ROWS,
                                               dequantize_blocks,
-                                              quantize_blocks)
+                                              quantize_blocks,
+                                              validate_block)
 from repro.models import module as m
 
 COMPRESS_RATIO = (1.0 + 4.0 / BLOCK) / 4.0     # ≈ 0.2520 of f32 bytes
 
 
-def _padded_rows(n: int) -> int:
-    """Rows of the (M, BLOCK) view for n values, honouring the row tiling."""
-    rows = max(1, math.ceil(n / BLOCK))
+def _padded_rows(n: int, block: int = BLOCK) -> int:
+    """Rows of the (M, block) view for n values, honouring the row tiling."""
+    rows = max(1, math.ceil(n / block))
     if rows > TILE_ROWS:
         rows = math.ceil(rows / TILE_ROWS) * TILE_ROWS
     return rows
 
 
-def _flatten(tree: Any) -> Tuple[jnp.ndarray, Any, int]:
+def _flatten(tree: Any, block: int = BLOCK) -> Tuple[jnp.ndarray, Any, int]:
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     flat = jnp.concatenate([jnp.ravel(l).astype(jnp.float32) for l in leaves])
     n = flat.size
-    rows = _padded_rows(n)
-    flat = jnp.pad(flat, (0, rows * BLOCK - n))
-    return flat.reshape(rows, BLOCK), treedef, n
+    rows = _padded_rows(n, block)
+    flat = jnp.pad(flat, (0, rows * block - n))
+    return flat.reshape(rows, block), treedef, n
 
 
 def _unflatten(flat: jnp.ndarray, like: Any) -> Any:
@@ -58,20 +59,22 @@ def _unflatten(flat: jnp.ndarray, like: Any) -> Any:
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
-def stacked_flatten(stacked: Any) -> Tuple[jnp.ndarray, int]:
-    """Stacked user pytree (leaves ``(K, ...)``) -> ``(K, M, BLOCK)`` + n.
+def stacked_flatten(stacked: Any, block: int = BLOCK
+                    ) -> Tuple[jnp.ndarray, int]:
+    """Stacked user pytree (leaves ``(K, ...)``) -> ``(K, M, block)`` + n.
 
-    M is padded to a multiple of TILE_ROWS so the collapsed ``(K·M, BLOCK)``
+    M is padded to a multiple of TILE_ROWS so the collapsed ``(K·M, block)``
     view always meets the kernel's grid contract regardless of K.
     """
+    validate_block(block)
     leaves = jax.tree_util.tree_leaves(stacked)
     k = leaves[0].shape[0]
     flat = jnp.concatenate(
         [l.reshape(k, -1).astype(jnp.float32) for l in leaves], axis=1)
     n = flat.shape[1]
-    rows = math.ceil(max(1, math.ceil(n / BLOCK)) / TILE_ROWS) * TILE_ROWS
-    flat = jnp.pad(flat, ((0, 0), (0, rows * BLOCK - n)))
-    return flat.reshape(k, rows, BLOCK), n
+    rows = math.ceil(max(1, math.ceil(n / block)) / TILE_ROWS) * TILE_ROWS
+    flat = jnp.pad(flat, ((0, 0), (0, rows * block - n)))
+    return flat.reshape(k, rows, block), n
 
 
 def stacked_unflatten(flat: jnp.ndarray, like_stacked: Any) -> Any:
@@ -87,11 +90,11 @@ def stacked_unflatten(flat: jnp.ndarray, like_stacked: Any) -> Any:
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
-@partial(jax.jit, static_argnames=("interpret",))
-def encode_delta(params: Any, base: Any, interpret: bool = False
-                 ) -> Dict[str, jnp.ndarray]:
+@partial(jax.jit, static_argnames=("interpret", "block"))
+def encode_delta(params: Any, base: Any, interpret: bool = False,
+                 block: int = BLOCK) -> Dict[str, jnp.ndarray]:
     delta = m.tree_sub(params, base)
-    flat, _, n = _flatten(delta)
+    flat, _, n = _flatten(delta, block)
     q, s = quantize_blocks(flat, interpret=interpret)
     return {"q": q, "scales": s, "n": jnp.asarray(n, jnp.int32)}
 
@@ -107,13 +110,21 @@ def decode_delta(payload: Dict[str, jnp.ndarray], base: Any,
 
 def payload_bytes(payload: Dict[str, jnp.ndarray]) -> int:
     """True wire bytes: int8 lanes + f32 scale for the real blocks only
-    (row padding added for the kernel tiling is not transmitted)."""
-    blocks = math.ceil(int(payload["n"]) / BLOCK)
-    return blocks * BLOCK + blocks * 4
+    (row padding added for the kernel tiling is not transmitted).  The
+    group width is read off the payload itself."""
+    block = payload["q"].shape[-1]
+    blocks = math.ceil(int(payload["n"]) / block)
+    return blocks * block + blocks * 4
 
 
-def codec_ratio(n: int) -> float:
+def codec_ratio(n: int, block: int = BLOCK) -> float:
     """Exact compressed/uncompressed byte ratio for an n-value payload:
-    ceil(n/BLOCK) int8 blocks + one f32 scale each, over n float32 bytes."""
-    blocks = math.ceil(n / BLOCK)
-    return (blocks * BLOCK + blocks * 4) / (4.0 * n)
+    ceil(n/block) int8 blocks + one f32 scale each, over n float32 bytes.
+
+    ``block`` is the sweepable quantization group width
+    (``HSFLConfig.codec_block``): smaller groups track the delta
+    distribution tighter (less quantization noise) at a higher scale
+    overhead — the eq. 15 overhead-vs-delay frontier of
+    arXiv:2405.00681."""
+    blocks = math.ceil(n / validate_block(block))
+    return (blocks * block + blocks * 4) / (4.0 * n)

@@ -1,0 +1,6 @@
+from repro.kernels.fused_cnn.ops import (ForwardPolicy, make_eval_forward,
+                                         make_forward, make_loss_grad,
+                                         resolve_train_step)
+
+__all__ = ["ForwardPolicy", "make_forward", "make_eval_forward",
+           "make_loss_grad", "resolve_train_step"]

@@ -1,0 +1,200 @@
+"""Pallas TPU kernels for the fused CNN training step.
+
+One kernel per block of the 5-layer CNN, each fusing everything between
+the HBM boundaries of that block so intermediates (im2col patches, pre-
+pool conv outputs, selection masks) live and die in VMEM:
+
+  ``conv_pool_fwd``  — 3x3 patch gather + matmul + pool + bias + ReLU
+                       (pool-first, bit-equal to the im2col order — see
+                       ``ref.py``), emitting the argmax/ReLU masks the
+                       backward consumes instead of recomputing them.
+  ``conv_pool_bwd``  — mask algebra + the two transposed matmuls
+                       (dW = patᵀ·dz, dpatches = dz·Wᵀ) + the fold-back
+                       scatter-add, all in one VMEM-resident program.
+  ``fc_chain_fwd``   — fc1+ReLU → fc2+ReLU → fc3 as a single kernel.
+  ``fc_chain_bwd``   — the three transposed matmuls + ReLU masking.
+
+Each kernel is a single program (no grid): the paper-scale per-user batch
+(10 x 28 x 28 images, ≤72-lane contractions) fits a 28-image block in well
+under 2 MB of VMEM, and the user axis arrives via ``jax.vmap`` inside the
+fused round — Pallas's batching rule turns that into the kernel grid, so
+the same kernels serve ``build_fused_round``, ``build_device_round`` and
+the sweep engine's nested sim/config vmaps unchanged.  Full-test-set eval
+(B=1000) would exceed a sane VMEM block, so the forward *policy* routes
+eval through the value-identical XLA path (``ops.make_eval_forward``).
+
+Off-TPU the kernels run with ``interpret=True`` (same convention as
+``kernels/delta_codec``): value-pinned against ``ref.py`` and
+``cnn.forward_im2col`` in the tier-1 suite, compiled only on TPU.
+Matmuls always accumulate f32 (``preferred_element_type``); the compute
+dtype follows the inputs (f32, or bf16 under the mixed-precision policy).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dot(a, b):
+    return jax.lax.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def _dot32(a, b):
+    return jax.lax.dot(a, b, preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# conv block: patches + matmul + pool + bias + relu
+# ---------------------------------------------------------------------------
+
+def _conv_pool_fwd_kernel(xp_ref, w_ref, b_ref, a_ref, pat_ref, eq_ref,
+                          m_ref, *, bs, h, wd, c, o):
+    xp = xp_ref[...]                               # (B, H+2, W+2, C)
+    cols = [xp[:, i:i + h, j:j + wd, :] for i in range(3) for j in range(3)]
+    pat = jnp.concatenate(cols, axis=-1).reshape(bs * h * wd, 9 * c)
+    pat_ref[...] = pat
+    z = _dot(pat, w_ref[...]).reshape(bs, h, wd, o)
+    zw = z.reshape(bs, h // 2, 2, wd // 2, 2, o)
+    pz = zw.max(axis=(2, 4))
+    eqw = (zw == pz[:, :, None, :, None, :])
+    cnt = eqw.sum(axis=(2, 4), keepdims=True)
+    eq_ref[...] = jnp.where(eqw, 1.0 / cnt, 0.0).astype(z.dtype).reshape(
+        bs, h, wd, o)
+    a = jnp.maximum(pz + b_ref[...].reshape(o), 0.0)
+    m_ref[...] = (a > 0).astype(z.dtype)
+    a_ref[...] = a
+
+
+def conv_pool_fwd(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                  interpret: bool = False) -> Tuple[jnp.ndarray, Tuple]:
+    """Pallas twin of ``ref.conv_pool_fwd`` (same signature + residuals)."""
+    bs, h, wd, c = x.shape
+    o = w.shape[-1]
+    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    dt = x.dtype
+    a, pat, eq, relu_m = pl.pallas_call(
+        functools.partial(_conv_pool_fwd_kernel, bs=bs, h=h, wd=wd, c=c, o=o),
+        out_shape=[jax.ShapeDtypeStruct((bs, h // 2, wd // 2, o), dt),
+                   jax.ShapeDtypeStruct((bs * h * wd, 9 * c), dt),
+                   jax.ShapeDtypeStruct((bs, h, wd, o), dt),
+                   jax.ShapeDtypeStruct((bs, h // 2, wd // 2, o), dt)],
+        interpret=interpret,
+    )(xp, w.reshape(9 * c, o), b.reshape(1, o))
+    return a, (pat, eq, relu_m)
+
+
+def _conv_pool_bwd_kernel(pat_ref, eq_ref, m_ref, w_ref, da_ref,
+                          dw_ref, db_ref, *maybe_dx_ref, bs, h, wd, c, o):
+    dp = da_ref[...] * m_ref[...]                  # (B, H/2, W/2, O)
+    db_ref[...] = dp.astype(jnp.float32).sum(axis=(0, 1, 2)).reshape(1, o)
+    dz = (eq_ref[...].reshape(bs, h // 2, 2, wd // 2, 2, o)
+          * dp[:, :, None, :, None, :]).reshape(bs * h * wd, o)
+    pat = pat_ref[...]
+    dw_ref[...] = _dot32(pat.T, dz)
+    if maybe_dx_ref:
+        dx_ref, = maybe_dx_ref
+        dpat = _dot(dz, w_ref[...].T).reshape(bs, h, wd, 9 * c)
+        dx_ref[...] = jnp.zeros(dx_ref.shape, dx_ref.dtype)
+        for idx in range(9):
+            i, j = divmod(idx, 3)
+            dx_ref[:, i:i + h, j:j + wd, :] += dpat[..., idx * c:(idx + 1) * c]
+
+
+def conv_pool_bwd(res: Tuple, w: jnp.ndarray, da: jnp.ndarray,
+                  need_dx: bool, interpret: bool = False) -> Tuple:
+    """Pallas twin of ``ref.conv_pool_bwd``: (dw, db, dx-or-None).
+
+    ``dx`` is accumulated on the padded (H+2, W+2) canvas in VMEM (the
+    fold-back scatter-add) and sliced to (H, W) on the way out."""
+    pat, eq, relu_m = res
+    bs, h, wd, o = eq.shape
+    c = pat.shape[-1] // 9
+    dt = pat.dtype
+    out_shape = [jax.ShapeDtypeStruct((9 * c, o), jnp.float32),
+                 jax.ShapeDtypeStruct((1, o), jnp.float32)]
+    if need_dx:
+        out_shape.append(jax.ShapeDtypeStruct((bs, h + 2, wd + 2, c), dt))
+    out = pl.pallas_call(
+        functools.partial(_conv_pool_bwd_kernel, bs=bs, h=h, wd=wd, c=c, o=o),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(pat, eq, relu_m, w.reshape(9 * c, o), da)
+    dw, db = out[0], out[1]
+    dx = out[2][:, 1:1 + h, 1:1 + wd, :] if need_dx else None
+    return dw.reshape(3, 3, c, o), db.reshape(o), dx
+
+
+# ---------------------------------------------------------------------------
+# fc chain: fc1 + relu -> fc2 + relu -> fc3
+# ---------------------------------------------------------------------------
+
+def _fc_chain_fwd_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, w3_ref,
+                         b3_ref, out_ref, h1_ref, h2_ref):
+    h1 = jnp.maximum(_dot(x_ref[...], w1_ref[...]) + b1_ref[...], 0.0)
+    h1_ref[...] = h1
+    h2 = jnp.maximum(_dot(h1, w2_ref[...]) + b2_ref[...], 0.0)
+    h2_ref[...] = h2
+    out_ref[...] = _dot(h2, w3_ref[...]) + b3_ref[...]
+
+
+def fc_chain_fwd(flat: jnp.ndarray, params: dict,
+                 interpret: bool = False) -> Tuple[jnp.ndarray, Tuple]:
+    bs = flat.shape[0]
+    p1, p2, p3 = params["fc1"], params["fc2"], params["fc3"]
+    d1, d2, d3 = p1["w"].shape[1], p2["w"].shape[1], p3["w"].shape[1]
+    dt = flat.dtype
+    logits, h1, h2 = pl.pallas_call(
+        _fc_chain_fwd_kernel,
+        out_shape=[jax.ShapeDtypeStruct((bs, d3), dt),
+                   jax.ShapeDtypeStruct((bs, d1), dt),
+                   jax.ShapeDtypeStruct((bs, d2), dt)],
+        interpret=interpret,
+    )(flat, p1["w"], p1["b"].reshape(1, d1), p2["w"], p2["b"].reshape(1, d2),
+      p3["w"], p3["b"].reshape(1, d3))
+    return logits, (h1, h2)
+
+
+def _fc_chain_bwd_kernel(x_ref, h1_ref, h2_ref, w1_ref, w2_ref, w3_ref,
+                         g_ref, dw1_ref, db1_ref, dw2_ref, db2_ref,
+                         dw3_ref, db3_ref, dx_ref):
+    g = g_ref[...]
+    h1, h2 = h1_ref[...], h2_ref[...]
+    dw3_ref[...] = _dot32(h2.T, g)
+    db3_ref[...] = g.astype(jnp.float32).sum(axis=0, keepdims=True)
+    dh2 = _dot(g, w3_ref[...].T) * (h2 > 0)
+    dw2_ref[...] = _dot32(h1.T, dh2)
+    db2_ref[...] = dh2.astype(jnp.float32).sum(axis=0, keepdims=True)
+    dh1 = _dot(dh2, w2_ref[...].T) * (h1 > 0)
+    dw1_ref[...] = _dot32(x_ref[...].T, dh1)
+    db1_ref[...] = dh1.astype(jnp.float32).sum(axis=0, keepdims=True)
+    dx_ref[...] = _dot(dh1, w1_ref[...].T)
+
+
+def fc_chain_bwd(flat: jnp.ndarray, res: Tuple, params: dict,
+                 dlogits: jnp.ndarray,
+                 interpret: bool = False) -> Tuple[dict, jnp.ndarray]:
+    h1, h2 = res
+    bs, f = flat.shape
+    p1, p2, p3 = params["fc1"], params["fc2"], params["fc3"]
+    d1, d2, d3 = p1["w"].shape[1], p2["w"].shape[1], p3["w"].shape[1]
+    dt = flat.dtype
+    f32 = jnp.float32
+    dw1, db1, dw2, db2, dw3, db3, dflat = pl.pallas_call(
+        _fc_chain_bwd_kernel,
+        out_shape=[jax.ShapeDtypeStruct((f, d1), f32),
+                   jax.ShapeDtypeStruct((1, d1), f32),
+                   jax.ShapeDtypeStruct((d1, d2), f32),
+                   jax.ShapeDtypeStruct((1, d2), f32),
+                   jax.ShapeDtypeStruct((d2, d3), f32),
+                   jax.ShapeDtypeStruct((1, d3), f32),
+                   jax.ShapeDtypeStruct((bs, f), dt)],
+        interpret=interpret,
+    )(flat, h1, h2, p1["w"], p2["w"], p3["w"], dlogits)
+    grads = {"fc1": {"w": dw1, "b": db1.reshape(d1)},
+             "fc2": {"w": dw2, "b": db2.reshape(d2)},
+             "fc3": {"w": dw3, "b": db3.reshape(d3)}}
+    return grads, dflat

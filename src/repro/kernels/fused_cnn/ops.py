@@ -1,0 +1,243 @@
+"""Forward-policy layer: one flag flips the CNN hot path everywhere.
+
+``ForwardPolicy`` selects how the 5-layer CNN computes inside the fused
+HSFL round (``core/fused_round``), the sweep engine (``core/sweep``), the
+benchmarks and the examples:
+
+  kernel    "xla"    — pool-first fused step with the hand-written VJP
+                       (``ref.py``) — the default; breaks the PR-3 compute
+                       floor on CPU and lowers cleanly everywhere.
+            "pallas" — the same algorithm through the Pallas kernel suite
+                       (``kernel.py``); ``interpret=True`` off-TPU, same
+                       convention as ``kernels/delta_codec``.
+            "im2col" — the PR-1 reference: ``cnn.forward_im2col`` +
+                       ``jax.grad`` autodiff (kept as the baseline the
+                       fast paths are value-pinned against).
+  precision "f32"    — value-equivalence pinned: bit-identical forward to
+                       ``cnn.forward_im2col``.
+            "bf16"   — mixed precision: bf16 compute, f32 master params,
+                       f32 matmul accumulation (xla/pallas paths; the
+                       im2col baseline keeps its legacy compute-dtype
+                       accumulation) and f32 loss; grads come back f32 so
+                       the SGD update never touches bf16 state.  (Paper-
+                       comparable accuracy is pinned by the loss-tolerance
+                       test, not bit equality.)
+
+``make_forward`` wires the chosen implementation into ``jax.custom_vjp``
+so ``jax.grad`` of any loss through it uses the hand-written backward —
+the epoch fn in ``fused_round._make_epoch_fn`` needs no other change.
+The custom backward returns the true image cotangent too; it is dead code
+under ``jax.grad(loss)(params)`` and XLA DCEs it on the "xla" path.
+
+``make_eval_forward`` returns the plain (non-custom-vjp, non-Pallas)
+forward at the same precision: full-test-set eval batches would blow the
+single-program VMEM budget of the Pallas kernels, and the ref path is
+value-identical anyway (pinned).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fused_cnn import kernel as knl
+from repro.kernels.fused_cnn import ref
+
+KERNELS = ("xla", "pallas", "im2col")
+PRECISIONS = ("f32", "bf16")
+
+
+@dataclass(frozen=True)
+class ForwardPolicy:
+    """How the CNN hot path computes.  Hashable → usable as a jit static
+    and inside ``core/sweep``'s program-cache key."""
+    kernel: str = "xla"
+    precision: str = "f32"
+    interpret: bool = False
+
+    def validate(self) -> "ForwardPolicy":
+        if self.kernel not in KERNELS:
+            raise ValueError(f"ForwardPolicy.kernel={self.kernel!r}; "
+                             f"choose from {KERNELS}")
+        if self.precision not in PRECISIONS:
+            raise ValueError(f"ForwardPolicy.precision={self.precision!r}; "
+                             f"choose from {PRECISIONS}")
+        return self
+
+
+def _cast_tree(tree: Any, dtype) -> Any:
+    return jax.tree_util.tree_map(lambda l: l.astype(dtype), tree)
+
+
+def _impl(policy: ForwardPolicy):
+    """(forward_with_residuals, backward) pair for the policy's kernel."""
+    if policy.kernel == "xla":
+        return ref.forward_fwd_ref, ref.backward_ref
+
+    it = policy.interpret
+
+    def fwd_res(p, x):
+        a1, r1 = knl.conv_pool_fwd(x, p["conv1"]["w"], p["conv1"]["b"],
+                                   interpret=it)
+        a2, r2 = knl.conv_pool_fwd(a1, p["conv2"]["w"], p["conv2"]["b"],
+                                   interpret=it)
+        flat = a2.reshape(a2.shape[0], -1)
+        logits, rfc = knl.fc_chain_fwd(flat, p, interpret=it)
+        return logits, (r1, r2, flat, rfc)
+
+    def bwd(p, res, g, need_dx=True):
+        # need_dx threads down to the conv1 kernel: a pallas_call's outputs
+        # are opaque to XLA's DCE, so the unused image gradient must be
+        # skipped at kernel-build time, not relied on to be eliminated
+        r1, r2, flat, rfc = res
+        gfc, dflat = knl.fc_chain_bwd(flat, rfc, p, g, interpret=it)
+        bs, h, wd, o = r2[1].shape
+        da2 = dflat.reshape(bs, h // 2, wd // 2, o)
+        dw2, db2, da1 = knl.conv_pool_bwd(r2, p["conv2"]["w"], da2, True,
+                                          interpret=it)
+        dw1, db1, dx = knl.conv_pool_bwd(r1, p["conv1"]["w"], da1, need_dx,
+                                         interpret=it)
+        grads = {"conv1": {"w": dw1, "b": db1},
+                 "conv2": {"w": dw2, "b": db2}, **gfc}
+        return grads, dx
+
+    return fwd_res, bwd
+
+
+def make_forward(policy: ForwardPolicy) -> Callable:
+    """``forward(params, images) -> logits`` with the policy's compute
+    path and the hand-written VJP attached (except "im2col" = autodiff)."""
+    policy.validate()
+    cd = jnp.bfloat16 if policy.precision == "bf16" else None
+    if policy.kernel == "im2col":
+        # legacy baseline, kept bit-for-bit: note its bf16 variant
+        # accumulates matmuls in the compute dtype (plain ``@``), unlike
+        # the xla/pallas paths which force f32 accumulation — compare
+        # bf16 numerics across kernels with that in mind
+        from repro.models import cnn as cnn_mod
+        if cd is None:
+            return cnn_mod.forward_im2col
+        return lambda p, x: cnn_mod.forward_im2col(p, x, compute_dtype=cd)
+
+    fwd_res, bwd_impl = _impl(policy)
+
+    @jax.custom_vjp
+    def forward(params, images):
+        p = _cast_tree(params, cd) if cd else params
+        x = images.astype(cd) if cd else images
+        logits, _ = fwd_res(p, x)
+        return logits.astype(jnp.float32) if cd else logits
+
+    def forward_fwd(params, images):
+        p = _cast_tree(params, cd) if cd else params
+        x = images.astype(cd) if cd else images
+        logits, res = fwd_res(p, x)
+        out = logits.astype(jnp.float32) if cd else logits
+        return out, (p, res)
+
+    def forward_bwd(saved, g):
+        p, res = saved
+        gc = g.astype(cd) if cd else g
+        grads, dx = bwd_impl(p, res, gc)
+        if cd is None:
+            # match the caller's (master) param dtypes exactly
+            grads = jax.tree_util.tree_map(
+                lambda gg, pp: gg.astype(pp.dtype), grads, p)
+        # bf16 policy: grads already carry f32 accumulation — the master
+        # params and the SGD update stay f32
+        return grads, dx.astype(jnp.float32) if dx is not None else None
+
+    forward.defvjp(forward_fwd, forward_bwd)
+    return forward
+
+
+def make_loss_grad(policy: ForwardPolicy) -> Callable:
+    """``(params, bx, by) -> (loss, grads)`` with softmax cross-entropy
+    fused onto the hand-written backward.
+
+    ``jax.grad`` of ``cross_entropy(forward(...))`` pays a
+    ``take_along_axis`` scatter in the loss backward; here the closed-form
+    ``(softmax − onehot)/B`` cotangent feeds the custom backward directly.
+    Loss and logits math run in f32 whatever the compute precision (the
+    policy's "f32 loss accumulation" contract); grads come back f32 (or
+    the master dtype at f32 policy).  This is the training step
+    ``fused_round._make_epoch_fn`` runs for policy-selected forwards —
+    value-equal to the autodiff composition up to summation order."""
+    policy.validate()
+    if policy.kernel == "im2col":
+        # legacy baseline: plain autodiff through forward_im2col
+        return _autodiff_loss_grad(make_forward(policy))
+
+    cd = jnp.bfloat16 if policy.precision == "bf16" else None
+    fwd_res, bwd_impl = _impl(policy)
+
+    def loss_grad(params, bx, by):
+        p = _cast_tree(params, cd) if cd else params
+        x = bx.astype(cd) if cd else bx
+        logits, res = fwd_res(p, x)
+        lf = logits.astype(jnp.float32)
+        zm = lf - lf.max(axis=-1, keepdims=True)
+        logz = jnp.log(jnp.sum(jnp.exp(zm), axis=-1, keepdims=True))
+        logp = zm - logz
+        onehot = jax.nn.one_hot(by, lf.shape[-1], dtype=jnp.float32)
+        loss = -jnp.mean(jnp.sum(onehot * logp, axis=-1))
+        dlogits = (jnp.exp(logp) - onehot) / lf.shape[0]
+        grads, _ = bwd_impl(p, res, dlogits.astype(cd) if cd else dlogits,
+                            need_dx=False)
+        if cd is None:
+            grads = jax.tree_util.tree_map(
+                lambda gg, pp: gg.astype(pp.dtype), grads, p)
+        return loss, grads
+
+    return loss_grad
+
+
+def _autodiff_loss_grad(fwd: Callable) -> Callable:
+    from repro.training.loss import cross_entropy
+
+    def loss_grad(params, bx, by):
+        return jax.value_and_grad(
+            lambda q: cross_entropy(fwd(q, bx), by))(params)
+
+    return loss_grad
+
+
+def make_eval_forward(policy: ForwardPolicy) -> Callable:
+    """Plain forward at the policy's precision (ref path, no custom VJP):
+    for in-program eval over full test batches."""
+    policy.validate()
+    if policy.kernel == "im2col":
+        return make_forward(policy)
+    if policy.precision == "f32":
+        return ref.forward_ref
+
+    def eval_fwd(params, images):
+        p = _cast_tree(params, jnp.bfloat16)
+        return ref.forward_ref(p, images.astype(jnp.bfloat16)).astype(
+            jnp.float32)
+
+    return eval_fwd
+
+
+def resolve_train_step(forward: Any, interpret: bool = False
+                       ) -> Tuple[Callable, Callable]:
+    """Normalize ``build_fused_round``/``build_device_round``'s ``forward=``
+    argument into ``(loss_grad, eval_fwd)``: the fused
+    ``(params, bx, by) -> (loss, grads)`` training step
+    (``make_loss_grad``) the epoch scan runs, and the plain eval forward.
+
+    - ``None`` → the default ``ForwardPolicy()`` (xla kernel, f32);
+    - a ``ForwardPolicy`` → its compute path (``interpret`` is OR-ed with
+      the round builder's flag, the delta-codec convention);
+    - any other callable → autodiff around it, and used verbatim for eval
+      (legacy hook, used by tests that train tiny non-CNN models through
+      the round).
+    """
+    if forward is None:
+        forward = ForwardPolicy()
+    if isinstance(forward, ForwardPolicy):
+        policy = replace(forward, interpret=forward.interpret or interpret)
+        return make_loss_grad(policy), make_eval_forward(policy)
+    return _autodiff_loss_grad(forward), forward

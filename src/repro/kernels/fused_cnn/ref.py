@@ -1,0 +1,178 @@
+"""Pure-jnp oracle for the fused CNN training step (pool-first layout).
+
+The paper's hot loop is K users x e epochs x S steps of the 5-layer MNIST
+CNN — stock XLA autodiff of ``cnn.forward_im2col`` pays full-resolution
+bias/ReLU passes and re-derives the pool/ReLU selection masks in the
+backward.  This module is the algorithmic reference the Pallas kernels
+(``kernel.py``) and the XLA fast path (``ops.py``) are pinned against:
+
+- **pool-first conv block**: ``pool(relu(z + b)) == relu(pool(z) + b)``
+  *bit-for-bit* (max commutes with the monotone per-channel bias add, and
+  relu is monotone), so the bias add and ReLU run at pooled resolution —
+  4x fewer elements than the ``forward_im2col`` order.  Forward values
+  are identical to ``cnn.forward_im2col`` at f32.
+- **hand-written backward**: the forward saves the im2col patch matrix,
+  the pool argmax mask ``eq = (z == pooled_z)`` (with JAX's tie-splitting
+  1/count semantics, so grads match ``jax.grad`` of the reference
+  exactly) and the ReLU mask — the backward is pure mask algebra plus the
+  two transposed matmuls, never re-deriving activations.
+- conv1's ``dx`` (the fold back to the input image) is exposed but unused
+  by the training step — images carry no gradient, XLA DCEs it.
+
+``D`` below is the compute dtype (f32, or bf16 under the mixed-precision
+policy); matmul accumulation is always f32 (``preferred_element_type``).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _dot(a, b):
+    """Matmul with f32 accumulation, result in the compute dtype."""
+    return jax.lax.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def patches3x3(x: jnp.ndarray) -> jnp.ndarray:
+    """(B, H, W, C) -> (B, H, W, 9C) SAME-padded 3x3 patch view, in the
+    per-pixel contraction order of ``conv_general_dilated``.
+
+    Delegates to ``cnn._patches3x3`` — one copy of the patch-ordering
+    contract the bit-equivalence pin against ``forward_im2col`` rests on
+    (``kernel.py`` necessarily re-states it inside the Pallas program)."""
+    from repro.models.cnn import _patches3x3
+    return _patches3x3(x)
+
+
+def fold3x3(dpatches: jnp.ndarray) -> jnp.ndarray:
+    """Transpose of ``patches3x3``: scatter-add (B,H,W,9C) -> (B,H,W,C)."""
+    b, h, w, c9 = dpatches.shape
+    c = c9 // 9
+    dxp = jnp.zeros((b, h + 2, w + 2, c), dpatches.dtype)
+    for idx in range(9):
+        i, j = divmod(idx, 3)
+        dxp = dxp.at[:, i:i + h, j:j + w, :].add(
+            dpatches[..., idx * c:(idx + 1) * c])
+    return dxp[:, 1:1 + h, 1:1 + w, :]
+
+
+def conv_pool_fwd(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray
+                  ) -> Tuple[jnp.ndarray, Tuple]:
+    """Fused im2col conv + bias + ReLU + 2x2 maxpool, pool-first.
+
+    x (B,H,W,C); w (3,3,C,O); b (O,).  Returns the block activation
+    ``a (B,H/2,W/2,O)`` and residuals ``(pat, eq, relu_m)``:
+
+      pat    (B·H·W, 9C)   — im2col patches (reused for dW)
+      eq     (B,H,W,O)     — pool argmax mask, 1/count-weighted at ties
+                             (exactly ``jax.grad``'s reduce-max rule)
+      relu_m (B,H/2,W/2,O) — ReLU mask at pooled resolution
+
+    The forward value equals ``cnn._conv_im2col`` bit-for-bit at f32:
+    ``pool(relu(z+b)) == relu(pool(z)+b)`` because the per-channel bias
+    add is monotone (the same window element wins the max) and relu is
+    monotone.
+    """
+    bs, h, wd, c = x.shape
+    o = w.shape[-1]
+    pat = patches3x3(x).reshape(bs * h * wd, 9 * c)
+    z = _dot(pat, w.reshape(9 * c, o)).reshape(bs, h, wd, o)
+    zw = z.reshape(bs, h // 2, 2, wd // 2, 2, o)
+    pz = zw.max(axis=(2, 4))
+    a = jnp.maximum(pz + b, 0.0)
+    eqw = (zw == pz[:, :, None, :, None, :])
+    cnt = eqw.sum(axis=(2, 4), keepdims=True)
+    eq = jnp.where(eqw, 1.0 / cnt, 0.0).astype(x.dtype).reshape(bs, h, wd, o)
+    relu_m = (pz + b > 0).astype(x.dtype)
+    return a, (pat, eq, relu_m)
+
+
+def conv_pool_bwd(res: Tuple, w: jnp.ndarray, da: jnp.ndarray,
+                  need_dx: bool) -> Tuple:
+    """Backward of ``conv_pool_fwd`` from the saved masks.
+
+    da (B,H/2,W/2,O) -> (dw (3,3,C,O), db (O,), dx (B,H,W,C) or None).
+    ``db`` is summed at pooled resolution (4x cheaper than the im2col
+    order, identical value: the bias reaches the loss only through the
+    pool winners)."""
+    pat, eq, relu_m = res
+    bs, h, wd, o = eq.shape
+    c = pat.shape[-1] // 9
+    dp = da * relu_m                               # (B,H/2,W/2,O)
+    db = dp.astype(jnp.float32).sum(axis=(0, 1, 2))
+    dz = (eq.reshape(bs, h // 2, 2, wd // 2, 2, o)
+          * dp[:, :, None, :, None, :]).reshape(bs * h * wd, o)
+    dw = jax.lax.dot(pat.T, dz, preferred_element_type=jnp.float32)
+    dw = dw.reshape(3, 3, c, o)
+    dx = None
+    if need_dx:
+        dpat = _dot(dz, w.reshape(9 * c, o).T).reshape(bs, h, wd, 9 * c)
+        dx = fold3x3(dpat)
+    return dw, db, dx
+
+
+def fc_chain_fwd(flat: jnp.ndarray, params: dict) -> Tuple[jnp.ndarray, Tuple]:
+    """fc1+ReLU -> fc2+ReLU -> fc3 logits in one pass.
+
+    flat (B, F).  Returns logits (B, num_classes) and residuals
+    (h1, h2) — the ReLU masks are recovered as ``h > 0`` (free)."""
+    h1 = jnp.maximum(_dot(flat, params["fc1"]["w"]) + params["fc1"]["b"], 0.0)
+    h2 = jnp.maximum(_dot(h1, params["fc2"]["w"]) + params["fc2"]["b"], 0.0)
+    logits = _dot(h2, params["fc3"]["w"]) + params["fc3"]["b"]
+    return logits, (h1, h2)
+
+
+def fc_chain_bwd(flat: jnp.ndarray, res: Tuple, params: dict,
+                 dlogits: jnp.ndarray) -> Tuple[dict, jnp.ndarray]:
+    """Backward of ``fc_chain_fwd``: grads for fc1..fc3 plus dflat."""
+    h1, h2 = res
+
+    def dot32(a, b):
+        return jax.lax.dot(a, b, preferred_element_type=jnp.float32)
+
+    g3 = {"w": dot32(h2.T, dlogits), "b": dlogits.astype(jnp.float32).sum(0)}
+    dh2 = _dot(dlogits, params["fc3"]["w"].T) * (h2 > 0)
+    g2 = {"w": dot32(h1.T, dh2), "b": dh2.astype(jnp.float32).sum(0)}
+    dh1 = _dot(dh2, params["fc2"]["w"].T) * (h1 > 0)
+    g1 = {"w": dot32(flat.T, dh1), "b": dh1.astype(jnp.float32).sum(0)}
+    dflat = _dot(dh1, params["fc1"]["w"].T)
+    return {"fc1": g1, "fc2": g2, "fc3": g3}, dflat
+
+
+def forward_ref(params: dict, images: jnp.ndarray) -> jnp.ndarray:
+    """Full-model forward, bit-identical to ``cnn.forward_im2col`` at f32
+    (pool-first reassociation only — see ``conv_pool_fwd``)."""
+    a1, _ = conv_pool_fwd(images, params["conv1"]["w"], params["conv1"]["b"])
+    a2, _ = conv_pool_fwd(a1, params["conv2"]["w"], params["conv2"]["b"])
+    logits, _ = fc_chain_fwd(a2.reshape(a2.shape[0], -1), params)
+    return logits
+
+
+def forward_fwd_ref(params: dict, images: jnp.ndarray):
+    """Forward + all residuals (the ``custom_vjp`` fwd rule)."""
+    a1, r1 = conv_pool_fwd(images, params["conv1"]["w"], params["conv1"]["b"])
+    a2, r2 = conv_pool_fwd(a1, params["conv2"]["w"], params["conv2"]["b"])
+    flat = a2.reshape(a2.shape[0], -1)
+    logits, rfc = fc_chain_fwd(flat, params)
+    return logits, (r1, r2, flat, rfc)
+
+
+def backward_ref(params: dict, residuals, dlogits: jnp.ndarray,
+                 need_dx: bool = True):
+    """Hand-written VJP: dlogits -> dparams (+ dimages when ``need_dx``).
+
+    The training step (``ops.make_loss_grad``) passes ``need_dx=False`` —
+    images carry no gradient there; the ``custom_vjp`` wrapper keeps the
+    image cotangent for correctness (XLA DCEs it on this jnp path when
+    unused, but the Pallas twin cannot rely on DCE inside a kernel)."""
+    r1, r2, flat, rfc = residuals
+    gfc, dflat = fc_chain_bwd(flat, rfc, params, dlogits)
+    b2, h2, w2, o2 = r2[1].shape
+    da2 = dflat.reshape(b2, h2 // 2, w2 // 2, o2)
+    dw2, db2, da1 = conv_pool_bwd(r2, params["conv2"]["w"], da2, True)
+    dw1, db1, dx = conv_pool_bwd(r1, params["conv1"]["w"], da1, need_dx)
+    grads = {"conv1": {"w": dw1, "b": db1}, "conv2": {"w": dw2, "b": db2},
+             **gfc}
+    return grads, dx

@@ -100,18 +100,32 @@ def _conv_im2col(p, x):
     return _pool2(y)
 
 
-def forward_im2col(params, images: jnp.ndarray) -> jnp.ndarray:
+def forward_im2col(params, images: jnp.ndarray,
+                   compute_dtype=None) -> jnp.ndarray:
     """Full-model forward, same values as ``forward`` but ~4x faster to
     train on CPU: convolutions become (B·H·W, 9·Cin)x(9·Cin, Cout) matmuls
     and pooling a reshape-max, both of which XLA lowers far better than the
-    vmapped ``conv_general_dilated``/``reduce_window`` pair.  This is the
-    training step used inside the fused HSFL round (core/fused_round)."""
+    vmapped ``conv_general_dilated``/``reduce_window`` pair.
+
+    ``compute_dtype`` threads the mixed-precision policy
+    (``kernels/fused_cnn.ForwardPolicy``): params and activations are cast
+    to it (bf16 in practice) and the logits come back float32, so losses
+    accumulate at full precision against f32 master params.  ``None``
+    keeps everything in the params' own dtype (the f32 value-equivalence
+    contract).  This is the PR-1 training step kept as the autodiff
+    baseline; the fused round's default path is the custom-VJP pool-first
+    step in ``kernels/fused_cnn`` (bit-identical forward at f32)."""
+    if compute_dtype is not None:
+        params = jax.tree_util.tree_map(
+            lambda l: l.astype(compute_dtype), params)
+        images = images.astype(compute_dtype)
     y = _conv_im2col(params["conv1"], images)
     y = _conv_im2col(params["conv2"], y)
     y = y.reshape(y.shape[0], -1)
     y = _fc(params["fc1"], y)
     y = _fc(params["fc2"], y)
-    return _fc(params["fc3"], y, act=False)
+    y = _fc(params["fc3"], y, act=False)
+    return y.astype(jnp.float32) if compute_dtype is not None else y
 
 
 def split_params(params, cut: int) -> Tuple[Dict, Dict]:

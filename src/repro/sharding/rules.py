@@ -229,3 +229,23 @@ def shard_sweep_tree(mesh, tree: Any, n_sims: int) -> Any:
                                                   sweep_leading_spec(nd)))
 
     return jax.tree_util.tree_map(put, tree)
+
+
+def shard_sweep_specs(mesh, tree: Any, n_sims: int) -> Any:
+    """Abstract twin of ``shard_sweep_tree``: annotate a
+    ``jax.ShapeDtypeStruct`` pytree with the shardings ``device_put`` would
+    apply, so the sweep engine can AOT-lower a group's program from avals
+    alone — without materializing its (large, donated) input carry."""
+    if mesh is None or n_sims % mesh.shape[SWEEP] != 0:
+        return tree
+    from jax.sharding import NamedSharding
+
+    def ann(leaf):
+        nd = len(leaf.shape)
+        if nd == 0:
+            return leaf
+        return jax.ShapeDtypeStruct(
+            leaf.shape, leaf.dtype,
+            sharding=NamedSharding(mesh, sweep_leading_spec(nd)))
+
+    return jax.tree_util.tree_map(ann, tree)

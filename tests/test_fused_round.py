@@ -78,6 +78,61 @@ def test_fused_matches_host_with_delta_codec():
     assert max_leaf_diff(p_host, p_fused) < 3e-5
 
 
+def test_host_selection_budgets_compressed_bytes():
+    """PR-3 follow-up: host greedy selection used to budget the
+    *uncompressed* model for the final upload under ``use_delta_codec`` —
+    it must see the same effective bytes the device engine's
+    ``eff_model_bytes`` does (host/device byte parity).
+
+    A UAV whose uplink only fits τ_max at the compressed payload proves
+    the budgeting: infeasible at full bytes, selected with the codec."""
+    from repro.core import latency as lat
+    from repro.core.hsfl import model_compress_ratio
+    from repro.core.selection import schedule_users, select_users_jax
+
+    cfg = HSFLConfig(use_delta_codec=True)
+    ratio = model_compress_ratio(cfg)
+    model_b, b, tau = 10e6, 2, 9.0
+    ue_b = model_b * cfg.ue_model_fraction
+    # rate 1.8e7: FL uplink = 2·10e6·8/1.8e7 ≈ 8.9 s -> infeasible
+    # uncompressed (8.9 + 0.6 training > τ_max), but ·ratio ≈ 2.2 s fits.
+    # SL stays infeasible (the activation payload doesn't compress).
+    rates = np.array([1.8e7, 1e6])
+    devices = [lat.DeviceProfile(flops_per_sec=4e9) for _ in rates]
+    wls = [lat.WorkloadProfile(local_epochs=6, samples=200,
+                               act_bytes_per_sample=1e6) for _ in rates]
+    full = schedule_users(rates, devices, wls, model_b, ue_b, b, tau, 2)
+    eff = schedule_users(rates, devices, wls, model_b * ratio,
+                         ue_b * ratio, b, tau, 2)
+    assert [u.index for u in full] == []
+    assert [u.index for u in eff] == [0]
+
+    # the device greedy port sees the identical effective bytes
+    sel, mode_sl, valid, n_taken, _, _ = select_users_jax(
+        jnp.asarray(rates, jnp.float32),
+        jnp.asarray([d.flops_per_sec for d in devices], jnp.float32),
+        jnp.asarray([w.samples for w in wls], jnp.float32),
+        b=jnp.float32(b), tau_max=jnp.float32(tau), k_select=2,
+        model_bytes=model_b * ratio, ue_model_bytes=ue_b * ratio,
+        local_epochs=6, act_bytes_per_sample=1e6)
+    assert int(n_taken) == 1 and int(sel[0]) == 0
+
+    # end to end: HSFLSimulation._schedule_round passes exactly
+    # (model_bytes·ratio, ue_bytes·ratio) to the greedy
+    sim = HSFLSimulation(small_cfg(rounds=1, use_delta_codec=True))
+    from repro.core.channel import UAVFleet
+    twin = UAVFleet(sim.cfg.n_uavs, sim.cfg.channel, seed=sim.cfg.seed + 1)
+    twin.resample_fading()
+    want = schedule_users(
+        twin.rates(), sim.devices, sim.workloads,
+        sim.cfg.model_bytes * sim.compress_ratio,
+        sim.cfg.model_bytes * sim.cfg.ue_model_fraction * sim.compress_ratio,
+        sim.cfg.b, sim.cfg.tau_max, sim.cfg.k_select)
+    got, _ = sim._schedule_round()
+    assert [(u.index, u.mode) for u in got] == \
+        [(u.index, u.mode) for u in want]
+
+
 def test_codec_compress_ratio_is_derived():
     sim = HSFLSimulation(small_cfg(rounds=1, use_delta_codec=True))
     n = sum(x.size for x in jax.tree_util.tree_leaves(sim.params))
