@@ -51,8 +51,14 @@ throughput swings ±50% minute to minute, so sequential subprocesses
 minutes apart cannot resolve the 3–30% step-level delta — those two rows
 carry ``"paired": true``.  Results append to BENCH_hsfl.json.
 
+``--scheme`` runs the single-round engines under any *registered*
+transmission scheme (the ``repro.core.schemes`` registry — the choices
+list is dynamic, so a newly registered scheme is immediately benchable);
+every row records its ``scheme`` label.
+
   PYTHONPATH=src python -m benchmarks.hsfl_round_bench
   PYTHONPATH=src python -m benchmarks.hsfl_round_bench --rounds 20 --devices 2
+  PYTHONPATH=src python -m benchmarks.hsfl_round_bench --scheme deadline
 """
 from __future__ import annotations
 
@@ -92,25 +98,27 @@ def measure_grid(engine: str, rounds: int, seeds: int) -> dict:
     combos = (("opt", 2), ("async", 1), ("discard", 1))
     seed_list = tuple(range(seeds))
     base = dict(devices=len(jax.devices()), grid="fig3b",
+                schemes=[s for s, _ in combos],
                 sims=len(combos) * seeds, rounds_timed=rounds)
 
     if engine == "grid_loop":
-        from repro.core.hsfl import HSFLConfig, run_hsfl
+        from repro.api import Experiment
         t0 = time.time()
         for scheme, b in combos:
             for sd in seed_list:
-                run_hsfl(HSFLConfig(scheme=scheme, b=b, seed=sd,
-                                    rounds=rounds))
+                (Experiment(scheme=scheme, b=b, seed=sd, rounds=rounds)
+                 .run(engine="fused"))
         wall = time.time() - t0
         return dict(base, engine=engine, wall_s=round(wall, 2),
                     sim_rounds_per_sec=round(base["sims"] * rounds / wall, 3))
 
-    from repro.core.sweep import fig3b_spec, run_sweep
+    from repro.api import Experiment
+    from repro.core.sweep import fig3b_spec
     # grid_sweep_codec: the same fig3b panel with int8 delta-codec
     # snapshots — opt-codec + async compile; discard lowers onto opt@b=1
     spec = fig3b_spec(rounds, seed_list,
                       use_delta_codec=engine == "grid_sweep_codec")[0]
-    res = run_sweep(spec, timeit=True)
+    res = Experiment.from_spec(spec).run(engine="sweep", timeit=True)
     steady = sum(g.run_s for g in res.groups)
     compile_s = sum(g.compile_s for g in res.groups)
     # background AOT compiles overlap execution, so the critical-path wall
@@ -125,7 +133,7 @@ def measure_grid(engine: str, rounds: int, seeds: int) -> dict:
 
 
 def measure_pair(warmup: int, rounds: int, kernel: str = "xla",
-                 precision: str = "f32") -> dict:
+                 precision: str = "f32", scheme: str = "opt") -> dict:
     """Interleave the policy-selected fused engine (``--kernel``/
     ``--precision``; default the custom-VJP xla/f32 step) against the PR-1
     autodiff baseline (kernel=im2col) round by round in ONE process, so
@@ -140,7 +148,7 @@ def measure_pair(warmup: int, rounds: int, kernel: str = "xla",
     pair = {"fused": (kernel, precision), "fused_im2col": ("im2col", "f32")}
     sims, state = {}, {}
     for name, (kern, prec) in pair.items():
-        cfg = HSFLConfig(scheme="opt", b=2, rounds=warmup + rounds,
+        cfg = HSFLConfig(scheme=scheme, b=2, rounds=warmup + rounds,
                          kernel=kern, precision=prec)
         sims[name] = HSFLSimulation(cfg)
         state[name] = ([], 1)
@@ -168,13 +176,14 @@ def measure_pair(warmup: int, rounds: int, kernel: str = "xla",
         rows.append({"engine": name, "ms_per_round": round(ms, 1),
                      "rounds_per_sec": round(1e3 / ms, 3),
                      "mean_selected": round(sel[name] / rounds, 1),
-                     "kernel": kern, "precision": prec, "paired": True,
-                     "devices": len(jax.devices())})
+                     "scheme": scheme, "kernel": kern, "precision": prec,
+                     "paired": True, "devices": len(jax.devices())})
     return {"engine": "fused_pair", "rows": rows}
 
 
 def measure(engine: str, warmup: int, rounds: int,
-            kernel: str = "xla", precision: str = "f32") -> dict:
+            kernel: str = "xla", precision: str = "f32",
+            scheme: str = "opt") -> dict:
     import time
 
     import jax
@@ -184,7 +193,7 @@ def measure(engine: str, warmup: int, rounds: int,
     if engine not in ENGINES:
         raise SystemExit(f"unknown engine {engine!r}; choose from {ENGINES}")
     k_over, p_over = ENGINE_POLICY.get(engine, (None, None))
-    cfg = HSFLConfig(scheme="opt", b=2, rounds=warmup + rounds,
+    cfg = HSFLConfig(scheme=scheme, b=2, rounds=warmup + rounds,
                      use_fused_round=engine != "host",
                      use_delta_codec=engine == "fused_codec",
                      kernel=k_over or kernel, precision=p_over or precision)
@@ -205,7 +214,8 @@ def measure(engine: str, warmup: int, rounds: int,
     return {"engine": engine, "ms_per_round": round(ms, 1),
             "rounds_per_sec": round(1e3 / ms, 3),
             "mean_selected": round(selected / rounds, 1),
-            "kernel": cfg.kernel, "precision": cfg.precision,
+            "scheme": cfg.scheme, "kernel": cfg.kernel,
+            "precision": cfg.precision,
             "devices": len(jax.devices())}
 
 
@@ -224,6 +234,7 @@ def run_child(engine: str, args, devices: int = 1, tag: str = "",
          "--warmup", str(args.warmup if warmup is None else warmup),
          "--rounds", str(args.rounds if rounds is None else rounds),
          "--kernel", args.kernel, "--precision", args.precision,
+         "--scheme", args.scheme,
          "--grid-rounds", str(args.grid_rounds),
          "--grid-seeds", str(args.grid_seeds)],
         capture_output=True, text=True, env=env,
@@ -267,6 +278,11 @@ def main() -> None:
                          "(kernels/fused_cnn.ForwardPolicy)")
     ap.add_argument("--precision", default="f32", choices=["f32", "bf16"],
                     help="compute precision for the default fused engine")
+    from repro.core.schemes import registered_schemes
+    ap.add_argument("--scheme", default="opt", choices=registered_schemes(),
+                    help="transmission scheme for the single-round engines "
+                         "(any registered repro.core.schemes name); "
+                         "recorded per row in BENCH_hsfl.json")
     ap.add_argument("--skip-policy-rows", action="store_true",
                     help="skip the fused_im2col/fused_bf16/fused_pallas "
                          "policy comparison rows")
@@ -281,10 +297,12 @@ def main() -> None:
                                args.grid_seeds)
         elif args.engine == "fused_pair":
             rec = measure_pair(args.warmup, args.rounds,
-                               kernel=args.kernel, precision=args.precision)
+                               kernel=args.kernel, precision=args.precision,
+                               scheme=args.scheme)
         else:
             rec = measure(args.engine, args.warmup, args.rounds,
-                          kernel=args.kernel, precision=args.precision)
+                          kernel=args.kernel, precision=args.precision,
+                          scheme=args.scheme)
         print(json.dumps(rec))
         return
 
@@ -306,7 +324,8 @@ def main() -> None:
     host_ms = by["host"]["ms_per_round"]
     result = {
         "config": {"n_uavs": 30, "k_select": 10, "local_epochs": 6, "b": 2,
-                   "scheme": "opt", "steps_per_epoch": 4, "batch_size": 10,
+                   "scheme": args.scheme, "steps_per_epoch": 4,
+                   "batch_size": 10,
                    "rounds_timed": args.rounds, "warmup": args.warmup},
         "engines": recs,
         "speedup_fused_vs_host": round(host_ms / by["fused"]["ms_per_round"],

@@ -29,9 +29,10 @@ from typing import Dict, List, Sequence
 
 import numpy as np
 
-from repro.core.hsfl import HSFLConfig, run_hsfl
+from repro.api import Experiment
+from repro.core.hsfl import HSFLConfig
 from repro.core.sweep import (SweepSpec, fig3a_spec, fig3b_spec, fig3c_spec,
-                              fig3d_spec, run_sweep)
+                              fig3d_spec)
 
 
 def _curve(accs: np.ndarray, rounds: int) -> List[float]:
@@ -67,8 +68,9 @@ def _record(tag: str, *, acc: np.ndarray, bytes_sent: np.ndarray,
 def _run(tag: str, rounds: int, seeds=(0,), **kw) -> Dict:
     t0 = time.time()
     accs, bytes_, resc, drop = [], [], [], []
-    for seed in seeds:
-        log = run_hsfl(HSFLConfig(rounds=rounds, seed=seed, **kw))
+    logs = (Experiment(HSFLConfig(rounds=rounds, **kw))
+            .with_seeds(*seeds).run(engine="fused"))
+    for log in (logs if isinstance(logs, list) else [logs]):
         accs.append([a for a in log.acc_curve if a == a])
         bytes_.append([r.bytes_sent for r in log.rounds])
         resc.append(sum(r.used_snapshot for r in log.rounds))
@@ -97,7 +99,8 @@ def _sweep_panel(specs: Sequence[SweepSpec], namer) -> List[Dict]:
     panel-level ``us_per_round``/``rounds_per_sec``.
     """
     t0 = time.time()
-    results = [run_sweep(spec) for spec in specs]
+    results = [Experiment.from_spec(spec).run(engine="sweep")
+               for spec in specs]
     elapsed = time.time() - t0
     rounds = results[0].rounds
     total_rounds = sum(r.n_simulations for r in results) * rounds
@@ -236,3 +239,26 @@ def beyond_paper_delta_codec(rounds: int = 60, seeds=(0,),
         lambda label, dist, cfg: ("beyond_codec_"
                                   f"{'on' if label.endswith('+codec') else 'off'}"
                                   f"_b{int(cfg['b'])}"))
+
+
+def scheme_panel(scheme: str, rounds: int = 60, seeds=(0,),
+                 engine: str = "sweep", b: float = 2.0) -> List[Dict]:
+    """Any *registered* transmission scheme (``repro.core.schemes``) as a
+    one-scheme panel next to the opt reference — the ``--scheme`` hook of
+    ``benchmarks/run.py``.  Runs on either engine through the Experiment
+    facade, so a newly registered scheme is benchmarkable with zero code."""
+    with_ref = scheme != "opt"
+    if engine == "loop":
+        out = [_run(f"scheme_{scheme}_b{int(b)}", rounds, seeds,
+                    scheme=scheme, b=int(b))]
+        if with_ref:
+            out.append(_run(f"scheme_opt_b{int(b)}_ref", rounds, seeds,
+                            scheme="opt", b=int(b)))
+        return out
+    ex = (Experiment(HSFLConfig(rounds=rounds)).with_seeds(*seeds)
+          .with_scheme(scheme, b=float(b)))
+    tags = {scheme: f"scheme_{scheme}_b{int(b)}"}
+    if with_ref:
+        ex = ex.with_scheme("opt", b=float(b))
+        tags["opt"] = f"scheme_opt_b{int(b)}_ref"
+    return _sweep_panel([ex.to_spec()], lambda label, dist, cfg: tags.get(label))

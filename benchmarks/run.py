@@ -41,7 +41,14 @@ def main() -> None:
                              "beyond", "kernels", "roofline", "ablations"])
     ap.add_argument("--engine", default="sweep", choices=["sweep", "loop"],
                     help="fig3 panels: vectorized sweep engine (default) "
-                         "or the per-cell run_hsfl loop")
+                         "or the per-cell loop")
+    from repro.core.schemes import registered_schemes
+    ap.add_argument("--scheme", default=None, choices=registered_schemes(),
+                    help="also run this registered transmission scheme as "
+                         "a one-scheme panel vs the opt reference "
+                         "(repro.core.schemes registry)")
+    ap.add_argument("--scheme-b", type=float, default=2.0,
+                    help="transmission budget for the --scheme panel")
     ap.add_argument("--out", default=None, help="also append JSON rows here")
     args = ap.parse_args()
     seeds = tuple(range(args.seeds))
@@ -66,6 +73,9 @@ def main() -> None:
         emit(pe.fig3d_tau_sweep(args.rounds, seeds, args.engine))
     if args.only in (None, "beyond"):
         emit(pe.beyond_paper_delta_codec(args.rounds, seeds, args.engine))
+    if args.scheme:
+        emit(pe.scheme_panel(args.scheme, args.rounds, seeds, args.engine,
+                             b=args.scheme_b))
     if args.only == "ablations":     # beyond-paper ablations (EXPERIMENTS.md)
         emit(pe.ablation_schedule_placement(args.rounds, seeds))
         emit(pe.ablation_local_epochs(args.rounds, seeds))

@@ -1,7 +1,8 @@
 """Quickstart: the paper's technique in 40 lines.
 
-1. Build the HSFL UAV simulation (Alg. 1+2) and run a few rounds of
-   OPT-HSFL vs the discard baseline on non-iid data.
+1. Run a few rounds of OPT-HSFL vs the discard baseline on non-iid data
+   through the ``repro.api.Experiment`` facade (Alg. 1+2; any registered
+   transmission scheme, any engine).
 2. Train a reduced assigned architecture for a handful of steps via the
    public API.
 
@@ -10,7 +11,7 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 import jax
 import jax.numpy as jnp
 
-from repro.core.hsfl import HSFLConfig, run_hsfl
+from repro.api import Experiment, registered_schemes
 from repro.configs import get_config
 from repro.models import build_model
 from repro.optim import sgd
@@ -18,13 +19,18 @@ from repro.training import create_train_state, make_train_step
 from repro.data import make_token_stream
 
 # --- 1. the paper: opportunistic-proactive transmission ---------------------
-print("== OPT-HSFL (the paper) vs discard, 5 rounds, non-iid ==")
-for scheme, b in (("opt", 2), ("discard", 1)):
-    log = run_hsfl(HSFLConfig(scheme=scheme, b=b, rounds=5, n_uavs=12,
-                              k_select=4, n_train=1200, n_test=300,
-                              steps_per_epoch=2, seed=0))
+# Any registered transmission scheme (see repro.core.schemes) runs through
+# the one Experiment facade on any engine: "loop" (host reference),
+# "fused" (single-jit round) or "sweep" (vectorized grids).
+print(f"== OPT-HSFL (the paper) vs discard, 5 rounds, non-iid ==")
+print(f"   registered schemes: {', '.join(registered_schemes())}")
+for scheme, b in (("opt", 2.0), ("discard", 1.0)):
+    log = (Experiment(rounds=5, n_uavs=12, k_select=4, n_train=1200,
+                      n_test=300, steps_per_epoch=2, seed=0)
+           .with_scheme(scheme, b=b)
+           .run(engine="fused"))
     s = log.summary()
-    print(f"  {scheme:8s} b={b}: acc={s['final_acc']:.3f} "
+    print(f"  {scheme:8s} b={int(b)}: acc={s['final_acc']:.3f} "
           f"comm={s['avg_comm_mb']:.1f} MB/round "
           f"rescued={s['snapshot_rescues']} dropped={s['drops']}")
 

@@ -4,11 +4,13 @@ Reproduces the Fig. 3(b) comparison — OPT-HSFL (b=2) vs Async-HSFL vs
 discard — over 30 UAVs with the Rician channel, greedy selection, bursty
 interruptions, and FedAvg aggregation.
 
-By default the whole panel runs on the vectorized sweep engine
-(core/sweep): one compiled program per scheme with seeds vmapped, rounds
-scanned and the channel realized on-device.  ``--engine loop`` falls back
-to one ``run_hsfl`` per cell (host-presampled channel; the reference RNG
-stream).
+Everything routes through the ``repro.api.Experiment`` facade.  By default
+the whole panel runs on the vectorized sweep engine (core/sweep): one
+compiled program per scheme with seeds vmapped, rounds scanned and the
+channel realized on-device.  ``--engine loop`` falls back to one fused
+per-cell simulation (host-presampled channel; the reference RNG stream).
+``--schemes`` takes any registered scheme names (``repro.core.schemes``)
+as ``name=b`` pairs.
 
 Run:  PYTHONPATH=src python examples/uav_fl_sim.py [--rounds 100] [--seeds 2]
 """
@@ -16,6 +18,8 @@ import argparse
 import time
 
 import numpy as np
+
+from repro.api import Experiment, registered_schemes
 
 SCHEMES = (("opt", 2), ("async", 1), ("discard", 1))
 
@@ -27,6 +31,9 @@ ap.add_argument("--seed", type=int, default=0)
 ap.add_argument("--seeds", type=int, default=1,
                 help="number of seeds (stacked on the sweep's sim axis)")
 ap.add_argument("--engine", default="sweep", choices=["sweep", "loop"])
+ap.add_argument("--schemes", nargs="*", default=None, metavar="NAME=B",
+                help="scheme panel as name=b pairs (default: opt=2 async=1 "
+                     f"discard=1); registered: {', '.join(registered_schemes())}")
 ap.add_argument("--codec", action="store_true",
                 help="int8 delta-codec snapshots (kernels/delta_codec): "
                      "payloads shrink ~4x and rescues carry quantization "
@@ -40,20 +47,30 @@ ap.add_argument("--precision", default="f32", choices=["f32", "bf16"],
                      "f32 master params and loss)")
 args = ap.parse_args()
 
+if args.schemes:
+    schemes = []
+    for kv in args.schemes:
+        name, eq, b = kv.partition("=")
+        if not eq or not name:
+            ap.error(f"--schemes takes NAME=B pairs (e.g. deadline=2), "
+                     f"got {kv!r}")
+        schemes.append((name, float(b)))
+    schemes = tuple(schemes)
+else:
+    schemes = SCHEMES
 seed_list = tuple(args.seed + i for i in range(args.seeds))
 results = {}
 t0 = time.time()
 
-if args.engine == "sweep":
-    from repro.core.hsfl import HSFLConfig
-    from repro.core.sweep import SweepSpec, run_sweep
+base = Experiment(rounds=args.rounds, distribution=args.distribution,
+                  use_delta_codec=args.codec, kernel=args.kernel,
+                  precision=args.precision).with_seeds(*seed_list)
 
-    base = HSFLConfig(rounds=args.rounds, distribution=args.distribution,
-                      use_delta_codec=args.codec, kernel=args.kernel,
-                      precision=args.precision)
-    spec = SweepSpec(base=base, seeds=seed_list,
-                     schemes=tuple((s, {"b": float(b)}) for s, b in SCHEMES))
-    res = run_sweep(spec, verbose=True)
+if args.engine == "sweep":
+    ex = base
+    for s, b in schemes:
+        ex = ex.with_scheme(s, b=float(b))
+    res = ex.run(engine="sweep", verbose=True)
     if args.codec:
         print(f"[codec] panel compiled as {res.n_programs} programs "
               f"(discard lowered onto opt@b=1)")
@@ -61,18 +78,11 @@ if args.engine == "sweep":
         # seed 0's trajectory represents the scheme (summary averages seeds)
         results[g.scheme] = [g.sim_log(i, 0) for i in range(len(g.sims))]
 else:
-    from repro.core.hsfl import HSFLConfig, run_hsfl
-
-    for scheme, b in SCHEMES:
+    for scheme, b in schemes:
         print(f"--- {scheme} (b={b}) on {args.distribution} ---")
-        results[scheme] = [
-            run_hsfl(HSFLConfig(scheme=scheme, b=b, rounds=args.rounds,
-                                distribution=args.distribution, seed=sd,
-                                use_delta_codec=args.codec,
-                                kernel=args.kernel,
-                                precision=args.precision),
-                     verbose=True)
-            for sd in seed_list]
+        logs = base.with_scheme(scheme, b=float(b)).run(engine="fused",
+                                                        verbose=True)
+        results[scheme] = logs if isinstance(logs, list) else [logs]
 
 wall = time.time() - t0
 print(f"\n=== summary (Fig. 3b, {args.engine} engine, "
@@ -87,6 +97,7 @@ for scheme, logs in results.items():
           f"comm={np.mean([x['avg_comm_mb'] for x in s]):.1f} MB/round "
           f"rescued={sum(x['snapshot_rescues'] for x in s)} "
           f"dropped={sum(x['drops'] for x in s)}")
-print(f"\nOPT - Async accuracy delta: "
-      f"{100 * (finals['opt'] - finals['async']):+.2f} pp "
-      f"(paper: +3.98 pp at 100 rounds)")
+if "opt" in finals and "async" in finals:
+    print(f"\nOPT - Async accuracy delta: "
+          f"{100 * (finals['opt'] - finals['async']):+.2f} pp "
+          f"(paper: +3.98 pp at 100 rounds)")

@@ -6,12 +6,15 @@ from repro.core.aggregation import aggregate_round, fedavg, fedasync_weight
 from repro.core.channel import ChannelParams, UAVFleet, rate_bps
 from repro.core.hsfl import HSFLConfig, HSFLSimulation, run_hsfl
 from repro.core.opportunistic_sync import OppSyncConfig
+from repro.core.schemes import (Scheme, get_scheme, register_scheme,
+                                registered_schemes)
 from repro.core.sweep import SweepSpec, run_hsfl_on_device, run_sweep
 from repro.core.transmission import OppTransmitter, scheduled_epochs
 
 __all__ = [
     "ChannelParams", "HSFLConfig", "HSFLSimulation", "OppSyncConfig",
-    "OppTransmitter", "SweepSpec", "UAVFleet", "aggregate_round", "fedavg",
-    "fedasync_weight", "rate_bps", "run_hsfl", "run_hsfl_on_device",
-    "run_sweep", "scheduled_epochs",
+    "OppTransmitter", "Scheme", "SweepSpec", "UAVFleet", "aggregate_round",
+    "fedavg", "fedasync_weight", "get_scheme", "rate_bps",
+    "register_scheme", "registered_schemes", "run_hsfl",
+    "run_hsfl_on_device", "run_sweep", "scheduled_epochs",
 ]

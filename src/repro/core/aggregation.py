@@ -52,6 +52,12 @@ def aggregate_round(arrived: List[Any], delayed: List[tuple],
                     alpha: float = 0.4, a: float = 0.5) -> Any:
     """One round of global aggregation.
 
+    .. deprecated:: PR 5 — the engines now dispatch through
+       ``repro.core.schemes``: ``get_scheme(scheme).aggregate_host(...)``
+       is the single per-scheme implementation (this string-branched
+       wrapper is kept for back-compat and delegates nothing; prefer the
+       registry so new schemes are covered).
+
     arrived:  fresh updates received this round (final or OPT snapshots).
     delayed:  [(update, staleness), ...] — only used by the 'async' scheme.
     scheme:   'opt' | 'discard' — FedAvg over ``arrived`` (OPT already

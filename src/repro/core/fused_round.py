@@ -21,6 +21,11 @@ jitted function:
     multi-pod OppSync feature uses, so Alg. 2 has one implementation;
   - the round ends with a single masked weighted-mean aggregation over the
     K axis (no per-user tree_map loop);
+  - every scheme-specific decision (probe schedule, final deadline,
+    aggregation) dispatches through a registered ``schemes.Scheme`` object
+    — the engine bodies hold no per-scheme string branches, so registered
+    schemes (incl. beyond-paper ones like ``deadline``) compile here
+    unchanged;
   - with ``use_codec`` the snapshot state is the int8 delta-codec payload
     (kernels/delta_codec): probes quantize params−base through the Pallas
     kernel and rescues dequantize at aggregation, so the rescued
@@ -58,12 +63,18 @@ from repro.core.channel_lib import (ChannelParams, FleetState,
                                     fleet_move, fleet_outage_step,
                                     fleet_rates, fleet_resample_fading)
 from repro.core.opportunistic_sync import snapshot_decision
-from repro.core.selection import select_users_jax
+from repro.core.schemes import (get_scheme, kx as _kx,
+                                masked_mean as _masked_mean,
+                                probe_schedule_mask,
+                                tree_where_k as _tree_where_k)
 from repro.kernels.delta_codec.kernel import (BLOCK, dequantize_blocks,
                                               quantize_blocks)
 from repro.kernels.delta_codec.ops import stacked_flatten, stacked_unflatten
 from repro.kernels.fused_cnn.ops import resolve_train_step
 from repro.training.loss import accuracy, cross_entropy
+
+__all__ = ["RoundStats", "DeviceSimCarry", "DeviceRoundMetrics",
+           "build_fused_round", "build_device_round", "probe_schedule_mask"]
 
 
 class RoundStats(NamedTuple):
@@ -75,39 +86,15 @@ class RoundStats(NamedTuple):
     opp_sends: jnp.ndarray   # (K,) int32 — opportunistic transmissions sent
 
 
-def _kx(flags: jnp.ndarray, leaf: jnp.ndarray) -> jnp.ndarray:
-    """Broadcast a (K,) flag vector against a (K, ...) leaf."""
-    return flags.reshape(flags.shape + (1,) * (leaf.ndim - 1))
-
-
-def _tree_where_k(flags, a, b):
-    return jax.tree_util.tree_map(
-        lambda x, y: jnp.where(_kx(flags, x), x, y), a, b)
-
-
-def _masked_mean(contrib, weights, fallback):
-    """Σ_i w_i·x_i / Σ_i w_i over the K axis; ``fallback`` when Σ w = 0.
-
-    The denominator is the *true* positive sum — clamping it to 1 (the old
-    ``jnp.maximum(num, 1.0)``) silently shrinks the mean whenever the
-    weights are fractional and sum below 1 (the async staleness weights
-    α(s+1)^(−a) ≈ 0.283 do exactly that; same bug class as the fixed
-    ``opportunistic_sync.round_sync``)."""
-    num = jnp.sum(weights)
-    denom = jnp.where(num > 0, num, 1.0)
-    return jax.tree_util.tree_map(
-        lambda c, p: jnp.where(
-            num > 0, jnp.sum(c * _kx(weights, c), axis=0) / denom, p),
-        contrib, fallback)
-
-
-def _codec_encode(stacked, params, interpret: bool, block: int = BLOCK):
+def _codec_encode(stacked, params, interpret: bool, block: int = BLOCK,
+                  bits: int = 8):
     """Quantize the stacked users' delta vs the round-start global params
     into the int8 codec state ``(q (K, M, block), scales (K, M, 1))``."""
     delta = jax.tree_util.tree_map(lambda s, p: s - p[None], stacked, params)
     flat, _ = stacked_flatten(delta, block=block)
     k, rows, blk = flat.shape
-    q, s = quantize_blocks(flat.reshape(k * rows, blk), interpret=interpret)
+    q, s = quantize_blocks(flat.reshape(k * rows, blk), interpret=interpret,
+                           bits=bits)
     return q.reshape(k, rows, blk), s.reshape(k, rows, 1)
 
 
@@ -152,52 +139,12 @@ def _make_epoch_fn(loss_grad: Callable, lr: float) -> Callable:
     return epoch_fn
 
 
-def _sync_aggregate(scheme: str, params, stacked, snap_tree, has_snap,
-                    arrived):
-    """opt/discard aggregation: masked mean over finals (+ rescues)."""
-    if scheme == "opt":
-        rescued = (~arrived) & has_snap
-        contrib = _tree_where_k(arrived, stacked, snap_tree)
-        weights = (arrived | rescued).astype(jnp.float32)
-    else:
-        rescued = jnp.zeros_like(arrived)
-        contrib = stacked
-        weights = arrived.astype(jnp.float32)
-    return _masked_mean(contrib, weights, params), rescued
-
-
-def _async_merge(params, stacked, delayed_stack, delayed_mask, arrived,
-                 aw: float, k_carry: int):
-    """Async aggregation: timely finals at weight 1, prior-round stragglers
-    at α(s+1)^(−a); a round with only stragglers falls back to the
-    sequential FedAsync server merge (never a full replace)."""
-    w_t = arrived.astype(jnp.float32)                      # (K,)
-    w_d = delayed_mask.astype(jnp.float32) * aw            # (k_carry,)
-    n_arr = jnp.sum(w_t)
-    total = n_arr + jnp.sum(w_d)
-    mixed = jax.tree_util.tree_map(
-        lambda s, d, p: jnp.where(
-            total > 0,
-            (jnp.sum(s * _kx(w_t, s), axis=0)
-             + jnp.sum(d * _kx(w_d, d), axis=0))
-            / jnp.maximum(total, 1e-9), p),
-        stacked, delayed_stack, params)
-
-    seq = params
-    for i in range(k_carry):          # static unroll; k_carry is small
-        seq = jax.tree_util.tree_map(
-            lambda acc, d: jnp.where(delayed_mask[i],
-                                     (1.0 - aw) * acc + aw * d[i], acc),
-            seq, delayed_stack)
-    return jax.tree_util.tree_map(
-        lambda a, b: jnp.where(n_arr > 0, a, b), mixed, seq)
-
-
-def build_fused_round(*, scheme: str, local_epochs: int, steps_per_epoch: int,
+def build_fused_round(*, scheme: Any, local_epochs: int, steps_per_epoch: int,
                       lr: float, tau_max: float, probe_epochs: Tuple[int, ...],
                       async_weight: float = 0.0, use_codec: bool = False,
                       interpret: bool = False, k_carry: int = 0,
                       forward: Any = None, codec_block: int = BLOCK,
+                      codec_bits: int = 8,
                       stacked_sharding: Any = None) -> Callable:
     """Compile one HSFL round for a fixed (scheme, e, steps, schedule).
 
@@ -208,24 +155,27 @@ def build_fused_round(*, scheme: str, local_epochs: int, steps_per_epoch: int,
     final_rate/train_time (K,), final_outage/valid (K,) bool.  The result is
     ``(new_params, stats)`` plus ``new_delayed_stack`` for async.
 
-    ``forward`` is a ``kernels/fused_cnn.ForwardPolicy`` (or ``None`` for
+    ``scheme`` is a registered ``schemes.Scheme`` (or its name): its
+    ``final_slack`` shapes the arrival predicate and its ``aggregate``
+    merges the round — the engine body holds no per-scheme branches beyond
+    the static ``carries_delayed`` signature split.  ``forward`` is a
+    ``kernels/fused_cnn.ForwardPolicy`` (or ``None`` for
     the default xla/f32 policy; a bare callable is a legacy hook used by
     tests that push non-CNN models through the round).  The round carries
     are **donated**: the caller's ``params`` (and, for async, the straggler
     ``delayed_stack``/``delayed_mask``) buffers alias the returned ones, so
     chaining rounds the way ``HSFLSimulation`` does stops copying the full
     parameter state every dispatch — do not reuse those arrays after the
-    call.  ``codec_block`` is the delta-codec quantization group width
-    (``HSFLConfig.codec_block``).
+    call.  ``codec_block``/``codec_bits`` are the delta-codec quantization
+    group width and bit depth (``HSFLConfig.codec_block``/``codec_bits``).
     """
     loss_grad, _ = resolve_train_step(forward, interpret)
-    if scheme not in ("opt", "discard", "async"):
-        raise ValueError(scheme)
+    scheme = get_scheme(scheme)
 
-    if scheme == "async" and k_carry < 1:
+    if scheme.carries_delayed and k_carry < 1:
         raise ValueError(
-            f"async build_fused_round needs k_carry >= 1 (the fixed width "
-            f"of the straggler carry), got k_carry={k_carry}")
+            f"{scheme.name} build_fused_round needs k_carry >= 1 (the fixed "
+            f"width of the straggler carry), got k_carry={k_carry}")
 
     epoch_all = jax.vmap(_make_epoch_fn(loss_grad, lr))
 
@@ -257,7 +207,7 @@ def build_fused_round(*, scheme: str, local_epochs: int, steps_per_epoch: int,
                                                   tau, tau_extra)
                 if use_codec:
                     q_new, s_new = _codec_encode(stacked, params, interpret,
-                                                 codec_block)
+                                                 codec_block, codec_bits)
                     snap = (jnp.where(_kx(ok, q_new), q_new, snap[0]),
                             jnp.where(_kx(ok, s_new), s_new, snap[1]))
                 else:
@@ -268,29 +218,27 @@ def build_fused_round(*, scheme: str, local_epochs: int, steps_per_epoch: int,
 
     def _final_arrival(chan):
         tau_f = chan["payload_bits"] / jnp.maximum(chan["final_rate"], 1e-9)
-        fits = chan["train_time"] + tau_f <= tau_max
+        fits = chan["train_time"] + scheme.final_slack(chan["tau_extra0"]) \
+            + tau_f <= tau_max
         return chan["valid"] & (~chan["final_outage"]) & fits
 
-    def _round_sync(params, stacked, snap, has_snap, arrived, chan):
-        """opt/discard aggregation: masked mean over finals (+ rescues)."""
-        if scheme == "opt" and use_codec:
-            snap_tree = _codec_decode(snap[0], snap[1], stacked, params,
-                                      interpret)
-        else:
-            snap_tree = snap
-        return _sync_aggregate(scheme, params, stacked, snap_tree,
-                               has_snap, arrived)
+    def _round_sync(params, stacked, snap, has_snap, arrived):
+        """Scheme aggregation: masked mean over finals (+ rescues)."""
+        if scheme.uses_probes and use_codec:
+            snap = _codec_decode(snap[0], snap[1], stacked, params,
+                                 interpret)
+        return scheme.aggregate(params, stacked, snap, has_snap, arrived)
 
-    if scheme in ("opt", "discard"):
+    if not scheme.carries_delayed:
 
         def round_fn(params, xs, ys, chan):
             stacked, snap, has_snap, nsent = _train_and_probe(
                 params, xs, ys, chan)
             arrived = _final_arrival(chan)
             new_params, rescued = _round_sync(params, stacked, snap,
-                                              has_snap, arrived, chan)
-            delayed = jnp.zeros_like(arrived)
-            dropped = chan["valid"] & ~arrived & ~rescued
+                                              has_snap, arrived)
+            delayed = scheme.delayed_out(chan["valid"], arrived)
+            dropped = chan["valid"] & ~arrived & ~rescued & ~delayed
             return new_params, RoundStats(arrived, rescued, delayed,
                                           dropped, nsent)
 
@@ -298,24 +246,24 @@ def build_fused_round(*, scheme: str, local_epochs: int, steps_per_epoch: int,
         # copying the global model every dispatch
         return jax.jit(round_fn, donate_argnums=(0,))
 
-    # -- async: timely finals at weight 1, prior-round stragglers at
-    #    α(s+1)^(−a); a round with only stragglers falls back to the
-    #    sequential FedAsync server merge (never a full replace) ------------
+    # -- staleness-carrying schemes (async): the straggler stack/mask ride
+    #    the round signature and the scheme's aggregate merges them --------
     aw = float(async_weight)
 
     def round_fn(params, delayed_stack, delayed_mask, xs, ys, chan):
         k = chan["valid"].shape[0]
         if k > k_carry:
             raise ValueError(
-                f"async round got K={k} stacked users but the straggler "
-                f"carry is only k_carry={k_carry} wide; build_fused_round "
-                f"needs k_carry >= the padded user bucket K (pass "
-                f"k_carry=k_select as HSFLSimulation does)")
+                f"{scheme.name} round got K={k} stacked users but the "
+                f"straggler carry is only k_carry={k_carry} wide; "
+                f"build_fused_round needs k_carry >= the padded user bucket "
+                f"K (pass k_carry=k_select as HSFLSimulation does)")
         stacked, _, _, nsent = _train_and_probe(params, xs, ys, chan)
         arrived = _final_arrival(chan)
-        delayed_new = chan["valid"] & ~arrived
-        new_params = _async_merge(params, stacked, delayed_stack,
-                                  delayed_mask, arrived, aw, k_carry)
+        delayed_new = scheme.delayed_out(chan["valid"], arrived)
+        new_params, rescued = scheme.aggregate(
+            params, stacked, None, None, arrived, delayed=delayed_stack,
+            delayed_mask=delayed_mask, async_weight=aw, k_carry=k_carry)
 
         # next-round carry, padded to the fixed k_carry width
         pad = k_carry - k
@@ -323,8 +271,7 @@ def build_fused_round(*, scheme: str, local_epochs: int, steps_per_epoch: int,
             lambda s: jnp.pad(s, ((0, pad),) + ((0, 0),) * (s.ndim - 1)),
             stacked)
         carry_mask = jnp.pad(delayed_new, (0, pad))
-        rescued = jnp.zeros_like(arrived)
-        dropped = jnp.zeros_like(arrived)
+        dropped = chan["valid"] & ~arrived & ~rescued & ~delayed_new
         return (new_params, carry_stack, carry_mask,
                 RoundStats(arrived, rescued, delayed_new, dropped, nsent))
 
@@ -362,24 +309,7 @@ class DeviceRoundMetrics(NamedTuple):
     test_acc: jnp.ndarray    # float32
 
 
-def probe_schedule_mask(e_t: int, local_epochs: int, b) -> jnp.ndarray:
-    """``transmission.scheduled_epochs`` membership with a *traced* budget.
-
-    The host schedule is {k·period : 1 ≤ k ≤ b−1, k·period < e} with
-    period = max(1, round(e/b)); that set is exactly the e_t with
-    e_t ≡ 0 (mod period), e_t < e and e_t ≤ (b−1)·period, which this
-    evaluates branch-free so ``b`` can live on a vmapped config axis.
-    ``tests/test_sweep.py`` pins the two over an (e, b) grid.
-    """
-    bf = jnp.asarray(b, jnp.float32)
-    period = jnp.clip(jnp.round(local_epochs / jnp.maximum(bf, 1.0)),
-                      1.0, float(local_epochs))
-    et = jnp.asarray(e_t, jnp.float32)
-    return ((jnp.mod(et, period) == 0) & (et < local_epochs)
-            & (et <= (bf - 1.0) * period))
-
-
-def build_device_round(*, scheme: str, local_epochs: int,
+def build_device_round(*, scheme: Any, local_epochs: int,
                        steps_per_epoch: int, batch_size: int, lr: float,
                        k_select: int, channel: ChannelParams,
                        model_bytes: float, ue_model_fraction: float,
@@ -390,7 +320,7 @@ def build_device_round(*, scheme: str, local_epochs: int,
                        async_alpha: float = 0.4, async_a: float = 0.5,
                        max_sl: int | None = None,
                        act_bytes_per_sample: float = 3136.0,
-                       codec_block: int = BLOCK,
+                       codec_block: int = BLOCK, codec_bits: int = 8,
                        forward: Any = None) -> Callable:
     """One HSFL round with the *entire* control plane on-device.
 
@@ -403,8 +333,8 @@ def build_device_round(*, scheme: str, local_epochs: int,
     simulations chain under ``lax.scan`` and whole sweeps under ``vmap``
     (core/sweep.py) with zero host round trips.
 
-    ``use_codec`` (opt scheme) stores snapshots as the int8 delta-codec
-    state (``kernels/delta_codec``): scheduled probes quantize
+    ``use_codec`` (probing schemes) stores snapshots as the int8/int4
+    delta-codec state (``kernels/delta_codec``): scheduled probes quantize
     params − round-start-global through the Pallas kernel into a
     ``(K, M, BLOCK)`` int8 + per-block-scale carry that rides the epoch
     ``lax.scan``, and rescues dequantize at aggregation, so a rescued
@@ -439,8 +369,7 @@ def build_device_round(*, scheme: str, local_epochs: int,
     (params, fleet, stragglers) at its own jit boundary.
     """
     loss_grad, fwd_eval = resolve_train_step(forward, interpret)
-    if scheme not in ("opt", "discard", "async"):
-        raise ValueError(scheme)
+    scheme = get_scheme(scheme)
     epoch_all = jax.vmap(_make_epoch_fn(loss_grad, lr))
     aw = float(async_alpha) * 2.0 ** (-float(async_a))
     # the codec (or a manual compress_ratio) shrinks every model payload on
@@ -448,7 +377,7 @@ def build_device_round(*, scheme: str, local_epochs: int,
     # (eqs. 9–13), the eq. 14/15 τ budgets and the byte metrics alike
     eff_model_bytes = model_bytes * compress_ratio
     eff_ue_bytes = eff_model_bytes * ue_model_fraction
-    use_codec = bool(use_codec) and scheme == "opt"
+    use_codec = bool(use_codec) and scheme.supports_codec
     K = k_select
     p = channel
 
@@ -461,7 +390,7 @@ def build_device_round(*, scheme: str, local_epochs: int,
         # -- schedule (Alg. 1 l. 3-5): fresh fading, greedy selection -------
         fleet = fleet_resample_fading(fleet, p)
         rates0 = fleet_rates(fleet, p, bw)
-        sel, mode_sl, valid, n_taken, tt_fl, tt_sl = select_users_jax(
+        sel, mode_sl, valid, n_taken, tt_fl, tt_sl = scheme.selection_policy(
             rates0, sim["flops"], sim["samples"], b=b, tau_max=tau_max,
             k_select=K, model_bytes=eff_model_bytes,
             ue_model_bytes=eff_ue_bytes,
@@ -471,7 +400,7 @@ def build_device_round(*, scheme: str, local_epochs: int,
         train_time = jnp.where(valid, train_time, 1e9)
         payload_bits = jnp.where(mode_sl, eff_ue_bytes, eff_model_bytes) \
             * 8.0                                              # eq. (15) m_i
-        tau_extra = jnp.maximum(b - 1.0, 0.0) * payload_bits \
+        tau_extra0 = jnp.maximum(b - 1.0, 0.0) * payload_bits \
             / jnp.maximum(rates0[sel], 1e-9)                   # eq. (14)
 
         # -- local training: epochs in lockstep, channel drifts per epoch.
@@ -503,11 +432,9 @@ def build_device_round(*, scheme: str, local_epochs: int,
             ys = sim["client_y"][sel[:, None], idx].reshape(
                 (K, steps_per_epoch, batch_size))
             stacked = epoch_all(stacked, xs, ys)
-            if scheme == "opt":
-                if override is not None:
-                    sched = jnp.any(e_t == override)
-                else:
-                    sched = probe_schedule_mask(e_t, local_epochs, b)
+            if scheme.uses_probes:
+                sched = scheme.probe_schedule(e_t, local_epochs, b,
+                                              override=override)
                 tau = payload_bits / jnp.maximum(rate_e, 1e-9)   # eq. (15)
                 ok, tau_extra = snapshot_decision(valid & sched, out_e,
                                                   tau, tau_extra)
@@ -516,7 +443,7 @@ def build_device_round(*, scheme: str, local_epochs: int,
                     # epoch scan carries ~4x fewer snapshot bytes and the
                     # rescue later decodes with true quantization noise
                     q_new, s_new = _codec_encode(stacked, params, interpret,
-                                                 codec_block)
+                                                 codec_block, codec_bits)
                     snap = (jnp.where(_kx(ok, q_new), q_new, snap[0]),
                             jnp.where(_kx(ok, s_new), s_new, snap[1]))
                 else:
@@ -528,34 +455,31 @@ def build_device_round(*, scheme: str, local_epochs: int,
         snap0 = (_codec_zero_state(stacked, codec_block) if use_codec
                  else stacked)
         carry_e = (fleet, stacked, snap0, jnp.zeros((K,), bool),
-                   jnp.zeros((K,), jnp.int32), tau_extra)
+                   jnp.zeros((K,), jnp.int32), tau_extra0)
         carry_e, _ = jax.lax.scan(epoch_body, carry_e,
                                   jnp.arange(1, local_epochs + 1))
-        fleet, stacked, snap, has_snap, nsent, tau_extra = carry_e
+        fleet, stacked, snap, has_snap, nsent, _ = carry_e
 
         # -- final upload (Alg. 2 l. 14): no extra move -----------------------
         rate_f = fleet_rates(fleet, p, bw)[sel]
         fleet, bad_f = fleet_outage_step(fleet, p)
         tau_f = payload_bits / jnp.maximum(rate_f, 1e-9)
-        arrived = valid & (~bad_f[sel]) & (train_time + tau_f <= tau_max)
+        fits = train_time + scheme.final_slack(tau_extra0) + tau_f <= tau_max
+        arrived = valid & (~bad_f[sel]) & fits
 
-        # -- aggregation ------------------------------------------------------
-        if scheme == "async":
-            new_params = _async_merge(params, stacked, carry.delayed,
-                                      carry.delayed_mask, arrived, aw, K)
-            delayed_new = valid & ~arrived
-            rescued = jnp.zeros_like(arrived)
-            dropped = jnp.zeros_like(arrived)
+        # -- aggregation (registry dispatch — no scheme branches) -------------
+        if use_codec:
+            snap = _codec_decode(snap[0], snap[1], stacked, params,
+                                 interpret)
+        new_params, rescued = scheme.aggregate(
+            params, stacked, snap, has_snap, arrived, delayed=carry.delayed,
+            delayed_mask=carry.delayed_mask, async_weight=aw, k_carry=K)
+        delayed_new = scheme.delayed_out(valid, arrived)
+        dropped = valid & ~arrived & ~rescued & ~delayed_new
+        if scheme.carries_delayed:
             new_carry = DeviceSimCarry(new_params, fleet, stacked,
                                        delayed_new)
         else:
-            if use_codec:
-                snap = _codec_decode(snap[0], snap[1], stacked, params,
-                                     interpret)
-            new_params, rescued = _sync_aggregate(
-                scheme, params, stacked, snap, has_snap, arrived)
-            delayed_new = jnp.zeros_like(arrived)
-            dropped = valid & ~arrived & ~rescued
             new_carry = DeviceSimCarry(new_params, fleet, carry.delayed,
                                        carry.delayed_mask)
 

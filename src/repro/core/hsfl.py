@@ -37,12 +37,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import latency as lat
-from repro.core.aggregation import aggregate_round
 from repro.core.channel import ChannelParams, UAVFleet
 from repro.core.fused_round import build_fused_round
 from repro.core.metrics import RoundLog, SimLog
-from repro.core.selection import schedule_users
-from repro.core.transmission import OppTransmitter, scheduled_epochs
+from repro.core.schemes import get_scheme
+from repro.core.transmission import OppTransmitter
 from repro.data.synthetic import Dataset, make_digits
 from repro.data.partition import partition
 from repro.kernels.delta_codec.ops import codec_ratio, decode_delta, encode_delta
@@ -81,6 +80,10 @@ class HSFLConfig:
     # higher wire-byte overhead (the eq. 15 frontier of arXiv:2405.00681).
     use_delta_codec: bool = False
     codec_block: int = 512
+    # delta-codec bit depth: 8 (int8, ~0.252x) or 4 (int4-in-int8 storage,
+    # ~0.127x wire bytes) — the sweepable rate point of the eq. 15
+    # overhead-vs-delay frontier; 4-bit rescues carry ~16x the noise
+    codec_bits: int = 8
     use_fused_round: bool = True   # False -> host OppTransmitter reference
     # CNN hot-path policy (kernels/fused_cnn.ForwardPolicy), device engines
     # only — the host reference loop always runs the autodiff step:
@@ -113,7 +116,7 @@ def model_compress_ratio(cfg: HSFLConfig) -> float:
     shapes = jax.eval_shape(lambda: cnn_mod.init_cnn(jax.random.PRNGKey(0)))
     n = sum(int(np.prod(l.shape))
             for l in jax.tree_util.tree_leaves(shapes))
-    return codec_ratio(n, cfg.codec_block)
+    return codec_ratio(n, cfg.codec_block, cfg.codec_bits)
 
 
 def _heterogeneous_devices(n: int, rng: np.random.Generator,
@@ -186,6 +189,9 @@ class HSFLSimulation:
 
     def __init__(self, cfg: HSFLConfig):
         self.cfg = cfg
+        # the registered transmission policy: probe schedule, selection,
+        # final deadline and aggregation all dispatch through it
+        self.scheme = get_scheme(cfg.scheme)
         self.rng = np.random.default_rng(cfg.seed)
         full = make_digits(cfg.n_train + cfg.n_test, seed=cfg.seed)
         self.test = Dataset(full.x[cfg.n_train:], full.y[cfg.n_train:])
@@ -220,13 +226,10 @@ class HSFLSimulation:
 
     def _static_schedule(self) -> tuple:
         """The probe schedule is static per config (Alg. 2 line 12 or the
-        Sec. III-B manual override), active only for OPT with b > 1."""
+        Sec. III-B manual override) — the scheme's decision."""
         cfg = self.cfg
-        if cfg.scheme != "opt" or cfg.b <= 1:
-            return ()
-        sched = (cfg.schedule_override if cfg.schedule_override
-                 else scheduled_epochs(cfg.local_epochs, cfg.b))
-        return tuple(e for e in sched if 1 <= e <= cfg.local_epochs)
+        return self.scheme.static_schedule(cfg.local_epochs, cfg.b,
+                                           cfg.schedule_override)
 
     # -- jitted kernels ----------------------------------------------------
     def _build_jits(self):
@@ -257,12 +260,13 @@ class HSFLSimulation:
         self._eval = jax.jit(eval_fn)
         from repro.kernels.fused_cnn.ops import ForwardPolicy
         self._fused = build_fused_round(
-            scheme=cfg.scheme, local_epochs=cfg.local_epochs,
+            scheme=self.scheme, local_epochs=cfg.local_epochs,
             steps_per_epoch=cfg.steps_per_epoch, lr=lr, tau_max=cfg.tau_max,
             probe_epochs=self._probe_epochs,
             async_weight=cfg.async_alpha * 2.0 ** (-cfg.async_a),
             use_codec=cfg.use_delta_codec, interpret=self._interpret,
             k_carry=cfg.k_select, codec_block=cfg.codec_block,
+            codec_bits=cfg.codec_bits,
             forward=ForwardPolicy(kernel=cfg.kernel,
                                   precision=cfg.precision).validate(),
             stacked_sharding=self._stack_shard)
@@ -282,7 +286,7 @@ class HSFLSimulation:
         # upload) must see the compressed payload — byte parity with the
         # device engine's eff_model_bytes (it used to budget the
         # uncompressed model and under-select)
-        sched = schedule_users(
+        sched = self.scheme.selection_policy_host(
             rates0, self.devices, self.workloads,
             cfg.model_bytes * self.compress_ratio,
             ue_bytes * self.compress_ratio, cfg.b, cfg.tau_max, cfg.k_select)
@@ -361,13 +365,12 @@ class HSFLSimulation:
 
         if not sched:
             # nothing selected: stragglers (async) still merge on the server
-            if cfg.scheme == "async" and carry_delayed is not None:
+            if self.scheme.carries_delayed and carry_delayed is not None:
                 stack, mask = carry_delayed
                 delayed = [(jax.tree_util.tree_map(lambda a: a[i], stack), 1)
                            for i in range(mask.shape[0]) if bool(mask[i])]
-                self.params = aggregate_round([], delayed, self.params,
-                                              cfg.scheme, cfg.async_alpha,
-                                              cfg.async_a)
+                self.params = self.scheme.aggregate_host(
+                    [], delayed, self.params, cfg.async_alpha, cfg.async_a)
             return log, None
 
         K = _k_bucket(len(sched), cfg.k_select)
@@ -393,7 +396,7 @@ class HSFLSimulation:
             "valid": jnp.asarray(valid),
         }
 
-        if cfg.scheme == "async":
+        if self.scheme.carries_delayed:
             stack, mask = (carry_delayed if carry_delayed is not None
                            else self._empty_carry())
             self.params, c_stack, c_mask, stats = self._fused(
@@ -431,8 +434,8 @@ class HSFLSimulation:
 
         log = RoundLog(round=t, selected=len(sched))
         if not sched:
-            self.params = aggregate_round([], carry_delayed, self.params,
-                                          cfg.scheme, cfg.async_alpha, cfg.async_a)
+            self.params = self.scheme.aggregate_host(
+                [], carry_delayed, self.params, cfg.async_alpha, cfg.async_a)
             return log, []
         txs: Dict[int, OppTransmitter] = {}
         for u in sched:
@@ -458,7 +461,8 @@ class HSFLSimulation:
             # int8 delta payload, so the stored snapshot carries codec noise
             payload = encode_delta(user_tree(i), self.params,
                                    interpret=self._interpret,
-                                   block=cfg.codec_block)
+                                   block=cfg.codec_block,
+                                   bits=cfg.codec_bits)
             return decode_delta(payload, self.params,
                                 interpret=self._interpret)
 
@@ -474,7 +478,7 @@ class HSFLSimulation:
             xs = jnp.stack([b[0] for b in eb])
             ys = jnp.stack([b[1] for b in eb])
             stacked = self._epoch_all(stacked, xs, ys)
-            if cfg.scheme == "opt" and cfg.b > 1:
+            if self._probe_epochs:
                 for i, u in enumerate(sched):
                     if e_t in txs[u.index].schedule:
                         txs[u.index].maybe_transmit(
@@ -492,15 +496,19 @@ class HSFLSimulation:
             tr_time = (lat.train_time_fl(self.devices[u.index], self.workloads[u.index])
                        if u.mode == "FL" else
                        lat.train_time_sl(self.devices[u.index], self.workloads[u.index]))
+            # the scheme's deadline: extra seconds charged against τ_max
+            # (0 for the paper schemes; eq. 14 allowance for 'deadline',
+            # −inf — the server waits — for 'sync')
+            slack = float(self.scheme.final_slack(tx.tau_extra0))
             ok = tx.final_upload(float(rates[u.index]), bool(outages[u.index]),
-                                 tr_time, cfg.tau_max)
+                                 tr_time + slack, cfg.tau_max)
             if ok:
                 arrived.append(user_tree(i))
                 log.arrived_final += 1
-            elif cfg.scheme == "opt" and tx.snapshot is not None:
+            elif self.scheme.uses_probes and tx.snapshot is not None:
                 arrived.append(tx.snapshot)     # the paper's rescue
                 log.used_snapshot += 1
-            elif cfg.scheme == "async":
+            elif self.scheme.carries_delayed:
                 new_delayed.append((user_tree(i), 1))      # max delay 1
                 log.delayed += 1
             else:
@@ -511,8 +519,8 @@ class HSFLSimulation:
                 log.bytes_sent += self.workloads[u.index].act_bytes_per_sample \
                     * self.workloads[u.index].samples
 
-        self.params = aggregate_round(
-            arrived, carry_delayed, self.params, cfg.scheme,
+        self.params = self.scheme.aggregate_host(
+            arrived, carry_delayed, self.params,
             cfg.async_alpha, cfg.async_a)
         return log, new_delayed
 
@@ -533,4 +541,15 @@ class HSFLSimulation:
 
 
 def run_hsfl(cfg: HSFLConfig, verbose: bool = False) -> SimLog:
+    """Deprecated entry point — use ``repro.api.Experiment`` instead::
+
+        Experiment(cfg).run(engine="fused")   # or engine="loop" with
+                                              # cfg.use_fused_round=False
+
+    Kept as a thin shim (seeded-equivalent: the facade constructs the same
+    ``HSFLSimulation``)."""
+    import warnings
+    warnings.warn("run_hsfl is deprecated; use repro.api.Experiment(cfg)"
+                  ".run(engine='fused'|'loop')", DeprecationWarning,
+                  stacklevel=2)
     return HSFLSimulation(cfg).run(verbose=verbose)

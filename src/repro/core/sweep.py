@@ -39,6 +39,7 @@ import numpy as np
 
 from repro.core.hsfl import HSFLConfig, build_sim_arrays
 from repro.core.metrics import RoundLog, SimLog
+from repro.core.schemes import Scheme, get_scheme
 
 # Fields of HSFLConfig a sweep may vary *per traced config axis* (the inner
 # vmap).  Everything else that varies must be a sim axis (data-level: seed,
@@ -47,13 +48,16 @@ CFG_AXES = ("b", "tau_max", "bandwidth_ratio")
 
 # HSFLConfig fields a scheme entry may pin as *group statics*: they fork a
 # separate compile of the round program instead of riding a traced axis.
-# ``use_delta_codec`` is the flagship — codec × scheme × budget grids are
+# The scheme *identity itself* is the primary group static (each registered
+# ``schemes.Scheme`` forks its own program compile).  ``use_delta_codec``
+# is the flagship field pin — codec × scheme × budget grids are
 # first-class sweeps (``("opt", {"b": 2.0, "use_delta_codec": True})``).
-# ``codec_block`` sweeps the quantization group width (the eq. 15
-# overhead-vs-delay frontier), and ``kernel``/``precision`` fork the CNN
-# hot-path policy (kernels/fused_cnn): xla-vs-pallas, f32-vs-bf16 groups
-# can sit side by side in one spec.
-GROUP_STATICS = ("use_delta_codec", "codec_block", "kernel", "precision")
+# ``codec_block``/``codec_bits`` sweep the quantization group width and bit
+# depth (the eq. 15 overhead-vs-delay frontier), and ``kernel``/
+# ``precision`` fork the CNN hot-path policy (kernels/fused_cnn):
+# xla-vs-pallas, f32-vs-bf16 groups can sit side by side in one spec.
+GROUP_STATICS = ("use_delta_codec", "codec_block", "codec_bits", "kernel",
+                 "precision")
 
 # Poison value ``compile_spec`` writes into ``group.base.b`` when b rides
 # the traced config axis: the real values live in ``group.cfgs`` and
@@ -66,9 +70,11 @@ B_SWEPT = -1
 class SweepSpec:
     """A declarative experiment grid (one Fig. 3 panel, typically).
 
-    ``schemes`` entries are ``"opt"`` or ``("opt", {"b": 2})`` — the dict
-    pins traced-axis values for that scheme group (Fig. 3(b) compares
-    OPT at b=2 against async/discard at b=1).  ``b``/``tau_max``/
+    ``schemes`` entries are registered scheme names (``"opt"``), ``Scheme``
+    objects carrying their pins (``get_scheme("opt").with_pins(b=2.0)``),
+    or the legacy ``("opt", {"b": 2})`` tuple form — the pins fix
+    traced-axis values for that scheme group (Fig. 3(b) compares OPT at
+    b=2 against async/discard at b=1).  ``b``/``tau_max``/
     ``bandwidth_ratio`` are swept as a product on the traced config axis;
     ``seeds`` × ``distributions`` form the (sharded) simulation axis.
     """
@@ -125,7 +131,15 @@ def compile_spec(spec: SweepSpec,
     sims = tuple(itertools.product(spec.seeds, dists))
     groups = []
     for entry in schemes:
-        scheme, pins = entry if isinstance(entry, tuple) else (entry, {})
+        # entry forms: "opt" | Scheme (pins on the object) | ("opt", {...})
+        # — get_scheme raises listing every registered name on an unknown
+        # string, BEFORE any engine code runs
+        if isinstance(entry, tuple):
+            name, tuple_pins = entry
+            scheme_obj = get_scheme(name).with_pins(**tuple_pins)
+        else:
+            scheme_obj = get_scheme(entry)
+        scheme, pins = scheme_obj.name, dict(scheme_obj.pins)
         axes = {
             "b": spec.b or (spec.base.b,),
             "tau_max": spec.tau_max or (spec.base.tau_max,),
@@ -155,10 +169,11 @@ def compile_spec(spec: SweepSpec,
                     "program, but b is swept on the traced config axis "
                     f"({b_vals}); pin b per scheme or drop the override")
             base = replace(base, b=B_SWEPT)
-        program = scheme
-        if (lower_discard and scheme == "discard"
-                and b_vals == [1.0]):
-            program = "opt"
+        # program identity is the scheme's own decision: a scheme may lower
+        # its group onto another scheme's compile where the two provably
+        # coincide (discard @ b=1 IS opt with zero probes)
+        program = (scheme_obj.lowered_program(tuple(b_vals))
+                   if lower_discard else scheme)
         groups.append(CompiledGroup(
             scheme=scheme, base=base, sims=sims, cfgs=cfgs,
             label=scheme + ("+codec" if base.use_delta_codec else ""),
@@ -212,6 +227,7 @@ def _group_build_kwargs(group: CompiledGroup) -> Dict[str, Any]:
         ue_model_fraction=base.ue_model_fraction,
         compress_ratio=model_compress_ratio(base),
         use_codec=base.use_delta_codec, codec_block=base.codec_block,
+        codec_bits=base.codec_bits,
         # Pallas kernels (codec + fused CNN) run in interpret mode off-TPU
         interpret=jax.default_backend() != "tpu",
         forward=ForwardPolicy(kernel=base.kernel,
@@ -338,9 +354,9 @@ class SweepResult:
         return sum(len(g.sims) * len(g.cfgs) for g in self.groups)
 
 
-def run_sweep(spec: SweepSpec, mesh: Any = "auto", verbose: bool = False,
-              timeit: bool = False, lower_discard: bool = True,
-              overlap_compile: bool = True) -> SweepResult:
+def _run_sweep(spec: SweepSpec, mesh: Any = "auto", verbose: bool = False,
+               timeit: bool = False, lower_discard: bool = True,
+               overlap_compile: bool = True) -> SweepResult:
     """Execute a SweepSpec: one compiled program per *distinct* group
     program.  Groups are keyed by ``_program_key`` — a b=1 discard group
     reuses the opt program's jitted fn (``lower_discard``; discard is
@@ -495,12 +511,36 @@ def run_sweep(spec: SweepSpec, mesh: Any = "auto", verbose: bool = False,
                        compile_overlap_s=round(overlap_s, 3))
 
 
+def run_sweep(spec: SweepSpec, mesh: Any = "auto", verbose: bool = False,
+              timeit: bool = False, lower_discard: bool = True,
+              overlap_compile: bool = True) -> SweepResult:
+    """Deprecated entry point — use ``repro.api.Experiment`` instead::
+
+        Experiment.from_spec(spec).run(engine="sweep", mesh=mesh)
+
+    Kept as a thin shim over the same engine (seeded-equivalent)."""
+    import warnings
+    warnings.warn("run_sweep is deprecated; use repro.api.Experiment"
+                  ".from_spec(spec).run(engine='sweep')",
+                  DeprecationWarning, stacklevel=2)
+    return _run_sweep(spec, mesh=mesh, verbose=verbose, timeit=timeit,
+                      lower_discard=lower_discard,
+                      overlap_compile=overlap_compile)
+
+
 def run_hsfl_on_device(cfg: HSFLConfig, mesh: Any = None) -> SimLog:
-    """Single-simulation convenience wrapper over the sweep engine —
-    ``run_hsfl`` with the whole control plane on-device (its own RNG
-    stream; see module docstring)."""
+    """Deprecated entry point — use ``repro.api.Experiment`` instead::
+
+        Experiment(cfg).run(engine="sweep", mesh=mesh).groups[0].sim_log(0, 0)
+
+    Kept as a thin shim: ``run_hsfl`` with the whole control plane
+    on-device (its own RNG stream; see module docstring)."""
+    import warnings
+    warnings.warn("run_hsfl_on_device is deprecated; use repro.api."
+                  "Experiment(cfg).run(engine='sweep')",
+                  DeprecationWarning, stacklevel=2)
     spec = SweepSpec(base=cfg, seeds=(cfg.seed,))
-    res = run_sweep(spec, mesh=mesh)
+    res = _run_sweep(spec, mesh=mesh)
     return res.groups[0].sim_log(0, 0)
 
 

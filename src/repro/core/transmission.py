@@ -54,6 +54,7 @@ class OppTransmitter:
     schedule_override: tuple = ()   # manual schedule (Sec. III-B: "can be
                                     # manually set by the system")
     tau_extra: float = field(init=False)
+    tau_extra0: float = field(init=False)   # initial eq. 14 allowance
     snapshot: Optional[Any] = field(init=False, default=None)
     snapshot_epoch: int = field(init=False, default=-1)
     events: List[TransmissionEvent] = field(init=False, default_factory=list)
@@ -62,6 +63,9 @@ class OppTransmitter:
     def __post_init__(self):
         self.tau_extra = lat.extra_allowance(self.b, self.payload_bytes,
                                              self.rate0_bps)
+        # the *budgeted* allowance, kept immutable: deadline-aware schemes
+        # charge it against τ_max at the final upload (schemes.final_slack)
+        self.tau_extra0 = self.tau_extra
         # cached once: maybe_transmit is called every scheduled epoch and
         # recomputing the schedule there was pure per-call overhead
         self._schedule = (tuple(self.schedule_override) if self.schedule_override

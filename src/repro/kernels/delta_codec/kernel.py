@@ -1,12 +1,16 @@
-"""int8 delta codec Pallas TPU kernel — blockwise absmax quantization.
+"""int8/int4 delta codec Pallas TPU kernel — blockwise absmax quantization.
 
 Paper-adjacent hot spot: the OPT scheme transmits model snapshots (m_i in
 eqs. 14–15); quantizing the *delta* vs the last-distributed global model to
 int8 shrinks the payload ~3.6x (int8 + f32 scale per 512 lanes), which
 directly scales down τ^{e_t} and makes more opportunistic windows affordable.
+``bits=4`` halves the wire bytes again (values clip to ±7; storage stays
+int8 — the byte accounting in ``ops.codec_ratio``/``payload_bytes`` counts
+the packed 4-bit width) at ~16x the quantization noise: the sweepable rate
+point of the eq. 15 overhead-vs-delay frontier (arXiv:2405.00681).
 
 Grid: (num_tiles,) over rows of a (M, block) view; each tile quantizes
-(tile_rows, block) in VMEM: absmax per row -> scale -> round/clip to int8.
+(tile_rows, block) in VMEM: absmax per row -> scale -> round/clip.
 """
 from __future__ import annotations
 
@@ -18,6 +22,7 @@ from jax.experimental import pallas as pl
 
 BLOCK = 512          # default lanes per quantization group
 TILE_ROWS = 256      # rows per grid step
+BITS = (4, 8)        # supported quantization bit depths
 
 
 def validate_block(block: int) -> int:
@@ -31,11 +36,19 @@ def validate_block(block: int) -> int:
     return block
 
 
-def _quant_kernel(x_ref, q_ref, s_ref):
+def validate_bits(bits: int) -> int:
+    """The sweepable ``HSFLConfig.codec_bits`` must be a supported depth."""
+    if bits not in BITS:
+        raise ValueError(f"codec bit depth must be one of {BITS}, "
+                         f"got {bits}")
+    return bits
+
+
+def _quant_kernel(x_ref, q_ref, s_ref, *, qmax):
     x = x_ref[...].astype(jnp.float32)
-    scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0
+    scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / qmax
     scale = jnp.maximum(scale, 1e-12)
-    q = jnp.clip(jnp.round(x / scale), -127, 127)
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax)
     q_ref[...] = q.astype(jnp.int8)
     s_ref[...] = scale
 
@@ -44,17 +57,20 @@ def _dequant_kernel(q_ref, s_ref, x_ref, *, dtype):
     x_ref[...] = (q_ref[...].astype(jnp.float32) * s_ref[...]).astype(dtype)
 
 
-def quantize_blocks(x: jnp.ndarray, interpret: bool = False):
+def quantize_blocks(x: jnp.ndarray, interpret: bool = False, bits: int = 8):
     """x: (M, block) -> (q int8 (M, block), scales f32 (M, 1)).
 
     The group width is the trailing dimension of ``x`` (``BLOCK`` by
-    default; any ``validate_block``-accepted width sweeps)."""
+    default; any ``validate_block``-accepted width sweeps).  ``bits``
+    selects the quantization depth: 8 clips to ±127, 4 to ±7 (stored in
+    the same int8 lanes; the wire-byte accounting lives in ``ops``)."""
     M, B = x.shape
     validate_block(B)
+    qmax = float(2 ** (validate_bits(bits) - 1) - 1)
     rows = min(TILE_ROWS, M)
     assert M % rows == 0
     return pl.pallas_call(
-        _quant_kernel,
+        functools.partial(_quant_kernel, qmax=qmax),
         grid=(M // rows,),
         in_specs=[pl.BlockSpec((rows, B), lambda i: (i, 0))],
         out_specs=[pl.BlockSpec((rows, B), lambda i: (i, 0)),

@@ -26,10 +26,11 @@ import jax.numpy as jnp
 from repro.kernels.delta_codec.kernel import (BLOCK, TILE_ROWS,
                                               dequantize_blocks,
                                               quantize_blocks,
+                                              validate_bits,
                                               validate_block)
 from repro.models import module as m
 
-COMPRESS_RATIO = (1.0 + 4.0 / BLOCK) / 4.0     # ≈ 0.2520 of f32 bytes
+COMPRESS_RATIO = (1.0 + 4.0 / BLOCK) / 4.0     # ≈ 0.2520 of f32 bytes (int8)
 
 
 def _padded_rows(n: int, block: int = BLOCK) -> int:
@@ -90,13 +91,14 @@ def stacked_unflatten(flat: jnp.ndarray, like_stacked: Any) -> Any:
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
-@partial(jax.jit, static_argnames=("interpret", "block"))
+@partial(jax.jit, static_argnames=("interpret", "block", "bits"))
 def encode_delta(params: Any, base: Any, interpret: bool = False,
-                 block: int = BLOCK) -> Dict[str, jnp.ndarray]:
+                 block: int = BLOCK, bits: int = 8) -> Dict[str, jnp.ndarray]:
     delta = m.tree_sub(params, base)
     flat, _, n = _flatten(delta, block)
-    q, s = quantize_blocks(flat, interpret=interpret)
-    return {"q": q, "scales": s, "n": jnp.asarray(n, jnp.int32)}
+    q, s = quantize_blocks(flat, interpret=interpret, bits=bits)
+    return {"q": q, "scales": s, "n": jnp.asarray(n, jnp.int32),
+            "bits": jnp.asarray(bits, jnp.int32)}
 
 
 @partial(jax.jit, static_argnames=("interpret",))
@@ -109,22 +111,27 @@ def decode_delta(payload: Dict[str, jnp.ndarray], base: Any,
 
 
 def payload_bytes(payload: Dict[str, jnp.ndarray]) -> int:
-    """True wire bytes: int8 lanes + f32 scale for the real blocks only
-    (row padding added for the kernel tiling is not transmitted).  The
-    group width is read off the payload itself."""
+    """True wire bytes: quantized lanes (packed to the codec bit depth) +
+    f32 scale for the real blocks only (row padding added for the kernel
+    tiling is not transmitted).  The group width and bit depth are read
+    off the payload itself (pre-``bits`` payloads count as int8)."""
     block = payload["q"].shape[-1]
+    bits = int(payload.get("bits", 8))
     blocks = math.ceil(int(payload["n"]) / block)
-    return blocks * block + blocks * 4
+    return blocks * block * bits // 8 + blocks * 4
 
 
-def codec_ratio(n: int, block: int = BLOCK) -> float:
+def codec_ratio(n: int, block: int = BLOCK, bits: int = 8) -> float:
     """Exact compressed/uncompressed byte ratio for an n-value payload:
-    ceil(n/block) int8 blocks + one f32 scale each, over n float32 bytes.
+    ceil(n/block) quantized blocks + one f32 scale each, over n float32
+    bytes.
 
     ``block`` is the sweepable quantization group width
     (``HSFLConfig.codec_block``): smaller groups track the delta
     distribution tighter (less quantization noise) at a higher scale
-    overhead — the eq. 15 overhead-vs-delay frontier of
-    arXiv:2405.00681."""
+    overhead.  ``bits`` (``HSFLConfig.codec_bits``) is the sweepable rate
+    point: int4 halves the lane bytes again at ~16x the noise — together
+    the eq. 15 overhead-vs-delay frontier of arXiv:2405.00681."""
     blocks = math.ceil(n / validate_block(block))
-    return (blocks * block + blocks * 4) / (4.0 * n)
+    return (blocks * block * validate_bits(bits) / 8.0 + blocks * 4) \
+        / (4.0 * n)

@@ -4,12 +4,13 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 
-def quantize_ref(x: jnp.ndarray):
+def quantize_ref(x: jnp.ndarray, bits: int = 8):
     """x: (M, block) float -> (q int8 (M, block), scale f32 (M, 1))."""
+    qmax = float(2 ** (bits - 1) - 1)
     xf = x.astype(jnp.float32)
-    scale = jnp.max(jnp.abs(xf), axis=-1, keepdims=True) / 127.0
+    scale = jnp.max(jnp.abs(xf), axis=-1, keepdims=True) / qmax
     scale = jnp.maximum(scale, 1e-12)
-    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    q = jnp.clip(jnp.round(xf / scale), -qmax, qmax).astype(jnp.int8)
     return q, scale
 
 

@@ -48,7 +48,9 @@ def max_leaf_diff(a, b):
                                jax.tree_util.tree_leaves(b)))
 
 
-@pytest.mark.parametrize("scheme,b", [("opt", 2), ("discard", 1), ("async", 1)])
+@pytest.mark.parametrize("scheme,b", [("opt", 2), ("discard", 1),
+                                      ("async", 1), ("sync", 1),
+                                      ("deadline", 2)])
 def test_fused_matches_host_trajectory(scheme, b):
     host, p_host = run_traj(small_cfg(scheme=scheme, b=b,
                                       use_fused_round=False))
@@ -76,6 +78,21 @@ def test_fused_matches_host_with_delta_codec():
     assert host == fused
     # int8 rounding boundaries amplify the im2col backward drift
     assert max_leaf_diff(p_host, p_fused) < 3e-5
+
+
+def test_fused_matches_host_with_int4_codec():
+    """codec_bits=4: the host and fused engines must still agree on the
+    count/byte trajectories (both budget the same int4 payload bytes) and
+    on params within the larger int4 rescue-noise envelope (~16x int8)."""
+    cfg = dict(scheme="opt", b=2, rounds=4, seed=1, use_delta_codec=True,
+               codec_bits=4)
+    host, p_host = run_traj(small_cfg(use_fused_round=False, **cfg))
+    fused, p_fused = run_traj(small_cfg(use_fused_round=True, **cfg))
+    assert host == fused
+    assert max_leaf_diff(p_host, p_fused) < 5e-4
+    # the derived payload knob is the int4 ratio (~0.127 of f32)
+    from repro.core.hsfl import model_compress_ratio
+    assert 0.12 < model_compress_ratio(small_cfg(**cfg)) < 0.14
 
 
 def test_host_selection_budgets_compressed_bytes():

@@ -100,6 +100,52 @@ def test_codec_roundtrip_error_bound():
     assert float(jnp.max(jnp.abs(xd - x))) <= float(jnp.max(s)) / 2 + 1e-7
 
 
+@pytest.mark.parametrize("bits", [4, 8])
+def test_codec_int4_matches_ref_and_bounds(bits):
+    x = jnp.asarray(RNG.standard_normal((256, 512)), jnp.float32)
+    q, s = quantize_blocks(x, interpret=True, bits=bits)
+    qr, sr = quantize_ref(x, bits=bits)
+    assert bool(jnp.all(q == qr))
+    np.testing.assert_allclose(s, sr, rtol=1e-6)
+    qmax = 2 ** (bits - 1) - 1
+    assert int(jnp.max(jnp.abs(q.astype(jnp.int32)))) <= qmax
+    xd = dequantize_blocks(q, s, interpret=True)
+    # error bounded by half an int step of the per-block scale
+    assert float(jnp.max(jnp.abs(xd - x))) <= float(jnp.max(s)) / 2 + 1e-7
+
+
+def test_codec_bits_validated():
+    from repro.kernels.delta_codec.kernel import validate_bits
+    from repro.kernels.delta_codec.ops import codec_ratio
+    with pytest.raises(ValueError, match="bit depth"):
+        validate_bits(5)
+    with pytest.raises(ValueError, match="bit depth"):
+        codec_ratio(1000, bits=16)
+
+
+def test_codec_ratio_bits_frontier():
+    """int4 halves the lane bytes: ratio(bits=4) sits between half the
+    int8 ratio and the int8 ratio, for any block width."""
+    from repro.kernels.delta_codec.ops import codec_ratio, payload_bytes
+    for n in (1000, 451_850):
+        for block in (128, 512):
+            r8 = codec_ratio(n, block, bits=8)
+            r4 = codec_ratio(n, block, bits=4)
+            assert r4 < r8
+            assert r4 > r8 / 2          # the f32 scale overhead stays
+    # payload_bytes agrees with the ratio accounting
+    base = {"w": jnp.zeros((700,))}
+    params = {"w": jnp.ones((700,)) * 0.01}
+    p4 = encode_delta(params, base, interpret=True, bits=4)
+    p8 = encode_delta(params, base, interpret=True, bits=8)
+    blocks = -(-700 // 512)
+    assert payload_bytes(p8) == blocks * 512 + blocks * 4
+    assert payload_bytes(p4) == blocks * 512 // 2 + blocks * 4
+    # int4 payload decodes within its coarser error bound
+    out = decode_delta(p4, base, interpret=True)
+    np.testing.assert_allclose(np.asarray(out["w"]), 0.01, atol=1e-3)
+
+
 def test_delta_codec_tree_roundtrip():
     params = {"a": jnp.asarray(RNG.standard_normal((33, 7)), jnp.float32),
               "b": {"c": jnp.asarray(RNG.standard_normal(501), jnp.float32)}}

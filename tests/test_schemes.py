@@ -1,0 +1,334 @@
+"""Scheme registry + Experiment facade tests (PR 5).
+
+Three contracts:
+
+1. **Registry round-trip** — every registered scheme resolves to itself,
+   unknown names fail loudly *listing the registry* (in ``get_scheme`` and
+   through ``sweep.compile_spec``), and a scheme registered at test time is
+   immediately runnable on the sweep engine with zero engine edits.
+2. **Seeded equivalence** — the facade (``repro.api.Experiment``) is
+   bit-equivalent to the deprecated entry points it shims, and the new
+   ``sync``/``deadline`` schemes reproduce the host reference loop exactly
+   on the fused engine (the same contract the paper schemes carry in
+   ``tests/test_fused_round.py``).
+3. **Scheme semantics** — under common random numbers on the sweep engine,
+   ``sync`` arrivals dominate ``opt`` arrivals dominate ``deadline``
+   arrivals (the deadline charges the eq. 14 overhead; sync waives τ_max).
+"""
+from dataclasses import replace
+
+import numpy as np
+import pytest
+
+from repro.api import Experiment
+from repro.core.hsfl import HSFLConfig, HSFLSimulation
+from repro.core.schemes import (SCHEMES, Scheme, get_scheme,
+                                register_scheme, registered_schemes)
+from repro.core.sweep import SweepSpec, compile_spec
+from repro.core.transmission import scheduled_epochs
+
+PAPER_SCHEMES = ("opt", "sync", "async", "discard")
+
+
+def tiny(**kw):
+    base = dict(rounds=2, n_uavs=8, k_select=4, n_train=400, n_test=100,
+                steps_per_epoch=2, local_epochs=4)
+    base.update(kw)
+    return HSFLConfig(**base)
+
+
+# -- registry round-trip ------------------------------------------------------
+
+def test_registry_roundtrip():
+    names = registered_schemes()
+    for want in PAPER_SCHEMES + ("deadline",):
+        assert want in names
+    for name in names:
+        s = get_scheme(name)
+        assert s.name == name
+        assert get_scheme(s) is s               # instances pass through
+        assert SCHEMES[name] is s               # canonical singleton
+
+
+def test_get_scheme_unknown_lists_registry():
+    with pytest.raises(ValueError) as ei:
+        get_scheme("bogus")
+    for name in registered_schemes():
+        assert name in str(ei.value)
+
+
+def test_compile_spec_unknown_scheme_lists_registry():
+    """Satellite: an unknown scheme entry must fail at spec compilation
+    with the registered names — not fall through to an engine branch."""
+    spec = SweepSpec(base=tiny(), schemes=("bogus",))
+    with pytest.raises(ValueError, match="registered schemes"):
+        compile_spec(spec)
+    spec2 = SweepSpec(base=tiny(), schemes=(("bogus", {"b": 2.0}),))
+    with pytest.raises(ValueError, match="registered schemes"):
+        compile_spec(spec2)
+
+
+def test_duplicate_registration_rejected():
+    with pytest.raises(ValueError, match="already registered"):
+        register_scheme("opt")(type("Dup", (Scheme,), {}))
+    # aliasing an already-registered CLASS under a new name would
+    # retroactively rename the registered singleton — must be rejected
+    with pytest.raises(ValueError, match="subclass"):
+        register_scheme("opt2")(get_scheme("opt").__class__)
+    assert get_scheme("opt").name == "opt"
+    assert "opt2" not in registered_schemes()
+
+
+def test_with_pins_merges_and_preserves_identity():
+    s = get_scheme("opt").with_pins(b=2.0)
+    s2 = s.with_pins(tau_max=9.0, b=3.0)
+    assert dict(s.pins) == {"b": 2.0}
+    assert dict(s2.pins) == {"b": 3.0, "tau_max": 9.0}
+    assert s2.name == "opt" and s2.uses_probes
+    # pins ride the object into compile_spec (Scheme entries, no tuples)
+    g = compile_spec(SweepSpec(base=tiny(), schemes=(s,)))[0]
+    assert {c["b"] for c in g.cfgs} == {2.0}
+
+
+def test_static_schedule_matches_legacy_rules():
+    """OptScheme.static_schedule == the pre-registry HSFLSimulation logic:
+    empty for b<=1, scheduled_epochs otherwise, override filtered to
+    [1, e]; non-probing schemes never schedule (even with an override)."""
+    opt = get_scheme("opt")
+    for e in (2, 4, 6, 12):
+        for b in (1, 2, 3, 6):
+            want = tuple(scheduled_epochs(e, b)) if b > 1 else ()
+            assert opt.static_schedule(e, b) == want, (e, b)
+    assert opt.static_schedule(6, 2, override=(1, 5, 99)) == (1, 5)
+    assert opt.static_schedule(6, 1, override=(1, 5)) == ()
+    for name in ("discard", "async", "sync"):
+        assert get_scheme(name).static_schedule(6, 3, override=(2,)) == ()
+    assert get_scheme("deadline").static_schedule(6, 2) == \
+        opt.static_schedule(6, 2)
+
+
+def test_scheme_flags_and_slack():
+    assert get_scheme("opt").supports_codec
+    assert get_scheme("deadline").supports_codec
+    assert not get_scheme("async").supports_codec
+    assert get_scheme("async").carries_delayed
+    assert get_scheme("sync").final_slack(3.5) == -np.inf
+    assert get_scheme("deadline").final_slack(3.5) == 3.5
+    for name in ("opt", "discard", "async"):
+        assert get_scheme(name).final_slack(3.5) == 0.0
+
+
+def test_register_custom_scheme_runs_on_sweep_engine():
+    """The extension contract: a scheme registered *here* runs through the
+    sweep engine (and the facade) without touching any engine code."""
+    name = "_test_half_deadline"
+
+    try:
+        @register_scheme(name)
+        class HalfDeadline(get_scheme("deadline").__class__):
+            """Deadline variant charging half the eq. 14 allowance."""
+            def final_slack(self, tau_extra0):
+                return 0.5 * tau_extra0
+
+        res = (Experiment(tiny(rounds=1)).with_scheme(name, b=2.0)
+               .run(engine="sweep", mesh=None))
+        m = res.groups[0].metrics
+        assert res.groups[0].scheme == name
+        assert np.all(np.isfinite(m["test_loss"]))
+    finally:
+        SCHEMES.pop(name, None)
+    with pytest.raises(ValueError):
+        get_scheme(name)
+
+
+# -- new schemes: host-reference equivalence on the fused engine --------------
+
+def _traj(cfg):
+    sim = HSFLSimulation(cfg)
+    delayed, logs = [], []
+    for t in range(1, cfg.rounds + 1):
+        log, delayed = sim.run_round(t, delayed)
+        logs.append((log.selected, log.arrived_final, log.used_snapshot,
+                     log.dropped, log.delayed, round(log.bytes_sent, 3)))
+    return logs
+
+
+@pytest.mark.parametrize("scheme,b", [("sync", 1), ("deadline", 2),
+                                      ("deadline", 3)])
+def test_new_schemes_fused_matches_host(scheme, b):
+    cfg = tiny(rounds=3, local_epochs=6, scheme=scheme, b=b, seed=1)
+    host = _traj(replace(cfg, use_fused_round=False))
+    fused = _traj(replace(cfg, use_fused_round=True))
+    assert host == fused, (scheme, host, fused)
+
+
+def _one_round_inputs(K=2, e=2, dim=4, ncls=3):
+    """Synthetic single-round inputs for build_fused_round with a linear
+    model — the pattern of tests/test_fused_round's async tests."""
+    import jax.numpy as jnp
+    rng = np.random.default_rng(0)
+    xs = jnp.asarray(rng.normal(size=(e, K, 1, 2, dim)), np.float32)
+    ys = jnp.asarray(rng.integers(0, ncls, (e, K, 1, 2)))
+    params = {"w": jnp.asarray(rng.normal(size=(dim, ncls)), np.float32)}
+    chan = {
+        "rates": jnp.full((e, K), 1e7, jnp.float32),
+        "outages": jnp.zeros((e, K), bool),
+        "payload_bits": jnp.full((K,), 8e6, jnp.float32),
+        # the eq. 14 allowance: the quantity 'deadline' charges vs τ_max
+        "tau_extra0": jnp.full((K,), 7.0, jnp.float32),
+        "final_rate": jnp.full((K,), 4e6, jnp.float32),   # τ_f = 2 s
+        "final_outage": jnp.zeros((K,), bool),
+        "train_time": jnp.full((K,), 1.0, jnp.float32),
+        "valid": jnp.ones((K,), bool),
+    }
+    return params, xs, ys, chan
+
+
+def _linear_forward(params, x):
+    return x @ params["w"]
+
+
+@pytest.mark.parametrize("scheme,want_arrived,want_rescued", [
+    # τ_max=9: train 1 + τ_f 2 fits for opt; deadline charges the 7 s
+    # eq. 14 allowance (1+7+2 > 9) -> final dropped, snapshot rescues
+    ("opt", True, False),
+    ("deadline", False, True),
+])
+def test_deadline_final_arrival_semantics(scheme, want_arrived, want_rescued):
+    from repro.core.fused_round import build_fused_round
+    fn = build_fused_round(scheme=scheme, local_epochs=2, steps_per_epoch=1,
+                           lr=0.1, tau_max=9.0, probe_epochs=(1,),
+                           forward=_linear_forward)
+    params, xs, ys, chan = _one_round_inputs()
+    _, stats = fn(params, xs, ys, chan)
+    assert bool(np.all(np.asarray(stats.arrived) == want_arrived)), scheme
+    assert bool(np.all(np.asarray(stats.rescued) == want_rescued)), scheme
+    # the probe at epoch 1 succeeded either way (τ ≈ 0.8 ≤ 7)
+    assert np.asarray(stats.opp_sends).sum() == 2
+
+
+def test_sync_waives_tau_max_but_not_outages():
+    import jax.numpy as jnp
+    from repro.core.fused_round import build_fused_round
+    fn = build_fused_round(scheme="sync", local_epochs=2, steps_per_epoch=1,
+                           lr=0.1, tau_max=9.0, probe_epochs=(),
+                           forward=_linear_forward)
+    params, xs, ys, chan = _one_round_inputs()
+    # user 0: train_time alone blows τ_max; user 1: outage at the final
+    chan["train_time"] = jnp.asarray([1e9, 1.0], jnp.float32)
+    chan["final_outage"] = jnp.asarray([False, True])
+    _, stats = fn(params, xs, ys, chan)
+    assert list(np.asarray(stats.arrived)) == [True, False]
+    assert list(np.asarray(stats.dropped)) == [False, True]
+
+
+# -- scheme semantics under common random numbers (sweep engine) --------------
+
+@pytest.fixture(scope="module")
+def five_scheme_panel():
+    ex = Experiment(tiny(rounds=3, local_epochs=6)).with_seeds(0, 1)
+    for s in ("opt", "deadline", "sync", "discard", "async"):
+        ex = ex.with_scheme(s, b=3.0)
+    return ex.run(engine="sweep", mesh=None)
+
+
+def test_all_registered_schemes_one_panel(five_scheme_panel):
+    res = five_scheme_panel
+    assert [g.scheme for g in res.groups] == \
+        ["opt", "deadline", "sync", "discard", "async"]
+    for g in res.groups:
+        m = g.metrics
+        assert np.all(np.isfinite(m["test_loss"]))
+        assert np.all((m["test_acc"] >= 0) & (m["test_acc"] <= 1))
+        assert np.all(m["arrived"] + m["dropped"] + m["delayed"]
+                      + m["rescued"] <= m["selected"])
+
+
+def test_arrival_dominance_sync_opt_deadline(five_scheme_panel):
+    """Same channel/data streams across groups (common random numbers):
+    waiving the deadline (sync) can only add arrivals over opt, charging
+    the eq. 14 overhead (deadline) can only remove them."""
+    by = {g.scheme: g.metrics["arrived"] for g in five_scheme_panel.groups}
+    assert np.all(by["sync"] >= by["opt"])
+    assert np.all(by["deadline"] <= by["opt"])
+    # at b=3 the probes exist for opt/deadline only
+    rescues = {g.scheme: g.metrics["rescued"].sum()
+               for g in five_scheme_panel.groups}
+    assert rescues["sync"] == rescues["discard"] == rescues["async"] == 0
+
+
+# -- facade vs deprecated shims: seeded equivalence ---------------------------
+
+def test_facade_fused_matches_run_hsfl_shim():
+    for scheme, b in (("opt", 2.0), ("async", 1.0)):
+        cfg = tiny(scheme=scheme, b=int(b))
+        with pytest.warns(DeprecationWarning):
+            from repro.core.hsfl import run_hsfl
+            want = run_hsfl(cfg)
+        got = Experiment(tiny()).with_scheme(scheme, b=b).run(engine="fused")
+        assert [r.test_acc for r in got.rounds] == \
+            [r.test_acc for r in want.rounds]
+        assert [r.bytes_sent for r in got.rounds] == \
+            [r.bytes_sent for r in want.rounds]
+
+
+def test_facade_sweep_matches_run_sweep_shim():
+    spec = SweepSpec(base=tiny(), seeds=(0,),
+                     schemes=(("opt", {"b": 2.0}),
+                              ("deadline", {"b": 2.0})))
+    with pytest.warns(DeprecationWarning):
+        from repro.core.sweep import run_sweep
+        want = run_sweep(spec, mesh=None)
+    got = Experiment.from_spec(spec).run(engine="sweep", mesh=None)
+    for g1, g2 in zip(got.groups, want.groups):
+        assert g1.scheme == g2.scheme
+        for key in g1.metrics:
+            np.testing.assert_array_equal(g1.metrics[key], g2.metrics[key],
+                                          err_msg=key)
+    # the builder form compiles to the same spec as the tuple form
+    built = (Experiment(tiny()).with_scheme("opt", b=2.0)
+             .with_scheme("deadline", b=2.0).to_spec())
+    assert compile_spec(built)[0].cfgs == compile_spec(spec)[0].cfgs
+
+
+def test_facade_on_device_matches_run_hsfl_on_device_shim():
+    cfg = tiny(scheme="discard", b=1)
+    with pytest.warns(DeprecationWarning):
+        from repro.core.sweep import run_hsfl_on_device
+        want = run_hsfl_on_device(cfg)
+    got = Experiment(cfg).run(engine="sweep", mesh=None) \
+        .groups[0].sim_log(0, 0)
+    assert [r.test_acc for r in got.rounds] == \
+        [r.test_acc for r in want.rounds]
+
+
+def test_facade_loop_engine_is_host_reference():
+    """engine='loop' must run the host OppTransmitter path (bit-identical
+    to use_fused_round=False), not the fused program."""
+    cfg = tiny(scheme="opt", b=2, seed=1)
+    want = _traj(replace(cfg, use_fused_round=False))
+    log = Experiment(cfg).with_scheme("opt", b=2.0).run(engine="loop")
+    got = [(r.selected, r.arrived_final, r.used_snapshot, r.dropped,
+            r.delayed, round(r.bytes_sent, 3)) for r in log.rounds]
+    assert got == want
+
+
+def test_facade_rejects_bad_requests():
+    ex = Experiment(tiny())
+    with pytest.raises(ValueError, match="engine"):
+        ex.run(engine="warp")
+    with pytest.raises(ValueError, match="sweep"):
+        ex.with_scheme("opt").with_scheme("async").run(engine="fused")
+    with pytest.raises(ValueError, match="sweep"):
+        ex.with_axes(b=(1.0, 2.0)).run(engine="fused")
+    with pytest.raises(ValueError, match="traced config axes"):
+        ex.with_axes(rounds=(3,))
+    # a fractional budget cannot silently round on the host engines
+    with pytest.raises(ValueError, match="fractional"):
+        ex.with_scheme("opt", b=2.5).run(engine="fused")
+    # a from_spec experiment is frozen: builder calls would be dropped
+    frozen = Experiment.from_spec(SweepSpec(base=tiny()))
+    with pytest.raises(ValueError, match="from_spec"):
+        frozen.with_scheme("deadline", b=2.0)
+    with pytest.raises(ValueError, match="from_spec"):
+        frozen.with_seeds(0, 1)

@@ -275,6 +275,30 @@ def test_codec_sweep_sharded_smoke():
     assert np.all(res.groups[1].metrics["rescued"] == 0)
 
 
+def test_codec_bits_group_static_forks_programs():
+    """codec_bits is a GROUP_STATICS entry: int8 and int4 codec groups sit
+    side by side in one spec as two compiled programs (the bit depth is
+    baked into the round program), and the int4 group's payload accounting
+    flows from codec_ratio(bits=4)."""
+    from repro.core.hsfl import model_compress_ratio
+    from repro.core.sweep import GROUP_STATICS, _group_build_kwargs
+    assert "codec_bits" in GROUP_STATICS
+    spec = SweepSpec(base=tiny_base(rounds=2, local_epochs=4),
+                     seeds=(0,),
+                     schemes=(("opt", {"b": 2.0, "use_delta_codec": True}),
+                              ("opt", {"b": 2.0, "use_delta_codec": True,
+                                       "codec_bits": 4})))
+    g8, g4 = compile_spec(spec)
+    assert g8.base.codec_bits == 8 and g4.base.codec_bits == 4
+    assert _group_build_kwargs(g4)["codec_bits"] == 4
+    assert _group_build_kwargs(g4)["compress_ratio"] \
+        == model_compress_ratio(g4.base) < _group_build_kwargs(g8)["compress_ratio"]
+    res = run_sweep(spec, mesh=None)
+    assert res.n_programs == 2
+    for g in res.groups:
+        assert np.all(np.isfinite(g.metrics["test_loss"]))
+
+
 def test_device_round_codec_matches_matched_channels():
     """Seeded equivalence of device-round codec rescues: against an
     uncompressed device run with ``compress_ratio`` pinned to the same
