@@ -12,6 +12,13 @@ per-cell simulation (host-presampled channel; the reference RNG stream).
 ``--schemes`` takes any registered scheme names (``repro.core.schemes``)
 as ``name=b`` pairs.
 
+``--serve`` runs the first scheme of the panel through the long-lived
+fault-tolerant aggregation service instead (``serving/fl_server``), with
+optional fault injection and crash/resume durability::
+
+    PYTHONPATH=src python examples/uav_fl_sim.py --serve --rounds 10 \
+        --faults "dup@r2:c*; crash@r5:close" --ckpt-dir /tmp/fl_ckpt
+
 Run:  PYTHONPATH=src python examples/uav_fl_sim.py [--rounds 100] [--seeds 2]
 """
 import argparse
@@ -45,6 +52,19 @@ ap.add_argument("--kernel", default="xla", choices=["xla", "pallas", "im2col"],
 ap.add_argument("--precision", default="f32", choices=["f32", "bf16"],
                 help="compute precision of the training step (bf16 keeps "
                      "f32 master params and loss)")
+ap.add_argument("--serve", action="store_true",
+                help="run the first scheme through the fault-tolerant "
+                     "aggregation service (serving/fl_server) instead of "
+                     "the batch engines")
+ap.add_argument("--faults", default=None, metavar="PLAN",
+                help="with --serve: fault plan, e.g. "
+                     "'dup@r2:c*; crash@r3:close'")
+ap.add_argument("--ckpt-dir", default=None,
+                help="with --serve: checkpoint/resume directory (crash "
+                     "faults require it)")
+ap.add_argument("--quorum", type=float, default=0.0,
+                help="with --serve: hold rounds open for late uploads "
+                     "until this fraction of scheduled finals arrived")
 args = ap.parse_args()
 
 if args.schemes:
@@ -65,6 +85,33 @@ t0 = time.time()
 base = Experiment(rounds=args.rounds, distribution=args.distribution,
                   use_delta_codec=args.codec, kernel=args.kernel,
                   precision=args.precision).with_seeds(*seed_list)
+
+if args.serve:
+    from repro.serving.fl_server import run_with_restarts
+
+    scheme, b = schemes[0]
+    ex = base.with_seeds(args.seed).with_scheme(scheme, b=float(b))
+    print(f"--- serving {scheme} (b={b}) on {args.distribution}"
+          + (f", faults: {args.faults}" if args.faults else "") + " ---")
+    if args.ckpt_dir:
+        server, restarts = run_with_restarts(
+            ex.to_config(), ckpt_dir=args.ckpt_dir, fault_plan=args.faults,
+            quorum=args.quorum, verbose=True)
+    else:
+        server = ex.serve(faults=args.faults, quorum=args.quorum)
+        server.serve(verbose=True)
+        restarts = 0
+    s = server.log.summary()
+    print(f"\n=== served {scheme}: final={s['final_acc']:.4f} "
+          f"comm={s['avg_comm_mb']:.1f} MB/round "
+          f"rescued={s['snapshot_rescues']} dropped={s['drops']} "
+          f"dup_rejected={s['duplicates_rejected']} "
+          f"corrupt_rejected={s['corrupt_rejected']} "
+          f"retries={s['retries']} restarts={restarts} "
+          f"({time.time() - t0:.1f}s) ===")
+    if server.metrics_path:
+        print(f"metrics log: {server.metrics_path}")
+    raise SystemExit(0)
 
 if args.engine == "sweep":
     ex = base

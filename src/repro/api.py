@@ -40,6 +40,15 @@ Engines:
 ``loop``/``fused`` return a ``SimLog`` (or a list of them for several
 seeds); ``sweep`` returns a ``SweepResult`` whose groups rebuild per-cell
 ``SimLog``s via ``GroupResult.sim_log``.
+
+Beyond the batch engines, ``Experiment.serve`` stands up the long-lived
+fault-tolerant aggregation service (``serving/fl_server.FLServer``):
+client registry, idempotent upload inbox, seeded fault injection and
+per-round checkpoint/resume — fault-free it reproduces ``engine="loop"``
+bit-for-bit::
+
+    server = Experiment(rounds=20).with_scheme("opt", b=2).serve(
+        ckpt_dir="/tmp/fl_ckpt", faults="dup@r2:c*; crash@r3:close")
 """
 from __future__ import annotations
 
@@ -220,3 +229,28 @@ class Experiment:
                     for cfg in self._loop_cfgs(engine)]
             return logs[0] if len(logs) == 1 else logs
         raise ValueError(f"unknown engine {engine!r}; choose from {ENGINES}")
+
+    def to_config(self) -> HSFLConfig:
+        """The single-simulation ``HSFLConfig`` this experiment denotes
+        (one scheme, one seed; every pin folded in) — what ``serve()``
+        and the crash supervisor ``serving.fl_server.run_with_restarts``
+        consume."""
+        cfgs = self._loop_cfgs("loop")
+        if len(cfgs) != 1:
+            raise ValueError(f"to_config() denotes one simulation; got "
+                             f"{len(cfgs)} seeds — pick one with "
+                             f"with_seeds(s)")
+        return cfgs[0]
+
+    def serve(self, *, ckpt_dir: str | None = None, faults=None,
+              quorum: float = 0.0, **server_kw):
+        """Build the long-lived aggregation service for this experiment
+        (one scheme, one seed — the host reference semantics).
+
+        Returns an un-started ``serving.fl_server.FLServer``; drive it
+        with ``.serve()``/``.step()``, or hand the same config to
+        ``serving.fl_server.run_with_restarts`` for crash supervision.
+        ``faults`` is a ``FaultPlan`` or plan-grammar string."""
+        from repro.serving.fl_server import FLServer
+        return FLServer(self.to_config(), ckpt_dir=ckpt_dir,
+                        fault_plan=faults, quorum=quorum, **server_kw)

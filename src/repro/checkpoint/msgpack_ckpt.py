@@ -1,14 +1,22 @@
 """Checkpointing: msgpack-serialized pytrees with dtype/shape manifest.
 
-Layout: <dir>/<step>/checkpoint.msgpack + MANIFEST.json; ``latest_step``
-resolves the newest complete save (a COMMIT marker finalizes a save, so a
-crashed writer never yields a half-read checkpoint).
+Layout: ``<dir>/<step>/checkpoint.msgpack + MANIFEST.json [+ aux.json]``;
+``latest_step`` resolves the newest *complete* save — a COMMIT marker
+finalizes a save, so a crashed writer (directory present, marker absent)
+is silently skipped rather than ever yielding a half-read checkpoint.
+
+``MANIFEST.json`` records per-leaf dtype/shape; ``restore_checkpoint``
+validates the decoded leaves against it (and against the ``like`` tree)
+with a clear error instead of a silent mismatch.  ``aux`` carries small
+JSON-able sidecar state (RNG bit-generator states, registries, counters)
+that rides the same COMMIT atomicity as the tensor payload — the FL
+serving path checkpoints its whole resume state through it.
 """
 from __future__ import annotations
 
 import json
 import os
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -26,46 +34,111 @@ def _encode_leaf(x) -> Dict[str, Any]:
 
 
 def _decode_leaf(d: Dict[str, Any]) -> np.ndarray:
+    # np.frombuffer views the (immutable) msgpack bytes, so the raw array is
+    # read-only; copy so restored pytrees are writable like any fresh array
     if d["dtype"] == "bfloat16":
-        raw = np.frombuffer(d["data"], np.uint16).reshape(d["shape"])
+        raw = np.frombuffer(d["data"], np.uint16).reshape(d["shape"]).copy()
         return raw.view(jnp.bfloat16)
-    return np.frombuffer(d["data"], np.dtype(d["dtype"])).reshape(d["shape"])
+    return np.frombuffer(d["data"], np.dtype(d["dtype"])) \
+        .reshape(d["shape"]).copy()
 
 
-def save_checkpoint(ckpt_dir: str, step: int, tree: Any) -> str:
+def _leaf_spec(d: Dict[str, Any]) -> Dict[str, Any]:
+    return {"dtype": d["dtype"], "shape": list(d["shape"])}
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any,
+                    aux: Optional[Dict[str, Any]] = None) -> str:
+    """Write step ``step``; only the final COMMIT marker makes it visible.
+
+    ``aux`` is an optional JSON-serializable sidecar (restored by
+    ``restore_aux``) committed atomically with the tensor payload.
+    """
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     path = os.path.join(ckpt_dir, str(step))
     os.makedirs(path, exist_ok=True)
-    payload = msgpack.packb([_encode_leaf(x) for x in leaves], use_bin_type=True)
-    with open(os.path.join(path, "checkpoint.msgpack"), "wb") as f:
+    enc = [_encode_leaf(x) for x in leaves]
+    payload = msgpack.packb(enc, use_bin_type=True)
+    tmp = os.path.join(path, "checkpoint.msgpack.tmp")
+    with open(tmp, "wb") as f:
         f.write(payload)
+    os.replace(tmp, os.path.join(path, "checkpoint.msgpack"))
     with open(os.path.join(path, "MANIFEST.json"), "w") as f:
         json.dump({"step": step, "num_leaves": len(leaves),
-                   "treedef": str(treedef)}, f)
+                   "treedef": str(treedef),
+                   "leaves": [_leaf_spec(d) for d in enc]}, f)
+    if aux is not None:
+        with open(os.path.join(path, "aux.json"), "w") as f:
+            json.dump(aux, f)
     open(os.path.join(path, "COMMIT"), "w").close()
     return path
 
 
 def latest_step(ckpt_dir: str) -> Optional[int]:
+    """Newest committed step, or None.  Half-written saves — a step
+    directory without its COMMIT marker (crashed writer), or a stray
+    non-directory entry — are skipped, never an error."""
     if not os.path.isdir(ckpt_dir):
         return None
     steps = [int(d) for d in os.listdir(ckpt_dir)
-             if d.isdigit() and os.path.exists(os.path.join(ckpt_dir, d, "COMMIT"))]
+             if d.isdigit() and os.path.isdir(os.path.join(ckpt_dir, d))
+             and os.path.exists(os.path.join(ckpt_dir, d, "COMMIT"))]
     return max(steps) if steps else None
 
 
+def _load_manifest(path: str) -> Optional[Dict[str, Any]]:
+    mpath = os.path.join(path, "MANIFEST.json")
+    if not os.path.exists(mpath):
+        return None
+    with open(mpath) as f:
+        return json.load(f)
+
+
 def restore_checkpoint(ckpt_dir: str, step: int, like: Any) -> Any:
-    """Restore into the structure of ``like`` (shape/dtype validated)."""
-    path = os.path.join(ckpt_dir, str(step), "checkpoint.msgpack")
-    with open(path, "rb") as f:
+    """Restore into the structure of ``like``.
+
+    Decoded leaves are validated twice: against the save-time
+    ``MANIFEST.json`` specs (corruption / partial write shows up as a
+    manifest mismatch naming the leaf) and against ``like`` (a changed
+    model shows up as a shape/dtype mismatch naming both sides).
+    """
+    path = os.path.join(ckpt_dir, str(step))
+    with open(os.path.join(path, "checkpoint.msgpack"), "rb") as f:
         enc = msgpack.unpackb(f.read(), raw=False)
+    manifest = _load_manifest(path)
     leaves, treedef = jax.tree_util.tree_flatten(like)
     if len(enc) != len(leaves):
-        raise ValueError(f"checkpoint has {len(enc)} leaves, expected {len(leaves)}")
+        raise ValueError(f"checkpoint has {len(enc)} leaves, expected "
+                         f"{len(leaves)}")
+    specs: List[Optional[Dict[str, Any]]] = [None] * len(enc)
+    if manifest is not None and "leaves" in manifest:
+        if len(manifest["leaves"]) != len(enc):
+            raise ValueError(
+                f"MANIFEST.json records {len(manifest['leaves'])} leaves "
+                f"but the payload holds {len(enc)} — the save is "
+                f"inconsistent (corrupt or mixed-version)")
+        specs = list(manifest["leaves"])
     decoded = []
-    for d, ref in zip(enc, leaves):
+    for i, (d, ref, spec) in enumerate(zip(enc, leaves, specs)):
         arr = _decode_leaf(d)
+        if spec is not None and (
+                list(arr.shape) != list(spec["shape"])
+                or d["dtype"] != spec["dtype"]):
+            raise ValueError(
+                f"leaf {i}: decoded {d['dtype']}{tuple(arr.shape)} does not "
+                f"match MANIFEST.json {spec['dtype']}{tuple(spec['shape'])} "
+                f"— the checkpoint payload is corrupt")
         if tuple(arr.shape) != tuple(np.shape(ref)):
-            raise ValueError(f"shape mismatch {arr.shape} vs {np.shape(ref)}")
+            raise ValueError(f"leaf {i}: shape mismatch {arr.shape} vs "
+                             f"{np.shape(ref)}")
         decoded.append(jnp.asarray(arr))
     return jax.tree_util.tree_unflatten(treedef, decoded)
+
+
+def restore_aux(ckpt_dir: str, step: int) -> Optional[Dict[str, Any]]:
+    """The JSON sidecar saved alongside step ``step`` (None if absent)."""
+    path = os.path.join(ckpt_dir, str(step), "aux.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)

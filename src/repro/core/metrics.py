@@ -16,6 +16,14 @@ class RoundLog:
     bytes_sent: float = 0.0
     test_loss: float = float("nan")
     test_acc: float = float("nan")
+    # serving-path counters (serving/fl_server): zero on the batch engines
+    duplicates_rejected: int = 0
+    stale_rejected: int = 0
+    corrupt_rejected: int = 0
+    retries: int = 0
+    late_accepted: int = 0
+    unregistered_skipped: int = 0
+    quorum_met: bool = True
 
 
 @dataclass
@@ -55,4 +63,9 @@ class SimLog:
                                       for r in self.rounds) / n,
             "snapshot_rescues": sum(r.used_snapshot for r in self.rounds),
             "drops": sum(r.dropped for r in self.rounds),
+            "duplicates_rejected": sum(r.duplicates_rejected
+                                       for r in self.rounds),
+            "stale_rejected": sum(r.stale_rejected for r in self.rounds),
+            "corrupt_rejected": sum(r.corrupt_rejected for r in self.rounds),
+            "retries": sum(r.retries for r in self.rounds),
         }

@@ -1,0 +1,130 @@
+"""FL aggregation service launcher — the long-lived serving path.
+
+Runs ``serving/fl_server.FLServer`` under a restart supervisor: injected
+(or real) crashes resume from the latest committed msgpack checkpoint and
+training continues bit-compatibly.
+
+  # fault-free service, checkpointing every round
+  PYTHONPATH=src python -m repro.launch.serve_fl --rounds 20 \
+      --scheme opt --ckpt-dir /tmp/fl_ckpt
+
+  # chaos: duplicates + corruption + a mid-training server kill
+  PYTHONPATH=src python -m repro.launch.serve_fl --rounds 10 \
+      --ckpt-dir /tmp/fl_ckpt \
+      --faults "dup@r2:c*; corrupt@r3:c*; crash@r5:checkpoint"
+
+  # seeded random chaos instead of a scripted plan
+  PYTHONPATH=src python -m repro.launch.serve_fl --rounds 10 \
+      --ckpt-dir /tmp/fl_ckpt --chaos-seed 0 --chaos-dup 0.1 \
+      --chaos-corrupt 0.1
+
+Re-running with the same ``--ckpt-dir`` resumes from the latest committed
+round (pass ``--fresh`` to wipe and start over).  Per-round metrics append
+to ``<ckpt-dir>/metrics.jsonl`` (see EXPERIMENTS.md "Serving & fault
+injection").
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import shutil
+
+from repro.core.faults import FaultPlan
+from repro.core.hsfl import HSFLConfig
+from repro.core.schemes import registered_schemes
+from repro.serving.fl_server import FLServer, run_with_restarts
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="long-lived fault-tolerant FL aggregation service")
+    ap.add_argument("--scheme", default="opt", choices=registered_schemes())
+    ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--b", type=int, default=2)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--distribution", default="noniid",
+                    choices=["iid", "noniid", "imbalanced"])
+    ap.add_argument("--n-uavs", type=int, default=30)
+    ap.add_argument("--k-select", type=int, default=10)
+    ap.add_argument("--n-train", type=int, default=None,
+                    help="shrink the train split (smoke runs)")
+    ap.add_argument("--n-test", type=int, default=None)
+    ap.add_argument("--steps-per-epoch", type=int, default=None)
+    ap.add_argument("--local-epochs", type=int, default=None)
+    ap.add_argument("--codec", action="store_true",
+                    help="int8 delta-codec snapshots")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="checkpoint/resume directory (also holds "
+                         "metrics.jsonl); omit to run without durability")
+    ap.add_argument("--fresh", action="store_true",
+                    help="wipe --ckpt-dir before serving")
+    ap.add_argument("--faults", default=None, metavar="PLAN",
+                    help="fault plan, e.g. 'dup@r2:c*; crash@r3:close' "
+                         "(kinds: drop dup corrupt delay crash)")
+    ap.add_argument("--chaos-seed", type=int, default=None,
+                    help="seeded random fault plan instead of --faults")
+    ap.add_argument("--chaos-dup", type=float, default=0.05)
+    ap.add_argument("--chaos-corrupt", type=float, default=0.05)
+    ap.add_argument("--chaos-drop", type=float, default=0.0)
+    ap.add_argument("--chaos-delay", type=float, default=0.0)
+    ap.add_argument("--quorum", type=float, default=0.0,
+                    help="hold the round open for late uploads until this "
+                         "fraction of scheduled finals arrived")
+    ap.add_argument("--max-restarts", type=int, default=10)
+    ap.add_argument("--eval-every", type=int, default=1)
+    ap.add_argument("--metrics-path", default=None,
+                    help="per-round JSONL log (default: "
+                         "<ckpt-dir>/metrics.jsonl)")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.faults and args.chaos_seed is not None:
+        ap.error("--faults and --chaos-seed are mutually exclusive")
+    plan = FaultPlan.parse(args.faults) if args.faults else None
+    if args.chaos_seed is not None:
+        plan = FaultPlan.random(
+            args.chaos_seed, args.rounds, range(args.n_uavs),
+            p_dup=args.chaos_dup, p_corrupt=args.chaos_corrupt,
+            p_drop=args.chaos_drop, p_delay=args.chaos_delay)
+    if args.fresh and args.ckpt_dir and os.path.isdir(args.ckpt_dir):
+        shutil.rmtree(args.ckpt_dir)
+
+    small = {k: getattr(args, k) for k in
+             ("n_train", "n_test", "steps_per_epoch", "local_epochs")
+             if getattr(args, k) is not None}
+    cfg = HSFLConfig(scheme=args.scheme, b=args.b, rounds=args.rounds,
+                     seed=args.seed, distribution=args.distribution,
+                     n_uavs=args.n_uavs, k_select=args.k_select,
+                     use_delta_codec=args.codec, **small)
+    verbose = not args.quiet
+    if plan and verbose:
+        print(f"[serve_fl] fault plan: {plan}")
+    if args.ckpt_dir:
+        server, restarts = run_with_restarts(
+            cfg, ckpt_dir=args.ckpt_dir, fault_plan=plan,
+            max_restarts=args.max_restarts, quorum=args.quorum,
+            eval_every=args.eval_every, metrics_path=args.metrics_path,
+            verbose=verbose)
+    else:
+        server = FLServer(cfg, fault_plan=plan, quorum=args.quorum,
+                          eval_every=args.eval_every,
+                          metrics_path=args.metrics_path)
+        server.serve(verbose=verbose)
+        restarts = 0
+
+    s = server.log.summary()
+    print(f"[serve_fl] scheme={args.scheme} rounds={s['rounds']} "
+          f"final_acc={s['final_acc']:.4f} "
+          f"comm={s['avg_comm_mb']:.1f} MB/round "
+          f"rescued={s['snapshot_rescues']} drops={s['drops']} "
+          f"dup_rejected={s['duplicates_rejected']} "
+          f"stale_rejected={s['stale_rejected']} "
+          f"corrupt_rejected={s['corrupt_rejected']} "
+          f"retries={s['retries']} restarts={restarts}")
+    if server.metrics_path:
+        print(f"[serve_fl] metrics log: {server.metrics_path}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

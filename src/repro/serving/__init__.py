@@ -1,3 +1,13 @@
 from repro.serving.decode import generate, prefill
 
-__all__ = ["generate", "prefill"]
+__all__ = ["FLServer", "ClientRegistry", "generate", "prefill",
+           "run_with_restarts"]
+
+
+def __getattr__(name):
+    # fl_server pulls in the whole HSFL stack; load it lazily so the
+    # decode-only serving path stays light
+    if name in ("FLServer", "ClientRegistry", "run_with_restarts"):
+        from repro.serving import fl_server
+        return getattr(fl_server, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

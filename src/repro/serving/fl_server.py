@@ -1,0 +1,672 @@
+"""Fault-tolerant FL aggregation service — the long-lived serving path.
+
+Every engine in this repo ran as a crash-fragile batch script; this module
+turns the host reference loop into a *service* that survives the paper's
+whole premise (unreliable clients) plus its own death:
+
+  - **client registry** — clients register/join/drop mid-training;
+    selection is intersected with the registry, round ids are monotonic,
+    and per-client staleness (rounds since last accepted upload) is
+    tracked (the server/registry pattern of arXiv:2210.10970's
+    UAV-coordinated FL).
+  - **idempotent inbox** — every upload (final or opportunistic snapshot)
+    is a CRC-checked message keyed by ``(round, client, kind)``; duplicate
+    deliveries are rejected without touching aggregation (bit-identical
+    output with and without duplicates), stale round ids are refused, and
+    corrupt payloads are NACKed so the client re-sends under
+    ``core.faults.retry_call`` exponential backoff.
+  - **quorum-or-deadline close** — a round closes when every scheduled
+    upload resolves; if fewer than ``quorum``·selected finals arrived the
+    server holds the round open for late (fault-delayed) uploads before
+    degrading to the registered Scheme's rescue/delayed path
+    (staleness-adaptive async semantics after arXiv:2403.06653).
+  - **checkpoint/resume** — after each round the full resume state
+    (params, straggler carry, fleet state, every RNG bit-generator state,
+    registry, metrics) commits through ``checkpoint/msgpack_ckpt``'s
+    COMMIT-marker atomicity; a killed server restarts from
+    ``latest_step`` and replays the interrupted round *bit-compatibly*
+    (the final model equals an uninterrupted run on the same seed).
+  - **fault injection** — a seeded ``core.faults.FaultPlan`` perturbs the
+    transport (drop/dup/corrupt/delay) and the server itself (crash at
+    train/close/checkpoint phases); ``run_with_restarts`` is the
+    supervisor that eats crashes and resumes.
+
+The trajectory contract: with an empty (or fully *recoverable*) fault
+plan, ``FLServer`` reproduces ``Experiment(cfg).run(engine="loop")``
+bit-for-bit — same per-round arrivals/rescues/bytes, same final params.
+``tests/test_fl_server.py`` pins it.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import zlib
+from dataclasses import asdict, dataclass, replace
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.msgpack_ckpt import (_decode_leaf, _encode_leaf,
+                                           latest_step, restore_aux,
+                                           restore_checkpoint,
+                                           save_checkpoint)
+from repro.core import latency as lat
+from repro.core.faults import (BackoffPolicy, CorruptPayload, FaultPlan,
+                               RetriesExhausted, ServerCrash, UploadTimeout,
+                               as_fault_plan, client_rng, retry_call)
+from repro.core.hsfl import (HSFLConfig, HSFLSimulation, _k_bucket,
+                             _sample_epoch)
+from repro.core.metrics import RoundLog, SimLog
+from repro.core.transmission import OppTransmitter
+from repro.kernels.delta_codec.ops import decode_delta, encode_delta
+
+import msgpack
+
+__all__ = ["ClientRegistry", "FLServer", "UploadMsg", "run_with_restarts"]
+
+
+# ---------------------------------------------------------------------------
+# wire format: msgpack-encoded pytrees with a CRC32 trailer
+# ---------------------------------------------------------------------------
+
+def encode_tree(tree: Any) -> bytes:
+    """Serialize a parameter pytree to wire bytes (checkpoint leaf codec)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return msgpack.packb([_encode_leaf(x) for x in leaves],
+                         use_bin_type=True)
+
+
+def decode_tree(payload: bytes, like: Any) -> Any:
+    """Inverse of ``encode_tree`` into the structure of ``like``."""
+    enc = msgpack.unpackb(payload, raw=False)
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    if len(enc) != len(leaves):
+        raise ValueError(f"upload has {len(enc)} leaves, expected "
+                         f"{len(leaves)}")
+    return jax.tree_util.tree_unflatten(
+        treedef, [jnp.asarray(_decode_leaf(d)) for d in enc])
+
+
+@dataclass
+class UploadMsg:
+    """One client→server delivery attempt."""
+    client_id: int
+    round_id: int
+    kind: str                      # "final" | "snapshot"
+    seq: int                       # client-side attempt nonce
+    payload: bytes
+    crc: int
+    wire_bytes: float              # the *accounted* channel payload (eq. 13)
+
+    @classmethod
+    def build(cls, client_id: int, round_id: int, kind: str, seq: int,
+              tree: Any, wire_bytes: float) -> "UploadMsg":
+        payload = encode_tree(tree)
+        return cls(client_id, round_id, kind, seq, payload,
+                   zlib.crc32(payload), wire_bytes)
+
+    def corrupted(self) -> "UploadMsg":
+        """A copy with one payload byte flipped (CRC now mismatches)."""
+        i = len(self.payload) // 2
+        bad = self.payload[:i] + bytes([self.payload[i] ^ 0xFF]) \
+            + self.payload[i + 1:]
+        return replace(self, payload=bad)
+
+
+# ---------------------------------------------------------------------------
+# client registry
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ClientRecord:
+    client_id: int
+    joined_round: int = 1          # first round the client is schedulable
+    dropped_round: Optional[int] = None   # drop takes effect *during* this
+    last_upload: Optional[int] = None     # last round an upload was accepted
+    uploads: int = 0
+
+
+class ClientRegistry:
+    """Who is in the fleet, since when, and how stale they are.
+
+    Round ids are monotonic; joins take effect next round (a client
+    registering *during* round t first becomes schedulable at t+1) and so
+    do drops (the client leaves the candidate set from ``dropped_round``
+    on).  A client vanishing *inside* a round — trained but never
+    delivered — is the transport-level ``drop`` fault of
+    ``core.faults.FaultPlan``.
+    """
+
+    def __init__(self, client_ids=()):
+        self._rec: Dict[int, ClientRecord] = {
+            int(c): ClientRecord(int(c)) for c in client_ids}
+
+    def register(self, client_id: int, current_round: int = 0) -> ClientRecord:
+        """Join (or re-join) the fleet, schedulable from the next round."""
+        cid = int(client_id)
+        rec = self._rec.get(cid)
+        if rec is None or rec.dropped_round is not None:
+            rec = ClientRecord(cid, joined_round=current_round + 1)
+            self._rec[cid] = rec
+        return rec
+
+    def drop(self, client_id: int, at_round: int) -> None:
+        """Leave the fleet: not schedulable from ``at_round`` onwards."""
+        rec = self._rec.get(int(client_id))
+        if rec is not None and rec.dropped_round is None:
+            rec.dropped_round = int(at_round)
+
+    def schedulable(self, client_id: int, round_id: int) -> bool:
+        rec = self._rec.get(int(client_id))
+        return (rec is not None and rec.joined_round <= round_id
+                and (rec.dropped_round is None
+                     or rec.dropped_round > round_id))
+
+    def is_dropped(self, client_id: int, round_id: int) -> bool:
+        rec = self._rec.get(int(client_id))
+        return rec is not None and rec.dropped_round is not None \
+            and rec.dropped_round <= round_id
+
+    def record_upload(self, client_id: int, round_id: int) -> None:
+        rec = self._rec.get(int(client_id))
+        if rec is not None:
+            rec.last_upload = round_id
+            rec.uploads += 1
+
+    def staleness(self, client_id: int, round_id: int) -> Optional[int]:
+        """Rounds since the last accepted upload (None = never uploaded)."""
+        rec = self._rec.get(int(client_id))
+        if rec is None or rec.last_upload is None:
+            return None
+        return round_id - rec.last_upload
+
+    def records(self) -> List[ClientRecord]:
+        return [self._rec[c] for c in sorted(self._rec)]
+
+    # -- checkpoint round trip ----------------------------------------------
+    def to_json(self) -> Dict[str, Any]:
+        return {str(c): asdict(r) for c, r in sorted(self._rec.items())}
+
+    @classmethod
+    def from_json(cls, d: Dict[str, Any]) -> "ClientRegistry":
+        reg = cls()
+        for c, r in d.items():
+            reg._rec[int(c)] = ClientRecord(**r)
+        return reg
+
+
+# ---------------------------------------------------------------------------
+# the round inbox
+# ---------------------------------------------------------------------------
+
+class RoundInbox:
+    """Per-round upload store: first valid delivery per (client, kind)
+    wins; everything else is classified and counted, never aggregated."""
+
+    def __init__(self, round_id: int):
+        self.round_id = round_id
+        self.accepted: Dict[Tuple[int, str], UploadMsg] = {}
+        self.duplicates = 0
+        self.stale = 0
+        self.corrupt = 0
+
+    def offer(self, msg: UploadMsg) -> str:
+        """Classify a delivery: 'accepted' | 'duplicate' | 'stale' |
+        'corrupt'.  Raises ``CorruptPayload`` on CRC mismatch (the NACK
+        the client's retry loop consumes)."""
+        if msg.round_id != self.round_id:
+            self.stale += 1
+            return "stale"
+        if zlib.crc32(msg.payload) != msg.crc:
+            self.corrupt += 1
+            raise CorruptPayload(
+                f"round {self.round_id} client {msg.client_id} "
+                f"{msg.kind} seq {msg.seq}: CRC mismatch")
+        key = (msg.client_id, msg.kind)
+        prev = self.accepted.get(key)
+        if prev is not None:
+            if msg.kind == "final" or msg.seq == prev.seq:
+                # re-delivery of an already-accepted upload: idempotent
+                self.duplicates += 1
+                return "duplicate"
+            # a *newer* snapshot overwrites the previous one (Alg. 2
+            # line 14/20: "Previous ω_i will be overwritten")
+        self.accepted[key] = msg
+        return "accepted"
+
+    def get(self, client_id: int, kind: str) -> Optional[UploadMsg]:
+        return self.accepted.get((client_id, kind))
+
+
+# ---------------------------------------------------------------------------
+# the server
+# ---------------------------------------------------------------------------
+
+class FLServer:
+    """Long-lived HSFL aggregation service over the host reference engine.
+
+    Construct directly from an ``HSFLConfig`` (or through
+    ``repro.api.Experiment.serve``), then drive with ``step()`` /
+    ``serve()``.  With ``ckpt_dir`` set, every completed round commits a
+    resume checkpoint; constructing with ``resume=True`` (the default)
+    picks up ``latest_step`` and continues bit-compatibly.
+    """
+
+    def __init__(self, cfg: HSFLConfig, *, ckpt_dir: Optional[str] = None,
+                 fault_plan=None, quorum: float = 0.0,
+                 backoff: Optional[BackoffPolicy] = None,
+                 eval_every: int = 1, resume: bool = True,
+                 metrics_path: Optional[str] = None,
+                 initial_clients=None, skip_crashes=frozenset()):
+        if not (0.0 <= quorum <= 1.0):
+            raise ValueError(f"quorum must lie in [0, 1], got {quorum}")
+        # the service wraps the host reference path: per-client transmitters
+        # and list-form aggregation are what an inbox can mediate
+        self.cfg = replace(cfg, use_fused_round=False)
+        self.sim = HSFLSimulation(self.cfg)
+        self.faults = as_fault_plan(fault_plan)
+        self.quorum = float(quorum)
+        self.backoff = (backoff or BackoffPolicy()).validate()
+        self.eval_every = int(eval_every)
+        self.ckpt_dir = ckpt_dir
+        self.metrics_path = metrics_path or (
+            os.path.join(ckpt_dir, "metrics.jsonl") if ckpt_dir else None)
+        self.skip_crashes = frozenset(skip_crashes)
+        ids = (range(cfg.n_uavs) if initial_clients is None
+               else initial_clients)
+        self.registry = ClientRegistry(ids)
+        self.round = 0                       # last *completed* round id
+        self.log = SimLog()
+        self._delayed: List[Tuple[Any, int]] = []   # async straggler carry
+        if resume and ckpt_dir is not None:
+            step = latest_step(ckpt_dir)
+            if step is not None:
+                self._restore(step)
+
+    # -- public API ---------------------------------------------------------
+    def register_client(self, client_id: int) -> ClientRecord:
+        """Join mid-training: schedulable from the next round."""
+        return self.registry.register(client_id, self.round)
+
+    def drop_client(self, client_id: int, at_round: Optional[int] = None):
+        """Leave mid-training: the client stops being scheduled from the
+        next round (transport-level mid-round loss is the ``drop`` fault)."""
+        self.registry.drop(client_id, self.round + 1 if at_round is None
+                           else at_round)
+
+    @property
+    def params(self):
+        return self.sim.params
+
+    def step(self) -> RoundLog:
+        """Run exactly one round (may raise ``ServerCrash`` under an
+        injected crash; state is only committed on completion)."""
+        t = self.round + 1
+        rlog = self._run_round(t)
+        self.round = t
+        self.log.add(rlog)
+        self._checkpoint(t)
+        self._emit_metrics(rlog)
+        return rlog
+
+    def serve(self, rounds: Optional[int] = None, verbose: bool = False
+              ) -> SimLog:
+        """Run until round ``rounds`` (default ``cfg.rounds``)."""
+        end = self.cfg.rounds if rounds is None else int(rounds)
+        while self.round < end:
+            rlog = self.step()
+            if verbose and (rlog.round % 10 == 0 or rlog.round == 1):
+                print(f"[serve/{self.cfg.scheme}] round {rlog.round}: "
+                      f"acc={rlog.test_acc:.4f} "
+                      f"arrived={rlog.arrived_final} "
+                      f"rescued={rlog.used_snapshot} "
+                      f"dup={rlog.duplicates_rejected} "
+                      f"retries={rlog.retries}")
+        return self.log
+
+    # -- fault hooks --------------------------------------------------------
+    def _crash_maybe(self, t: int, phase: str):
+        if self.faults.crash_phase(t) == phase \
+                and (t, phase) not in self.skip_crashes:
+            if phase == "checkpoint":
+                # die mid-save: step dir + payload written, COMMIT absent —
+                # exactly the half-written save latest_step must skip
+                self._write_half_checkpoint(t)
+            raise ServerCrash(t, phase)
+
+    # -- transport ----------------------------------------------------------
+    def _send(self, t: int, client_id: int, kind: str, tree: Any,
+              wire_bytes: float, inbox: RoundInbox, rlog: RoundLog,
+              fault_state: Dict[int, Dict[str, int]]) -> str:
+        """One upload through the faulty transport with client-side
+        retry/backoff.  Returns 'accepted' | 'lost' | 'deferred'."""
+        fs = fault_state.setdefault(client_id, {
+            "corrupt_left": self.faults.count("corrupt", t, client_id),
+            "dropped": self.faults.count("drop", t, client_id),
+            "seq": 0,
+        })
+        if kind == "final" and self.faults.count("delay", t, client_id):
+            # misses the deadline: parked for the quorum policy at close
+            fs["seq"] += 1
+            msg = UploadMsg.build(client_id, t, kind, fs["seq"], tree,
+                                  wire_bytes)
+            self._late.append(msg)
+            return "deferred"
+
+    # NB: bytes accounting — the *first* attempt's payload is already
+    # counted by the OppTransmitter event log (host-loop parity); only
+    # retries and duplicate deliveries add wire bytes on top.
+        rng = client_rng(self.cfg.seed, t, client_id)
+        attempt_no = {"n": 0}
+
+        def attempt():
+            attempt_no["n"] += 1
+            if attempt_no["n"] > 1:
+                rlog.bytes_sent += wire_bytes
+            if kind == "final" and fs["dropped"]:
+                raise UploadTimeout(f"client {client_id} round {t}: "
+                                    f"black-holed")
+            fs["seq"] += 1
+            msg = UploadMsg.build(client_id, t, kind, fs["seq"], tree,
+                                  wire_bytes)
+            if fs["corrupt_left"] > 0:
+                fs["corrupt_left"] -= 1
+                try:
+                    inbox.offer(msg.corrupted())
+                finally:
+                    rlog.corrupt_rejected += 1
+                return None           # unreachable: offer raised
+            return inbox.offer(msg), msg
+
+        try:
+            res = retry_call(attempt, self.backoff, rng)
+        except RetriesExhausted:
+            rlog.retries += self.backoff.max_attempts - 1
+            return "lost"
+        rlog.retries += res.retries
+        status, msg = res.value
+        if status != "accepted":
+            return "lost"
+        for _ in range(self.faults.count("dup", t, client_id)
+                       if kind == "final" else 0):
+            # duplicate deliveries: the inbox must reject them all
+            if inbox.offer(msg) == "duplicate":
+                rlog.duplicates_rejected += 1
+                rlog.bytes_sent += wire_bytes
+        return "accepted"
+
+    # -- one round ----------------------------------------------------------
+    def _run_round(self, t: int) -> RoundLog:
+        cfg, sim = self.cfg, self.sim
+        scheme = sim.scheme
+        carry = list(self._delayed)
+        self._late: List[UploadMsg] = []
+        inbox = RoundInbox(t)
+
+        sched, ue_bytes = sim._schedule_round()
+        rlog = RoundLog(round=t, selected=len(sched))
+        live = [u for u in sched if self.registry.schedulable(u.index, t)]
+        rlog.unregistered_skipped = len(sched) - len(live)
+        sched = live
+        rlog.selected = len(sched)
+        if not sched:
+            # injected server crashes do not care whether anyone was
+            # scheduled — fire the phase hooks even on an empty round
+            self._crash_maybe(t, "train")
+            self._crash_maybe(t, "close")
+            self.sim.params = scheme.aggregate_host(
+                [], carry, sim.params, cfg.async_alpha, cfg.async_a)
+            self._delayed = []
+            self._eval_round(rlog)
+            return rlog
+
+        txs: Dict[int, OppTransmitter] = {}
+        for u in sched:
+            payload = cfg.model_bytes if u.mode == "FL" else ue_bytes
+            txs[u.index] = OppTransmitter(
+                payload, cfg.local_epochs, cfg.b, u.rate0_bps,
+                compress_ratio=sim.compress_ratio,
+                schedule_override=cfg.schedule_override)
+
+        K = _k_bucket(len(sched), cfg.k_select)
+        stacked = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (K,) + a.shape), sim.params)
+
+        def user_tree(i: int):
+            return jax.tree_util.tree_map(lambda a: a[i], stacked)
+
+        def snapshot_of(i: int):
+            if not cfg.use_delta_codec:
+                return user_tree(i)
+            payload = encode_delta(user_tree(i), sim.params,
+                                   interpret=sim._interpret,
+                                   block=cfg.codec_block,
+                                   bits=cfg.codec_bits)
+            return decode_delta(payload, sim.params,
+                                interpret=sim._interpret)
+
+        fault_state: Dict[int, Dict[str, int]] = {}
+        # local training in lockstep; probe uploads ride the faulty
+        # transport into the inbox (the server, not the transmitter, is
+        # the durable holder of the latest snapshot)
+        for e_t in range(1, cfg.local_epochs + 1):
+            sim.fleet.move()
+            rates = sim.fleet.rates()
+            outages = sim.fleet.outages()
+            eb = [_sample_epoch(sim.clients[u.index], cfg, sim.rng)
+                  for u in sched]
+            while len(eb) < K:
+                eb.append(eb[0])
+            xs = jnp.stack([b[0] for b in eb])
+            ys = jnp.stack([b[1] for b in eb])
+            stacked = sim._epoch_all(stacked, xs, ys)
+            if sim._probe_epochs:
+                for i, u in enumerate(sched):
+                    tx = txs[u.index]
+                    if e_t in tx.schedule:
+                        sent = tx.maybe_transmit(
+                            e_t, float(rates[u.index]),
+                            bool(outages[u.index]),
+                            lambda i=i: snapshot_of(i))
+                        if sent:
+                            self._send(t, u.index, "snapshot", tx.snapshot,
+                                       tx.payload_bytes, inbox, rlog,
+                                       fault_state)
+            if e_t == 1:
+                self._crash_maybe(t, "train")
+
+        # final uploads through the transport
+        rates = sim.fleet.rates()
+        outages = sim.fleet.outages()
+        outcome: Dict[int, str] = {}
+        for i, u in enumerate(sched):
+            tx = txs[u.index]
+            tr_time = (lat.train_time_fl(sim.devices[u.index],
+                                         sim.workloads[u.index])
+                       if u.mode == "FL" else
+                       lat.train_time_sl(sim.devices[u.index],
+                                         sim.workloads[u.index]))
+            slack = float(scheme.final_slack(tx.tau_extra0))
+            ok = tx.final_upload(float(rates[u.index]),
+                                 bool(outages[u.index]),
+                                 tr_time + slack, cfg.tau_max)
+            if ok and self.registry.is_dropped(u.index, t):
+                outcome[u.index] = "lost"       # left mid-round
+            elif ok:
+                outcome[u.index] = self._send(
+                    t, u.index, "final", user_tree(i), tx.payload_bytes,
+                    inbox, rlog, fault_state)
+            else:
+                outcome[u.index] = "missed"     # channel/deadline, no send
+            rlog.bytes_sent += tx.bytes_sent
+            if u.mode == "SL" and tx.events:
+                wl = sim.workloads[u.index]
+                rlog.bytes_sent += wl.act_bytes_per_sample * wl.samples
+
+        self._crash_maybe(t, "close")
+
+        # quorum-or-deadline close: too few timely finals -> hold the round
+        # open and admit late uploads before degrading to the scheme path
+        arrived_n = sum(1 for s in outcome.values() if s == "accepted")
+        need = math.ceil(self.quorum * len(sched))
+        rlog.quorum_met = arrived_n >= need
+        for msg in self._late:
+            if arrived_n < need and inbox.offer(msg) == "accepted":
+                outcome[msg.client_id] = "accepted"
+                rlog.late_accepted += 1
+                arrived_n += 1
+            else:
+                inbox.stale += 1
+                rlog.stale_rejected += 1
+        self._late = []
+
+        # close the round in schedule order (aggregation must not depend on
+        # arrival order — that is what makes duplicates/permutations moot)
+        arrived: List[Any] = []
+        new_delayed: List[Tuple[Any, int]] = []
+        for i, u in enumerate(sched):
+            if outcome[u.index] == "accepted":
+                msg = inbox.get(u.index, "final")
+                arrived.append(decode_tree(msg.payload, sim.params))
+                self.registry.record_upload(u.index, t)
+                rlog.arrived_final += 1
+            elif scheme.uses_probes \
+                    and inbox.get(u.index, "snapshot") is not None:
+                snap = inbox.get(u.index, "snapshot")
+                arrived.append(decode_tree(snap.payload, sim.params))
+                self.registry.record_upload(u.index, t)
+                rlog.used_snapshot += 1
+            elif scheme.carries_delayed \
+                    and not self.registry.is_dropped(u.index, t):
+                new_delayed.append((user_tree(i), 1))
+                rlog.delayed += 1
+            else:
+                rlog.dropped += 1
+
+        self.sim.params = scheme.aggregate_host(
+            arrived, carry, sim.params, cfg.async_alpha, cfg.async_a)
+        self._delayed = new_delayed
+        self._eval_round(rlog)
+        return rlog
+
+    def _eval_round(self, rlog: RoundLog):
+        if rlog.round % self.eval_every == 0 \
+                or rlog.round == self.cfg.rounds:
+            rlog.test_loss, rlog.test_acc = self.sim.evaluate()
+
+    # -- checkpoint / resume -------------------------------------------------
+    def _ckpt_tree(self) -> Any:
+        fleet = self.sim.fleet
+        return {
+            "params": self.sim.params,
+            "delayed": [tr for tr, _ in self._delayed],
+            "fleet_pos": np.asarray(fleet.pos),
+            "fleet_kdb": np.asarray(fleet.k_db),
+            "fleet_bad": np.asarray(fleet._bad),
+        }
+
+    def _ckpt_aux(self, t: int) -> Dict[str, Any]:
+        return {
+            "round": t,
+            "scheme": self.cfg.scheme,
+            "seed": self.cfg.seed,
+            "delayed_staleness": [int(s) for _, s in self._delayed],
+            "sim_rng": self.sim.rng.bit_generator.state,
+            "fleet_rng": self.sim.fleet.rng.bit_generator.state,
+            "registry": self.registry.to_json(),
+            "rounds_log": [asdict(r) for r in self.log.rounds],
+        }
+
+    def _checkpoint(self, t: int):
+        if self.ckpt_dir is None:
+            return
+        self._crash_maybe(t, "checkpoint")
+        save_checkpoint(self.ckpt_dir, t, self._ckpt_tree(),
+                        aux=self._ckpt_aux(t))
+
+    def _write_half_checkpoint(self, t: int):
+        """A crashed writer: payload on disk, COMMIT never lands."""
+        path = save_checkpoint(self.ckpt_dir, t, self._ckpt_tree(),
+                               aux=self._ckpt_aux(t))
+        os.remove(os.path.join(path, "COMMIT"))
+
+    def _restore(self, step: int):
+        aux = restore_aux(self.ckpt_dir, step)
+        if aux is None:
+            raise ValueError(
+                f"checkpoint step {step} in {self.ckpt_dir} has no aux.json "
+                f"resume state (not an FLServer checkpoint?)")
+        n_delayed = len(aux["delayed_staleness"])
+        like = {
+            "params": self.sim.params,
+            "delayed": [self.sim.params] * n_delayed,
+            "fleet_pos": np.asarray(self.sim.fleet.pos),
+            "fleet_kdb": np.asarray(self.sim.fleet.k_db),
+            "fleet_bad": np.asarray(self.sim.fleet._bad),
+        }
+        tree = restore_checkpoint(self.ckpt_dir, step, like)
+        self.sim.params = tree["params"]
+        self._delayed = list(zip(tree["delayed"],
+                                 aux["delayed_staleness"]))
+        fleet = self.sim.fleet
+        fleet.pos = np.asarray(tree["fleet_pos"])
+        fleet.k_db = np.asarray(tree["fleet_kdb"])
+        fleet._bad = np.asarray(tree["fleet_bad"])
+        self.sim.rng.bit_generator.state = aux["sim_rng"]
+        fleet.rng.bit_generator.state = aux["fleet_rng"]
+        self.registry = ClientRegistry.from_json(aux["registry"])
+        self.round = int(aux["round"])
+        self.log = SimLog()
+        for r in aux["rounds_log"]:
+            self.log.add(RoundLog(**r))
+
+    # -- metrics log ---------------------------------------------------------
+    def _emit_metrics(self, rlog: RoundLog):
+        if self.metrics_path is None:
+            return
+        stal = [self.registry.staleness(r.client_id, rlog.round)
+                for r in self.registry.records()]
+        stal = [s for s in stal if s is not None]
+        row = dict(asdict(rlog), scheme=self.cfg.scheme,
+                   seed=self.cfg.seed,
+                   registered=len(self.registry.records()),
+                   mean_staleness=(float(np.mean(stal)) if stal else None))
+        os.makedirs(os.path.dirname(os.path.abspath(self.metrics_path)),
+                    exist_ok=True)
+        with open(self.metrics_path, "a") as f:
+            f.write(json.dumps(row) + "\n")
+
+
+# ---------------------------------------------------------------------------
+# the supervisor
+# ---------------------------------------------------------------------------
+
+def run_with_restarts(cfg: HSFLConfig, *, ckpt_dir: str, fault_plan=None,
+                      rounds: Optional[int] = None, max_restarts: int = 10,
+                      verbose: bool = False, **server_kw
+                      ) -> Tuple[FLServer, int]:
+    """Run a server to completion, eating injected crashes: each
+    ``ServerCrash`` is marked consumed and a *fresh* server resumes from
+    the latest committed checkpoint.  Returns (server, n_restarts)."""
+    plan = as_fault_plan(fault_plan)
+    consumed: set = set()
+    restarts = 0
+    while True:
+        server = FLServer(cfg, ckpt_dir=ckpt_dir, fault_plan=plan,
+                          skip_crashes=frozenset(consumed), **server_kw)
+        try:
+            server.serve(rounds=rounds, verbose=verbose)
+            return server, restarts
+        except ServerCrash as e:
+            consumed.add((e.round_id, e.phase))
+            restarts += 1
+            if restarts > max_restarts:
+                raise RuntimeError(
+                    f"server crashed {restarts} times; giving up") from e
+            if verbose:
+                print(f"[supervisor] crash at round {e.round_id} "
+                      f"({e.phase}); restarting from "
+                      f"step {latest_step(ckpt_dir)}")

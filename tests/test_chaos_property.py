@@ -1,0 +1,78 @@
+"""Seeded chaos property test (hypothesis-gated like test_property.py).
+
+The recoverability contract of the serving path: for ANY fault plan made
+only of *recoverable* faults — duplicate deliveries, corrupt payloads
+(refused + retried), injected server crashes (resumed from checkpoint) —
+the served global model and per-round trajectory are bit-identical to the
+fault-free ``Experiment.run(engine="loop")`` run on the same seed.
+"""
+import jax
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed; property tests skipped")
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.api import Experiment
+from repro.core.faults import FaultPlan
+from repro.core.hsfl import HSFLConfig
+from repro.serving.fl_server import FLServer, run_with_restarts
+
+CFG = HSFLConfig(scheme="opt", b=2, rounds=2, n_uavs=8, k_select=4,
+                 n_train=400, n_test=100, steps_per_epoch=2, local_epochs=4,
+                 use_fused_round=False, seed=0)
+_REF = {}
+
+
+def reference():
+    """The fault-free loop-engine trajectory + final model (computed once)."""
+    if not _REF:
+        log = Experiment(CFG).with_scheme("opt", b=2).run(engine="loop")
+        server = FLServer(CFG)
+        server.serve()
+        _REF["log"] = log
+        _REF["params"] = server.params
+    return _REF
+
+
+def assert_matches_reference(server):
+    ref = reference()
+    for a, s in zip(ref["log"].rounds, server.log.rounds):
+        assert (a.selected, a.arrived_final, a.used_snapshot,
+                a.dropped) == (s.selected, s.arrived_final,
+                               s.used_snapshot, s.dropped)
+        assert a.test_acc == s.test_acc
+    for x, y in zip(jax.tree_util.tree_leaves(ref["params"]),
+                    jax.tree_util.tree_leaves(server.params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@given(seed=st.integers(0, 2**31 - 1),
+       p_dup=st.floats(0.0, 0.6),
+       p_corrupt=st.floats(0.0, 0.4))
+@settings(max_examples=6, deadline=None)
+def test_recoverable_chaos_preserves_the_trajectory(seed, p_dup, p_corrupt):
+    plan = FaultPlan.random(seed, CFG.rounds, range(CFG.n_uavs),
+                            p_dup=p_dup, p_corrupt=p_corrupt)
+    assert plan.recoverable
+    server = FLServer(CFG, fault_plan=plan)
+    server.serve()
+    assert_matches_reference(server)
+
+
+@given(seed=st.integers(0, 2**31 - 1),
+       crash_round=st.integers(1, 2))
+@settings(max_examples=4, deadline=None)
+def test_chaos_with_crash_and_restart_preserves_the_trajectory(
+        tmp_path_factory, seed, crash_round):
+    plan = FaultPlan.random(seed, CFG.rounds, range(CFG.n_uavs),
+                            p_dup=0.3, p_corrupt=0.2,
+                            crash_rounds=(crash_round,))
+    assert plan.recoverable
+    d = tmp_path_factory.mktemp("chaos")
+    server, restarts = run_with_restarts(CFG, ckpt_dir=str(d),
+                                         fault_plan=plan)
+    assert restarts == 1
+    assert_matches_reference(server)

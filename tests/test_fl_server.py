@@ -1,0 +1,350 @@
+"""Fault-tolerant FL aggregation service (serving/fl_server).
+
+The two contracts PR 6 pins:
+
+  1. *Trajectory*: fault-free (and recoverable-fault) serving reproduces
+     the host reference loop bit-for-bit — same per-round
+     arrivals/rescues/bytes, same final global model.
+  2. *Durability*: a server killed at any round phase resumes from the
+     latest committed msgpack checkpoint and finishes with the same
+     global model as an uninterrupted run on the same seed.
+"""
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import Experiment
+from repro.core.faults import (BackoffPolicy, FaultPlan, RetriesExhausted,
+                               UploadTimeout, retry_call)
+from repro.core.hsfl import HSFLConfig, HSFLSimulation
+from repro.serving.fl_server import (ClientRegistry, FLServer, RoundInbox,
+                                     UploadMsg, run_with_restarts)
+
+
+def small_cfg(**kw):
+    base = dict(scheme="opt", b=2, rounds=3, n_uavs=8, k_select=4,
+                n_train=400, n_test=100, steps_per_epoch=2, local_epochs=4,
+                use_fused_round=False, seed=0)
+    base.update(kw)
+    return HSFLConfig(**base)
+
+
+def assert_trees_equal(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@pytest.fixture(scope="module")
+def clean_opt():
+    """The uninterrupted fault-free serve on the opt scheme."""
+    server = FLServer(small_cfg())
+    log = server.serve()
+    return server, log
+
+
+# ---------------------------------------------------------------------------
+# contract 1: trajectory parity with the loop engine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheme,b", [("opt", 2), ("async", 1),
+                                      ("discard", 1)])
+def test_fault_free_serving_matches_loop_engine(scheme, b):
+    cfg = small_cfg(scheme=scheme, b=b, rounds=2)
+    ref = HSFLSimulation(cfg)
+    ref_log = ref.run()
+    server = FLServer(cfg)
+    log = server.serve()
+    for a, s in zip(ref_log.rounds, log.rounds):
+        assert (a.selected, a.arrived_final, a.used_snapshot,
+                a.delayed, a.dropped) == \
+               (s.selected, s.arrived_final, s.used_snapshot,
+                s.delayed, s.dropped)
+        assert a.bytes_sent == pytest.approx(s.bytes_sent)
+        assert a.test_acc == s.test_acc
+    assert_trees_equal(ref.params, server.params)
+
+
+def test_serve_matches_experiment_loop_engine(clean_opt):
+    _, log = clean_opt
+    ref_log = Experiment(small_cfg()).with_scheme("opt", b=2) \
+        .run(engine="loop")
+    for a, s in zip(ref_log.rounds, log.rounds):
+        assert (a.arrived_final, a.used_snapshot, a.dropped) == \
+               (s.arrived_final, s.used_snapshot, s.dropped)
+        assert a.test_acc == s.test_acc
+
+
+def test_experiment_serve_facade(clean_opt):
+    clean_server, _ = clean_opt
+    server = Experiment(small_cfg()).with_scheme("opt", b=2).serve()
+    log = server.serve()
+    assert len(log.rounds) == 3
+    assert_trees_equal(clean_server.params, server.params)
+
+
+# ---------------------------------------------------------------------------
+# duplicates / corruption are provably recoverable
+# ---------------------------------------------------------------------------
+
+def test_duplicate_uploads_are_idempotent(clean_opt):
+    clean_server, _ = clean_opt
+    server = FLServer(small_cfg(),
+                      fault_plan="dup@r1:c*x2; dup@r2:c*; dup@r3:c*")
+    log = server.serve()
+    assert sum(r.duplicates_rejected for r in log.rounds) > 0
+    # aggregation output is identical with and without the duplicates
+    assert_trees_equal(clean_server.params, server.params)
+    for a, s in zip(clean_server.log.rounds, log.rounds):
+        assert a.test_acc == s.test_acc
+        assert (a.arrived_final, a.used_snapshot) == \
+               (s.arrived_final, s.used_snapshot)
+
+
+def test_corrupt_payloads_refused_and_retried(clean_opt):
+    clean_server, _ = clean_opt
+    server = FLServer(small_cfg(), fault_plan="corrupt@r1:c*; corrupt@r2:c*")
+    log = server.serve()
+    assert sum(r.corrupt_rejected for r in log.rounds) > 0
+    assert sum(r.retries for r in log.rounds) > 0
+    assert_trees_equal(clean_server.params, server.params)
+
+
+# ---------------------------------------------------------------------------
+# contract 2: kill-and-restart chaos
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("phase", ["train", "close", "checkpoint"])
+def test_server_killed_midround_resumes_bit_compatibly(tmp_path, clean_opt,
+                                                       phase):
+    clean_server, clean_log = clean_opt
+    server, restarts = run_with_restarts(
+        small_cfg(), ckpt_dir=str(tmp_path / phase),
+        fault_plan=f"crash@r2:{phase}")
+    assert restarts == 1
+    assert len(server.log.rounds) == 3
+    assert_trees_equal(clean_server.params, server.params)
+    for a, s in zip(clean_log.rounds, server.log.rounds):
+        assert a.test_acc == s.test_acc
+
+
+def test_crash_during_checkpoint_leaves_no_committed_garbage(tmp_path,
+                                                             clean_opt):
+    """A 'checkpoint' crash writes step dir + payload but no COMMIT; the
+    resumed server must fall back to the previous committed step."""
+    from repro.checkpoint import latest_step
+    d = str(tmp_path / "ck")
+    plan = FaultPlan.parse("crash@r2:checkpoint")
+    first = FLServer(small_cfg(), ckpt_dir=d, fault_plan=plan)
+    from repro.core.faults import ServerCrash
+    with pytest.raises(ServerCrash):
+        first.serve()
+    # the half-written step 2 exists on disk but is invisible
+    assert os.path.isdir(os.path.join(d, "2"))
+    assert not os.path.exists(os.path.join(d, "2", "COMMIT"))
+    assert latest_step(d) == 1
+    server = FLServer(small_cfg(), ckpt_dir=d, fault_plan=plan,
+                      skip_crashes={(2, "checkpoint")})
+    assert server.round == 1          # resumed from the committed step
+    server.serve()
+    clean_server, _ = clean_opt
+    assert_trees_equal(clean_server.params, server.params)
+
+
+def test_resume_after_completion_is_a_noop(tmp_path, clean_opt):
+    d = str(tmp_path / "done")
+    FLServer(small_cfg(), ckpt_dir=d).serve()
+    server = FLServer(small_cfg(), ckpt_dir=d)
+    assert server.round == 3
+    log = server.serve()              # already complete
+    assert len(log.rounds) == 3
+    clean_server, _ = clean_opt
+    assert_trees_equal(clean_server.params, server.params)
+
+
+# ---------------------------------------------------------------------------
+# degradation to the scheme's rescue/delayed path
+# ---------------------------------------------------------------------------
+
+def test_drop_fault_degrades_to_scheme_path():
+    cfg = small_cfg(rounds=2)
+    server = FLServer(cfg, fault_plan="drop@r1:c*; drop@r2:c*")
+    log = server.serve()
+    # black-holed finals exhaust their retries ...
+    assert sum(r.retries for r in log.rounds) > 0
+    for r in log.rounds:
+        assert r.arrived_final == 0
+        # ... and every scheduled client resolves through the scheme path
+        assert r.used_snapshot + r.dropped + r.delayed == r.selected
+
+
+def test_delayed_upload_rejected_as_stale_then_rescued():
+    cfg = small_cfg(rounds=2)
+    clean = FLServer(cfg)
+    clean_log = clean.serve()
+    server = FLServer(cfg, fault_plan="delay@r1:c*; delay@r2:c*")
+    log = server.serve()
+    lost = sum(r.arrived_final for r in clean_log.rounds) \
+        - sum(r.arrived_final for r in log.rounds)
+    assert lost > 0
+    assert sum(r.stale_rejected for r in log.rounds) == lost
+    # opt degrades gracefully: snapshots rescue what the delay lost
+    assert sum(r.used_snapshot for r in log.rounds) >= \
+        sum(r.used_snapshot for r in clean_log.rounds)
+
+
+def test_quorum_holds_round_open_for_late_uploads():
+    cfg = small_cfg(rounds=2)
+    clean = FLServer(cfg)
+    clean.serve()
+    server = FLServer(cfg, fault_plan="delay@r1:c*; delay@r2:c*",
+                      quorum=1.0)
+    log = server.serve()
+    assert sum(r.late_accepted for r in log.rounds) > 0
+    assert not all(r.quorum_met for r in log.rounds)
+    # with every late upload admitted the trajectory is fault-free again
+    assert_trees_equal(clean.params, server.params)
+
+
+# ---------------------------------------------------------------------------
+# registry: join/drop mid-training, staleness
+# ---------------------------------------------------------------------------
+
+def test_registry_join_and_drop_mid_training(tmp_path):
+    d = str(tmp_path / "reg")
+    cfg = small_cfg()
+    server = FLServer(cfg, ckpt_dir=d, initial_clients=range(4))
+    r1 = server.step()
+    assert r1.selected + r1.unregistered_skipped >= r1.selected
+    server.register_client(6)
+    server.drop_client(0)
+    assert server.registry.schedulable(6, 2)
+    assert not server.registry.schedulable(0, 2)
+    server.step()
+    server.step()
+    # registry state survives checkpoint/resume
+    resumed = FLServer(cfg, ckpt_dir=d, initial_clients=range(4))
+    assert resumed.round == 3
+    assert resumed.registry.schedulable(6, 4)
+    assert not resumed.registry.schedulable(0, 4)
+
+
+def test_registry_staleness_tracking():
+    reg = ClientRegistry(range(3))
+    assert reg.staleness(0, 5) is None
+    reg.record_upload(0, 2)
+    assert reg.staleness(0, 5) == 3
+    rec = reg.register(7, current_round=4)
+    assert rec.joined_round == 5
+    assert not reg.schedulable(7, 4) and reg.schedulable(7, 5)
+
+
+def test_metrics_jsonl(tmp_path):
+    d = str(tmp_path / "m")
+    FLServer(small_cfg(rounds=2), ckpt_dir=d,
+             fault_plan="dup@r1:c*").serve()
+    rows = [json.loads(l) for l in open(os.path.join(d, "metrics.jsonl"))]
+    assert [r["round"] for r in rows] == [1, 2]
+    for key in ("arrived_final", "used_snapshot", "duplicates_rejected",
+                "stale_rejected", "corrupt_rejected", "retries",
+                "bytes_sent", "test_acc", "scheme", "registered"):
+        assert key in rows[0], key
+
+
+# ---------------------------------------------------------------------------
+# inbox + wire-format units
+# ---------------------------------------------------------------------------
+
+def test_inbox_classification_and_snapshot_overwrite():
+    tree = {"w": np.arange(4, dtype=np.float32)}
+    inbox = RoundInbox(round_id=3)
+    final = UploadMsg.build(1, 3, "final", 1, tree, 64.0)
+    assert inbox.offer(final) == "accepted"
+    assert inbox.offer(final) == "duplicate"
+    assert inbox.duplicates == 1
+    stale = UploadMsg.build(1, 2, "final", 2, tree, 64.0)
+    assert inbox.offer(stale) == "stale"
+    # snapshots: re-delivery of the same seq is a duplicate, a newer seq
+    # overwrites (Alg. 2: previous snapshot is overwritten)
+    s1 = UploadMsg.build(2, 3, "snapshot", 1, {"w": np.zeros(4, np.float32)},
+                         64.0)
+    s2 = UploadMsg.build(2, 3, "snapshot", 2, tree, 64.0)
+    assert inbox.offer(s1) == "accepted"
+    assert inbox.offer(s1) == "duplicate"
+    assert inbox.offer(s2) == "accepted"
+    got = inbox.get(2, "snapshot")
+    assert got.seq == 2
+
+
+def test_corrupt_payload_crc_refused():
+    from repro.core.faults import CorruptPayload
+    inbox = RoundInbox(round_id=1)
+    msg = UploadMsg.build(0, 1, "final", 1,
+                          {"w": np.ones(8, np.float32)}, 64.0)
+    with pytest.raises(CorruptPayload):
+        inbox.offer(msg.corrupted())
+    assert inbox.corrupt == 1
+    assert inbox.get(0, "final") is None
+
+
+# ---------------------------------------------------------------------------
+# faults module units
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_grammar_roundtrip():
+    text = "dup@r2:c1;corrupt@r1:c*x2;drop@r4:c0;delay@r3:c2;crash@r5:checkpoint"
+    plan = FaultPlan.parse(text)
+    assert str(plan) == text
+    assert plan.count("dup", 2, 1) == 1
+    assert plan.count("dup", 2, 0) == 0
+    assert plan.count("corrupt", 1, 9) == 2      # c* hits every client
+    assert plan.crash_phase(5) == "checkpoint"
+    assert plan.crash_phase(4) is None
+    assert not plan.recoverable                  # drop/delay move the model
+    assert FaultPlan.parse("dup@r1:c*; crash@r2:close").recoverable
+    assert not FaultPlan.parse("")
+    with pytest.raises(ValueError):
+        FaultPlan.parse("explode@r1")
+    with pytest.raises(ValueError):
+        FaultPlan.parse("crash@r1:sideways")
+
+
+def test_fault_plan_random_is_seeded():
+    a = FaultPlan.random(7, 5, range(8), p_dup=0.2, p_corrupt=0.1,
+                         crash_rounds=(3,))
+    b = FaultPlan.random(7, 5, range(8), p_dup=0.2, p_corrupt=0.1,
+                         crash_rounds=(3,))
+    assert str(a) == str(b)
+    assert a.crash_phase(3) is not None
+
+
+def test_backoff_policy_and_retry_call():
+    pol = BackoffPolicy(max_attempts=3, base_s=0.1, factor=2.0,
+                        max_delay_s=10.0, jitter=0.5)
+    rng = np.random.default_rng(0)
+    d0, d1 = pol.delay_s(0, rng), pol.delay_s(1, rng)
+    assert 0.05 <= d0 <= 0.1 and 0.1 <= d1 <= 0.2
+    # deterministic under the same seed
+    rng2 = np.random.default_rng(0)
+    assert pol.delay_s(0, rng2) == d0
+
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise UploadTimeout("not yet")
+        return "ok"
+
+    res = retry_call(flaky, pol, np.random.default_rng(0))
+    assert res.value == "ok" and res.retries == 2 and res.backoff_s > 0
+
+    def dead():
+        raise UploadTimeout("never")
+
+    with pytest.raises(RetriesExhausted):
+        retry_call(dead, pol, np.random.default_rng(0))

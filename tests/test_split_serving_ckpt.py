@@ -1,4 +1,5 @@
 """Split learning, serving consistency, checkpoint roundtrip."""
+import json
 import os
 import tempfile
 
@@ -7,7 +8,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.checkpoint import (latest_step, restore_aux, restore_checkpoint,
+                              save_checkpoint)
+from repro.checkpoint.msgpack_ckpt import _decode_leaf, _encode_leaf
 from repro.configs import get_config
 from repro.core.split import merge_stacked, split_stacked
 from repro.models import build_model
@@ -89,3 +92,66 @@ def test_checkpoint_rejects_shape_mismatch():
         save_checkpoint(d, 0, tree)
         with pytest.raises(ValueError):
             restore_checkpoint(d, 0, {"w": jnp.zeros((3,))})
+
+
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16, np.int32])
+def test_decoded_leaves_are_writable(dtype):
+    """np.frombuffer over msgpack bytes is read-only; _decode_leaf must
+    copy so restored pytrees behave like fresh arrays (the FL server
+    mutates restored fleet state in place)."""
+    src = jnp.arange(6, dtype=dtype).reshape(2, 3)
+    arr = _decode_leaf(_encode_leaf(src))
+    assert arr.flags.writeable
+    arr[0, 0] = arr[0, 1]  # must not raise "assignment destination read-only"
+    restored = np.asarray(_decode_leaf(_encode_leaf(src)), np.float32)
+    np.testing.assert_array_equal(restored, np.asarray(src, np.float32))
+
+
+def test_restore_validates_against_manifest():
+    """Payload/manifest disagreement is reported as corruption naming the
+    leaf, not a silent mis-shaped restore."""
+    tree = {"w": jnp.ones((2, 3)), "b": jnp.zeros((4,))}
+    with tempfile.TemporaryDirectory() as d:
+        path = save_checkpoint(d, 0, tree)
+        mpath = os.path.join(path, "MANIFEST.json")
+        with open(mpath) as f:
+            manifest = json.load(f)
+        manifest["leaves"][1]["shape"] = [7, 7]
+        with open(mpath, "w") as f:
+            json.dump(manifest, f)
+        with pytest.raises(ValueError, match="leaf 1.*corrupt"):
+            restore_checkpoint(d, 0, tree)
+        # leaf-count disagreement is also inconsistency, not an index error
+        manifest["leaves"] = manifest["leaves"][:1]
+        with open(mpath, "w") as f:
+            json.dump(manifest, f)
+        with pytest.raises(ValueError, match="inconsistent"):
+            restore_checkpoint(d, 0, tree)
+
+
+def test_latest_step_skips_crashed_writer():
+    """A step directory without its COMMIT marker (writer died mid-save)
+    must be invisible: resume from the last committed step, no error."""
+    tree = {"w": jnp.zeros((2, 2))}
+    with tempfile.TemporaryDirectory() as d:
+        assert latest_step(d) is None
+        save_checkpoint(d, 1, tree)
+        # simulate a crash during the step-5 save: payload written, no COMMIT
+        half = save_checkpoint(d, 5, tree)
+        os.remove(os.path.join(half, "COMMIT"))
+        # and a stray digit-named file that is not a step directory at all
+        open(os.path.join(d, "9"), "w").close()
+        assert latest_step(d) == 1
+        got = restore_checkpoint(d, 1, tree)
+        np.testing.assert_array_equal(np.asarray(got["w"]),
+                                      np.asarray(tree["w"]))
+
+
+def test_aux_sidecar_roundtrip():
+    tree = {"w": jnp.zeros((2,))}
+    aux = {"round": 3, "rng": {"state": [1, 2, 3]}, "note": "hi"}
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 3, tree, aux=aux)
+        assert restore_aux(d, 3) == aux
+        save_checkpoint(d, 4, tree)  # no aux saved
+        assert restore_aux(d, 4) is None
