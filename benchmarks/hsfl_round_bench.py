@@ -5,22 +5,42 @@ Measures rounds/sec of ``HSFLSimulation.run_round`` at the paper's scale
 
   host          — the original Python control loop over OppTransmitter
   fused         — the single-jit device round (core/fused_round) on the
-                  default forward policy: the pool-first custom-VJP
-                  training step (kernels/fused_cnn) + donated round
-                  carries.  ``--kernel``/``--precision`` reroute it.
+                  default forward policy: the *blocked* stacked-cohort
+                  training step (kernels/fused_cnn ``*_k`` twins — the
+                  user axis inside the kernels, not vmap) + donated round
+                  carries.  ``--kernel``/``--precision``/``--block-k``
+                  reroute it.
   fused_im2col  — the same round on the PR-1 step (forward_im2col +
-                  autodiff, no donation-relevant change): the compute
-                  floor the custom-VJP step is measured against,
-                  *within the same run*
-  fused_bf16    — default kernel at precision=bf16 (mixed precision; on
-                  CPU bf16 is emulated, so this row is a numerics
-                  regression canary, not a speed win — on TPU it is the
-                  point)
-  fused_pallas  — the Pallas kernel suite; interpret mode off-TPU (value
-                  pin + smoke, expect it slower on CPU)
+                  autodiff): the compute floor the fused step is
+                  measured against, *within the same run*
+  fused_bf16    — blocked kernels at precision=bf16 (native AMX/AVX512
+                  bf16 GEMMs under the tuned launch env; epoch-boundary
+                  master casts).  Paired at fig3 scale AND at
+                  ``--bf16-batch`` (the step is elementwise-bound at the
+                  paper's toy batch=10 — bf16's GEMM win shows from
+                  batch ~32 up; both rows are recorded honestly).
+  fused_pallas  — the blocked Pallas kernel suite; interpret mode
+                  off-TPU.  Blocked grids collapse interpret cost to one
+                  Python-evaluated program per layer per step, so this
+                  row now sits near the XLA path instead of 20x+ off.
+  fused_vmapped — the PR-4 vmap-of-per-user-kernels step
+                  (``batch_users=False``): the baseline the blocked
+                  rows are paired against.
   fused_sharded — default policy, with the stacked-user axis sharded over
                   N forced host devices (bench-only XLA_FLAGS subprocess)
   fused_codec   — fused with int8 delta-codec snapshots
+
+All ``fused*`` kernel/precision variants above are measured **paired**:
+interleaved round-robin in ONE process (the container swings ±50%
+between subprocesses — see Methodology).  A ``step_bench`` child
+additionally microbenchmarks the training *epoch* alone
+(blocked-vs-vmapped for xla and pallas-interpret, f32-vs-bf16, the
+``block_k`` tiling ladder) — the CI perf-guard reuses it.
+
+Unless ``--no-tuned-env``, the tuned launch environment
+(``repro.launch.env``: legacy XLA:CPU runtime flag, tcmalloc when
+present) is exported to every measurement child; the BENCH record notes
+which flags were applied.
 
 plus the PR-2 *grid* engines, which time the whole Fig. 3(b) panel
 (3 schemes × ``--grid-seeds`` seeds) instead of one round:
@@ -44,12 +64,14 @@ plus the PR-2 *grid* engines, which time the whole Fig. 3(b) panel
 Methodology: each engine runs in its own subprocess (so XLA device forcing
 can't leak); per engine we run ``--warmup`` rounds first on the same
 simulation instance so every K-bucket jit variant is compiled, then time
-``--rounds`` rounds and report the mean.  Exception: the ``fused`` vs
-``fused_im2col`` comparison is measured *interleaved in one process*
-(round of one, round of the other, repeated): the bench container's
-throughput swings ±50% minute to minute, so sequential subprocesses
-minutes apart cannot resolve the 3–30% step-level delta — those two rows
-carry ``"paired": true``.  Results append to BENCH_hsfl.json.
+``--rounds`` rounds and report the mean.  Exception: every fused
+kernel/precision comparison is measured *interleaved in one process*
+(round of variant A, round of variant B, ..., repeated): the bench
+container's throughput swings ±50% minute to minute, so sequential
+subprocesses minutes apart cannot resolve step-level deltas — those rows
+carry ``"paired": true``, and the ``step_bench`` rows additionally report
+per-case *medians* over interleaved reps.  Results append to
+BENCH_hsfl.json.
 
 ``--scheme`` runs the single-round engines under any *registered*
 transmission scheme (the ``repro.core.schemes`` registry — the choices
@@ -70,13 +92,18 @@ import sys
 
 
 ENGINES = ("host", "fused", "fused_im2col", "fused_bf16", "fused_pallas",
-           "fused_codec", "fused_sharded",
+           "fused_vmapped", "fused_codec", "fused_sharded",
            "grid_loop", "grid_sweep", "grid_sweep_codec")
 
-# engine name -> forward-policy override (None = use the CLI flags)
-ENGINE_POLICY = {"fused_im2col": ("im2col", "f32"),
-                 "fused_bf16": (None, "bf16"),
-                 "fused_pallas": ("pallas", None)}
+# engine name -> HSFLConfig forward-policy overrides (missing = CLI flags)
+ENGINE_POLICY = {"fused_im2col": dict(kernel="im2col", precision="f32"),
+                 "fused_bf16": dict(precision="bf16"),
+                 "fused_pallas": dict(kernel="pallas"),
+                 "fused_vmapped": dict(batch_users=False)}
+
+# the default paired-variant set (round-robin, one process)
+PAIR_VARIANTS = ("fused", "fused_im2col", "fused_bf16", "fused_pallas",
+                 "fused_vmapped")
 
 
 def measure_grid(engine: str, rounds: int, seeds: int) -> dict:
@@ -133,25 +160,35 @@ def measure_grid(engine: str, rounds: int, seeds: int) -> dict:
 
 
 def measure_pair(warmup: int, rounds: int, kernel: str = "xla",
-                 precision: str = "f32", scheme: str = "opt") -> dict:
-    """Interleave the policy-selected fused engine (``--kernel``/
-    ``--precision``; default the custom-VJP xla/f32 step) against the PR-1
-    autodiff baseline (kernel=im2col) round by round in ONE process, so
-    both see the same container throttling — the only way this box can
-    resolve their delta (see module docstring)."""
+                 precision: str = "f32", scheme: str = "opt",
+                 block_k: int = 0, variants=None,
+                 batch_size: int = 0) -> dict:
+    """Interleave every requested kernel/precision variant round-robin in
+    ONE process, so all rows see the same container throttling — the only
+    way this box can resolve step-level deltas (see module docstring).
+
+    ``variants`` defaults to ``PAIR_VARIANTS``; the ``fused`` member uses
+    the CLI ``--kernel``/``--precision``/``--block-k``, the rest take
+    their ``ENGINE_POLICY`` override.  ``batch_size > 0`` reruns the pair
+    at a non-paper batch (the bf16-vs-f32 operating-point rows); its rows
+    are suffixed ``@b<N>`` so fig3-scale rows stay unambiguous."""
     import time
 
     import jax
 
     from repro.core.hsfl import HSFLConfig, HSFLSimulation
 
-    pair = {"fused": (kernel, precision), "fused_im2col": ("im2col", "f32")}
-    sims, state = {}, {}
-    for name, (kern, prec) in pair.items():
-        cfg = HSFLConfig(scheme=scheme, b=2, rounds=warmup + rounds,
-                         kernel=kern, precision=prec)
+    names = tuple(variants) if variants else PAIR_VARIANTS
+    base = dict(kernel=kernel, precision=precision, block_k=block_k)
+    sims, state, policy = {}, {}, {}
+    for name in names:
+        over = dict(base, **ENGINE_POLICY.get(name, {}))
+        if batch_size > 0:
+            over["batch_size"] = batch_size
+        cfg = HSFLConfig(scheme=scheme, b=2, rounds=warmup + rounds, **over)
         sims[name] = HSFLSimulation(cfg)
         state[name] = ([], 1)
+        policy[name] = cfg
     for name, sim in sims.items():
         delayed, t = state[name]
         for _ in range(warmup):
@@ -171,19 +208,112 @@ def measure_pair(warmup: int, rounds: int, kernel: str = "xla",
             sel[name] += log.selected
             state[name] = (delayed, t + 1)
     rows = []
-    for name, (kern, prec) in pair.items():
+    suffix = f"@b{batch_size}" if batch_size > 0 else ""
+    for name in names:
+        cfg = policy[name]
         ms = tot[name] / rounds * 1e3
-        rows.append({"engine": name, "ms_per_round": round(ms, 1),
+        rows.append({"engine": name + suffix, "ms_per_round": round(ms, 1),
                      "rounds_per_sec": round(1e3 / ms, 3),
                      "mean_selected": round(sel[name] / rounds, 1),
-                     "scheme": scheme, "kernel": kern, "precision": prec,
+                     "scheme": scheme, "kernel": cfg.kernel,
+                     "precision": cfg.precision, "block_k": cfg.block_k,
+                     "batch_users": cfg.batch_users,
+                     "batch_size": cfg.batch_size,
                      "paired": True, "devices": len(jax.devices())})
     return {"engine": "fused_pair", "rows": rows}
 
 
+def measure_step_bench(reps: int = 30, warmup: int = 3,
+                       bf16_batch: int = 32) -> dict:
+    """Microbench the training *epoch* alone (no round machinery) at fig3
+    scale: blocked vs vmapped grids for xla and pallas-interpret, bf16 vs
+    f32, and the ``block_k`` tiling ladder — all interleaved per rep, with
+    per-case medians (robust to container throttling spikes).
+
+    The CI perf-guard replays the ``xla_blocked`` / ``xla_vmapped`` pair
+    from this function and asserts blocked ≤ 1.3x vmapped.
+    """
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.fused_cnn import ForwardPolicy, make_stacked_epoch_fn
+    from repro.models.cnn import init_cnn
+
+    k, steps, bs, lr = 10, 4, 10, 0.01
+    on_tpu = jax.default_backend() == "tpu"
+    cases = {
+        "xla_blocked": (ForwardPolicy(), bs),
+        "xla_vmapped": (ForwardPolicy(batch_users=False), bs),
+        "xla_blocked_bk5": (ForwardPolicy(block_k=5), bs),
+        "xla_bf16": (ForwardPolicy(precision="bf16"), bs),
+        "pallas_blocked": (ForwardPolicy(kernel="pallas",
+                                         interpret=not on_tpu), bs),
+        "pallas_blocked_bk5": (ForwardPolicy(kernel="pallas", block_k=5,
+                                             interpret=not on_tpu), bs),
+        "pallas_vmapped": (ForwardPolicy(kernel="pallas", batch_users=False,
+                                         interpret=not on_tpu), bs),
+        # the bf16 operating point: GEMM-bound from batch ~32 up
+        f"xla_f32_b{bf16_batch}": (ForwardPolicy(), bf16_batch),
+        f"xla_bf16_b{bf16_batch}": (ForwardPolicy(precision="bf16"),
+                                    bf16_batch),
+    }
+
+    key = jax.random.PRNGKey(0)
+    stacked = jax.vmap(init_cnn)(jax.random.split(key, k))
+    data = {}
+    for b in {b for _, b in cases.values()}:
+        kx, ky = jax.random.split(jax.random.fold_in(key, b))
+        data[b] = (jax.random.normal(kx, (k, steps, b, 28, 28, 1),
+                                     jnp.float32),
+                   jax.random.randint(ky, (k, steps, b), 0, 10))
+
+    fns = {}
+    for name, (pol, b) in cases.items():
+        fn = jax.jit(make_stacked_epoch_fn(pol, lr))
+        xs, ys = data[b]
+        for _ in range(warmup):
+            jax.block_until_ready(fn(stacked, xs, ys))
+        fns[name] = (fn, xs, ys)
+
+    times = {name: [] for name in cases}
+    for _ in range(reps):
+        for name, (fn, xs, ys) in fns.items():
+            t0 = time.time()
+            jax.block_until_ready(fn(stacked, xs, ys))
+            times[name].append(time.time() - t0)
+
+    med = {name: sorted(ts)[len(ts) // 2] * 1e3 for name, ts in times.items()}
+    rows = [{"case": name, "ms_per_epoch": round(med[name], 2),
+             "kernel": cases[name][0].kernel,
+             "precision": cases[name][0].precision,
+             "block_k": cases[name][0].block_k,
+             "batch_users": cases[name][0].batch_users,
+             "batch_size": cases[name][1]}
+            for name in cases]
+    ratios = {
+        "xla_blocked_vs_vmapped":
+            round(med["xla_vmapped"] / med["xla_blocked"], 2),
+        "pallas_blocked_vs_vmapped":
+            round(med["pallas_vmapped"] / med["pallas_blocked"], 2),
+        "pallas_vs_xla_blocked":
+            round(med["pallas_blocked"] / med["xla_blocked"], 2),
+        "bf16_vs_f32": round(med["xla_blocked"] / med["xla_bf16"], 2),
+        f"bf16_vs_f32_b{bf16_batch}":
+            round(med[f"xla_f32_b{bf16_batch}"]
+                  / med[f"xla_bf16_b{bf16_batch}"], 2),
+    }
+    return {"engine": "step_bench",
+            "config": {"k": k, "steps_per_epoch": steps, "batch_size": bs,
+                       "bf16_batch": bf16_batch, "reps": reps,
+                       "stat": "median"},
+            "rows": rows, "ratios": ratios}
+
+
 def measure(engine: str, warmup: int, rounds: int,
             kernel: str = "xla", precision: str = "f32",
-            scheme: str = "opt") -> dict:
+            scheme: str = "opt", block_k: int = 0) -> dict:
     import time
 
     import jax
@@ -192,11 +322,11 @@ def measure(engine: str, warmup: int, rounds: int,
 
     if engine not in ENGINES:
         raise SystemExit(f"unknown engine {engine!r}; choose from {ENGINES}")
-    k_over, p_over = ENGINE_POLICY.get(engine, (None, None))
+    over = dict(kernel=kernel, precision=precision, block_k=block_k,
+                **ENGINE_POLICY.get(engine, {}))
     cfg = HSFLConfig(scheme=scheme, b=2, rounds=warmup + rounds,
                      use_fused_round=engine != "host",
-                     use_delta_codec=engine == "fused_codec",
-                     kernel=k_over or kernel, precision=p_over or precision)
+                     use_delta_codec=engine == "fused_codec", **over)
     sim = HSFLSimulation(cfg)
     delayed, t = [], 1
     for _ in range(warmup):
@@ -220,8 +350,13 @@ def measure(engine: str, warmup: int, rounds: int,
 
 
 def run_child(engine: str, args, devices: int = 1, tag: str = "",
-              rounds: int | None = None, warmup: int | None = None) -> dict:
-    env = dict(os.environ)
+              rounds: int | None = None, warmup: int | None = None,
+              extra=()) -> dict:
+    if args.no_tuned_env:
+        env = dict(os.environ)
+    else:
+        from repro.launch.env import tuned_env
+        env = tuned_env()
     env["PYTHONPATH"] = os.pathsep.join(
         [os.path.join(os.path.dirname(__file__), "..", "src")]
         + env.get("PYTHONPATH", "").split(os.pathsep))
@@ -234,9 +369,10 @@ def run_child(engine: str, args, devices: int = 1, tag: str = "",
          "--warmup", str(args.warmup if warmup is None else warmup),
          "--rounds", str(args.rounds if rounds is None else rounds),
          "--kernel", args.kernel, "--precision", args.precision,
-         "--scheme", args.scheme,
+         "--scheme", args.scheme, "--block-k", str(args.block_k),
+         "--bf16-batch", str(args.bf16_batch),
          "--grid-rounds", str(args.grid_rounds),
-         "--grid-seeds", str(args.grid_seeds)],
+         "--grid-seeds", str(args.grid_seeds)] + list(extra),
         capture_output=True, text=True, env=env,
         cwd=os.path.join(os.path.dirname(__file__), ".."))
     if out.returncode != 0:
@@ -245,8 +381,13 @@ def run_child(engine: str, args, devices: int = 1, tag: str = "",
     name = tag or engine
     if "rows" in rec:
         for row in rec["rows"]:
-            print(f"{row['engine']:18s} {row['ms_per_round']:8.1f} ms/round "
-                  f"({row['rounds_per_sec']:.3f} rounds/s, paired)")
+            if "ms_per_round" in row:
+                print(f"{row['engine']:18s} {row['ms_per_round']:8.1f} "
+                      f"ms/round ({row['rounds_per_sec']:.3f} rounds/s, "
+                      f"paired)")
+            else:
+                print(f"{row['case']:18s} {row['ms_per_epoch']:8.2f} "
+                      f"ms/epoch (step_bench)")
         return rec
     rec["engine"] = name
     if "ms_per_round" in rec:
@@ -278,14 +419,32 @@ def main() -> None:
                          "(kernels/fused_cnn.ForwardPolicy)")
     ap.add_argument("--precision", default="f32", choices=["f32", "bf16"],
                     help="compute precision for the default fused engine")
+    ap.add_argument("--block-k", type=int, default=0,
+                    help="user-tile size of the blocked kernel grid for "
+                         "the default fused engine (0 = whole cohort in "
+                         "one grid step)")
+    ap.add_argument("--bf16-batch", type=int, default=32,
+                    help="batch size for the second bf16-vs-f32 paired "
+                         "run (the GEMM-bound operating point; the "
+                         "paper's batch=10 round is elementwise-bound)")
+    ap.add_argument("--no-tuned-env", action="store_true",
+                    help="skip the tuned launch environment "
+                         "(repro.launch.env) for all measurement children")
+    ap.add_argument("--step-reps", type=int, default=30,
+                    help="interleaved reps for the step_bench engine")
+    ap.add_argument("--pair-variants", default="",
+                    help="(internal) comma list of fused_pair variants")
+    ap.add_argument("--pair-batch", type=int, default=0,
+                    help="(internal) batch-size override for fused_pair")
     from repro.core.schemes import registered_schemes
     ap.add_argument("--scheme", default="opt", choices=registered_schemes(),
                     help="transmission scheme for the single-round engines "
                          "(any registered repro.core.schemes name); "
                          "recorded per row in BENCH_hsfl.json")
     ap.add_argument("--skip-policy-rows", action="store_true",
-                    help="skip the fused_im2col/fused_bf16/fused_pallas "
-                         "policy comparison rows")
+                    help="pair only fused vs fused_im2col and skip the "
+                         "bf16 operating-point run and step_bench (CI "
+                         "smoke size)")
     ap.add_argument("--out", default="BENCH_hsfl.json")
     ap.add_argument("--engine", default=None,
                     help="(internal) measure one engine and print JSON")
@@ -296,52 +455,100 @@ def main() -> None:
             rec = measure_grid(args.engine, args.grid_rounds,
                                args.grid_seeds)
         elif args.engine == "fused_pair":
+            variants = ([v for v in args.pair_variants.split(",") if v]
+                        or None)
             rec = measure_pair(args.warmup, args.rounds,
                                kernel=args.kernel, precision=args.precision,
-                               scheme=args.scheme)
+                               scheme=args.scheme, block_k=args.block_k,
+                               variants=variants,
+                               batch_size=args.pair_batch)
+        elif args.engine == "step_bench":
+            rec = measure_step_bench(reps=args.step_reps,
+                                     bf16_batch=args.bf16_batch)
         else:
             rec = measure(args.engine, args.warmup, args.rounds,
                           kernel=args.kernel, precision=args.precision,
-                          scheme=args.scheme)
+                          scheme=args.scheme, block_k=args.block_k)
         print(json.dumps(rec))
         return
 
+    if not args.no_tuned_env:
+        # children inherit the tuned env via run_child/tuned_env(); applying
+        # it here too keeps a single source of truth for what was active
+        from repro.launch.env import apply_tuned_env
+        apply_tuned_env(verbose=True)
+
     recs = [run_child("host", args)]
-    recs += run_child("fused_pair", args)["rows"]
+    pair_extra = (["--pair-variants", "fused,fused_im2col"]
+                  if args.skip_policy_rows else ())
+    recs += run_child("fused_pair", args, extra=pair_extra)["rows"]
+    step = None
     if not args.skip_policy_rows:
-        # bf16 at full length (it is a numerics canary); the interpret-mode
-        # Pallas row at reduced length — off-TPU it only pins that the
-        # kernel path runs end to end, not its speed
-        recs.append(run_child("fused_bf16", args))
-        recs.append(run_child("fused_pallas", args,
-                              rounds=max(2, args.rounds // 4),
-                              warmup=min(2, args.warmup)))
+        # the bf16 operating point: same pair harness at --bf16-batch,
+        # where the step is GEMM- rather than elementwise-bound
+        recs += run_child(
+            "fused_pair", args,
+            extra=["--pair-variants", "fused,fused_bf16",
+                   "--pair-batch", str(args.bf16_batch)])["rows"]
+        step = run_child("step_bench", args)
     recs.append(run_child("fused_codec", args))
     if args.devices > 1:
         recs.append(run_child("fused_sharded", args, devices=args.devices))
 
     by = {r["engine"]: r for r in recs}
     host_ms = by["host"]["ms_per_round"]
+
+    def ratio(num, den):
+        return round(by[num]["ms_per_round"] / by[den]["ms_per_round"], 2)
+
     result = {
         "config": {"n_uavs": 30, "k_select": 10, "local_epochs": 6, "b": 2,
                    "scheme": args.scheme, "steps_per_epoch": 4,
-                   "batch_size": 10,
-                   "rounds_timed": args.rounds, "warmup": args.warmup},
+                   "batch_size": 10, "block_k": args.block_k,
+                   "rounds_timed": args.rounds, "warmup": args.warmup,
+                   "tuned_env": not args.no_tuned_env},
         "engines": recs,
         "speedup_fused_vs_host": round(host_ms / by["fused"]["ms_per_round"],
                                        2),
-        # the compute-floor comparison: custom-VJP step vs the PR-1
+        # the compute-floor comparison: blocked K-fused step vs the PR-1
         # autodiff step, same container, same run
-        "speedup_fused_vs_im2col": round(
-            by["fused_im2col"]["ms_per_round"] / by["fused"]["ms_per_round"],
-            2),
+        "speedup_fused_vs_im2col": ratio("fused_im2col", "fused"),
     }
+    if not args.no_tuned_env:
+        from repro.launch.env import TUNED_XLA_FLAGS
+        result["config"]["xla_flags"] = sorted(TUNED_XLA_FLAGS)
+    if "fused_vmapped" in by:
+        # the tentpole: user axis inside the kernel grid vs PR-4's
+        # vmap-of-per-user-kernels, full round, same process
+        result["speedup_blocked_vs_vmapped"] = ratio("fused_vmapped",
+                                                     "fused")
+    if "fused_bf16" in by:
+        result["round_bf16_vs_f32"] = ratio("fused", "fused_bf16")
+    if "fused_pallas" in by:
+        result["round_pallas_vs_xla"] = ratio("fused_pallas", "fused")
+    b32 = f"@b{args.bf16_batch}"
+    if f"fused_bf16{b32}" in by:
+        result[f"round_bf16_vs_f32{b32}"] = ratio(f"fused{b32}",
+                                                  f"fused_bf16{b32}")
+    if step is not None:
+        result["step_bench"] = step
     if args.devices > 1:
         result["speedup_sharded_vs_host"] = round(
             host_ms / by["fused_sharded"]["ms_per_round"], 2)
     print(f"\nspeedup fused vs host: {result['speedup_fused_vs_host']}x")
-    print(f"speedup fused (custom-VJP) vs im2col step: "
+    print(f"speedup fused (blocked K-fused) vs im2col step: "
           f"{result['speedup_fused_vs_im2col']}x")
+    for key, label in (
+            ("speedup_blocked_vs_vmapped", "blocked vs vmapped (round)"),
+            ("round_bf16_vs_f32", "bf16 vs f32 (round, batch=10)"),
+            (f"round_bf16_vs_f32{b32}",
+             f"bf16 vs f32 (round, batch={args.bf16_batch})"),
+            ("round_pallas_vs_xla", "pallas/xla round-time ratio")):
+        if key in result:
+            print(f"{label}: {result[key]}x")
+    if step is not None:
+        for name, val in step["ratios"].items():
+            print(f"step_bench {name}: {val}x")
     if "speedup_sharded_vs_host" in result:
         print(f"speedup sharded vs host: {result['speedup_sharded_vs_host']}x")
 

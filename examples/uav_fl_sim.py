@@ -52,6 +52,10 @@ ap.add_argument("--kernel", default="xla", choices=["xla", "pallas", "im2col"],
 ap.add_argument("--precision", default="f32", choices=["f32", "bf16"],
                 help="compute precision of the training step (bf16 keeps "
                      "f32 master params and loss)")
+ap.add_argument("--block-k", type=int, default=0,
+                help="user-tile size of the blocked kernel grid "
+                     "(0 = whole selected cohort in one grid step; see "
+                     "kernels/fused_cnn.ForwardPolicy.block_k)")
 ap.add_argument("--serve", action="store_true",
                 help="run the first scheme through the fault-tolerant "
                      "aggregation service (serving/fl_server) instead of "
@@ -84,7 +88,8 @@ t0 = time.time()
 
 base = Experiment(rounds=args.rounds, distribution=args.distribution,
                   use_delta_codec=args.codec, kernel=args.kernel,
-                  precision=args.precision).with_seeds(*seed_list)
+                  precision=args.precision,
+                  block_k=args.block_k).with_seeds(*seed_list)
 
 if args.serve:
     from repro.serving.fl_server import run_with_restarts

@@ -54,6 +54,7 @@ Two round builders share these pieces:
 """
 from __future__ import annotations
 
+from dataclasses import replace as _dc_replace
 from typing import Any, Callable, Dict, NamedTuple, Tuple
 
 import jax
@@ -70,7 +71,9 @@ from repro.core.schemes import (get_scheme, kx as _kx,
 from repro.kernels.delta_codec.kernel import (BLOCK, dequantize_blocks,
                                               quantize_blocks)
 from repro.kernels.delta_codec.ops import stacked_flatten, stacked_unflatten
-from repro.kernels.fused_cnn.ops import resolve_train_step
+from repro.kernels.fused_cnn.ops import (ForwardPolicy, make_eval_forward,
+                                         make_stacked_epoch_fn,
+                                         resolve_train_step)
 from repro.training.loss import accuracy, cross_entropy
 
 __all__ = ["RoundStats", "DeviceSimCarry", "DeviceRoundMetrics",
@@ -114,6 +117,28 @@ def _codec_zero_state(stacked, block: int = BLOCK):
     flat, _ = stacked_flatten(stacked, block=block)
     return (jnp.zeros(flat.shape, jnp.int8),
             jnp.zeros(flat.shape[:2] + (1,), jnp.float32))
+
+
+def _resolve_epoch_fns(forward: Any, lr: float, interpret: bool
+                       ) -> Tuple[Callable, Callable]:
+    """``(epoch_all, eval_fwd)`` for the round builders.
+
+    Policy forwards (``ForwardPolicy`` or ``None`` → default xla/f32) get
+    the *stacked-cohort* epoch (``ops.make_stacked_epoch_fn``): the K-user
+    axis lives inside the blocked kernels — one batched ``dot_general``
+    (xla) or one ``block_k``-tiled kernel launch (pallas) per layer per
+    step — instead of ``jax.vmap`` rewriting each tiny per-user kernel
+    into K grid programs.  Legacy bare callables (tests pushing non-CNN
+    models through the round) keep the vmapped per-user epoch."""
+    if forward is None or isinstance(forward, ForwardPolicy):
+        policy = forward if forward is not None else ForwardPolicy()
+        policy = _dc_replace(policy,
+                             interpret=policy.interpret or interpret)
+        policy.validate()
+        return (make_stacked_epoch_fn(policy, lr),
+                make_eval_forward(policy))
+    loss_grad, fwd_eval = resolve_train_step(forward, interpret)
+    return jax.vmap(_make_epoch_fn(loss_grad, lr)), fwd_eval
 
 
 def _make_epoch_fn(loss_grad: Callable, lr: float) -> Callable:
@@ -169,15 +194,13 @@ def build_fused_round(*, scheme: Any, local_epochs: int, steps_per_epoch: int,
     call.  ``codec_block``/``codec_bits`` are the delta-codec quantization
     group width and bit depth (``HSFLConfig.codec_block``/``codec_bits``).
     """
-    loss_grad, _ = resolve_train_step(forward, interpret)
+    epoch_all, _ = _resolve_epoch_fns(forward, lr, interpret)
     scheme = get_scheme(scheme)
 
     if scheme.carries_delayed and k_carry < 1:
         raise ValueError(
             f"{scheme.name} build_fused_round needs k_carry >= 1 (the fixed "
             f"width of the straggler carry), got k_carry={k_carry}")
-
-    epoch_all = jax.vmap(_make_epoch_fn(loss_grad, lr))
 
     def _train_and_probe(params, xs, ys, chan):
         k = chan["valid"].shape[0]
@@ -368,9 +391,8 @@ def build_device_round(*, scheme: Any, local_epochs: int,
     the sweep engine scans it and donates the whole ``DeviceSimCarry``
     (params, fleet, stragglers) at its own jit boundary.
     """
-    loss_grad, fwd_eval = resolve_train_step(forward, interpret)
+    epoch_all, fwd_eval = _resolve_epoch_fns(forward, lr, interpret)
     scheme = get_scheme(scheme)
-    epoch_all = jax.vmap(_make_epoch_fn(loss_grad, lr))
     aw = float(async_alpha) * 2.0 ** (-float(async_a))
     # the codec (or a manual compress_ratio) shrinks every model payload on
     # the wire, so the *effective* bytes drive selection feasibility/energy

@@ -87,10 +87,16 @@ class HSFLConfig:
     use_fused_round: bool = True   # False -> host OppTransmitter reference
     # CNN hot-path policy (kernels/fused_cnn.ForwardPolicy), device engines
     # only — the host reference loop always runs the autodiff step:
-    #   kernel:    xla (custom-VJP fused step, default) | pallas | im2col
-    #   precision: f32 (value-pinned) | bf16 (mixed precision)
+    #   kernel:      xla (custom-VJP fused step, default) | pallas | im2col
+    #   precision:   f32 (value-pinned) | bf16 (mixed precision)
+    #   block_k:     user-tile size of the blocked kernel grid (0 = the
+    #                whole selected cohort in one grid step)
+    #   batch_users: False -> legacy vmap-of-per-user-kernels step (the
+    #                blocked-vs-vmapped baseline)
     kernel: str = "xla"
     precision: str = "f32"
+    block_k: int = 0
+    batch_users: bool = True
     schedule_override: tuple = ()  # manual opportunistic schedule (Sec. III-B)
     # UAV on-board compute range (FLOP/s).  Sec. IV doesn't specify device
     # compute; the default straddles the paper's 8-11 s tau_max sweep so the
@@ -268,7 +274,9 @@ class HSFLSimulation:
             k_carry=cfg.k_select, codec_block=cfg.codec_block,
             codec_bits=cfg.codec_bits,
             forward=ForwardPolicy(kernel=cfg.kernel,
-                                  precision=cfg.precision).validate(),
+                                  precision=cfg.precision,
+                                  block_k=cfg.block_k,
+                                  batch_users=cfg.batch_users).validate(),
             stacked_sharding=self._stack_shard)
 
     def evaluate(self) -> Tuple[float, float]:

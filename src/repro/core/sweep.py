@@ -54,10 +54,11 @@ CFG_AXES = ("b", "tau_max", "bandwidth_ratio")
 # first-class sweeps (``("opt", {"b": 2.0, "use_delta_codec": True})``).
 # ``codec_block``/``codec_bits`` sweep the quantization group width and bit
 # depth (the eq. 15 overhead-vs-delay frontier), and ``kernel``/
-# ``precision`` fork the CNN hot-path policy (kernels/fused_cnn):
-# xla-vs-pallas, f32-vs-bf16 groups can sit side by side in one spec.
+# ``precision``/``block_k``/``batch_users`` fork the CNN hot-path policy
+# (kernels/fused_cnn): xla-vs-pallas, f32-vs-bf16, blocked-vs-vmapped and
+# user-tile-size groups can sit side by side in one spec.
 GROUP_STATICS = ("use_delta_codec", "codec_block", "codec_bits", "kernel",
-                 "precision")
+                 "precision", "block_k", "batch_users")
 
 # Poison value ``compile_spec`` writes into ``group.base.b`` when b rides
 # the traced config axis: the real values live in ``group.cfgs`` and
@@ -231,7 +232,9 @@ def _group_build_kwargs(group: CompiledGroup) -> Dict[str, Any]:
         # Pallas kernels (codec + fused CNN) run in interpret mode off-TPU
         interpret=jax.default_backend() != "tpu",
         forward=ForwardPolicy(kernel=base.kernel,
-                              precision=base.precision).validate(),
+                              precision=base.precision,
+                              block_k=base.block_k,
+                              batch_users=base.batch_users).validate(),
         schedule_override=tuple(base.schedule_override),
         async_alpha=base.async_alpha, async_a=base.async_a)
 

@@ -1,6 +1,9 @@
 from repro.kernels.fused_cnn.ops import (ForwardPolicy, make_eval_forward,
                                          make_forward, make_loss_grad,
+                                         make_stacked_epoch_fn,
+                                         make_stacked_loss_grad,
                                          resolve_train_step)
 
 __all__ = ["ForwardPolicy", "make_forward", "make_eval_forward",
-           "make_loss_grad", "resolve_train_step"]
+           "make_loss_grad", "make_stacked_loss_grad",
+           "make_stacked_epoch_fn", "resolve_train_step"]

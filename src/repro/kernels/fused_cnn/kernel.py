@@ -14,14 +14,18 @@ pool conv outputs, selection masks) live and die in VMEM:
   ``fc_chain_fwd``   — fc1+ReLU → fc2+ReLU → fc3 as a single kernel.
   ``fc_chain_bwd``   — the three transposed matmuls + ReLU masking.
 
-Each kernel is a single program (no grid): the paper-scale per-user batch
-(10 x 28 x 28 images, ≤72-lane contractions) fits a 28-image block in well
-under 2 MB of VMEM, and the user axis arrives via ``jax.vmap`` inside the
-fused round — Pallas's batching rule turns that into the kernel grid, so
-the same kernels serve ``build_fused_round``, ``build_device_round`` and
-the sweep engine's nested sim/config vmaps unchanged.  Full-test-set eval
-(B=1000) would exceed a sane VMEM block, so the forward *policy* routes
-eval through the value-identical XLA path (``ops.make_eval_forward``).
+Two generations of each kernel live here.  The PR-4 originals are single
+programs (no grid) batched over the K selected users by ``jax.vmap``'s
+batching rule — kept as the ``batch_users=False`` baseline the microbench
+compares against.  The ``*_k`` blocked twins (bottom of the file) are the
+production path: they take the stacked ``(K, ...)`` weights directly and
+tile their grid over *user tiles* of ``ForwardPolicy.block_k`` users, so
+one kernel launch covers the whole cohort's layer instead of K tiny-GEMM
+launches (and, in interpret mode, one Python-evaluated program instead of
+K per step per layer — the source of the 23x Pallas gap this PR closes).
+Full-test-set eval (B=1000) would exceed a sane VMEM block, so the forward
+*policy* routes eval through the value-identical XLA path
+(``ops.make_eval_forward``).
 
 Off-TPU the kernels run with ``interpret=True`` (same convention as
 ``kernels/delta_codec``): value-pinned against ``ref.py`` and
@@ -45,6 +49,40 @@ def _dot(a, b):
 
 def _dot32(a, b):
     return jax.lax.dot(a, b, preferred_element_type=jnp.float32)
+
+
+_BDN = (((2,), (1,)), ((0,), (0,)))       # (bk,M,P) x (bk,P,N) -> (bk,M,N)
+
+
+def _bdot(a, b):
+    """In-kernel batched matmul over the user tile (see ``ref._bdot``:
+    native bf16 GEMM, f32 accumulation contract at f32)."""
+    if a.dtype == jnp.bfloat16:
+        return jax.lax.dot_general(a, b, _BDN)
+    return jax.lax.dot_general(
+        a, b, _BDN, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def _bdot32(a, b):
+    if a.dtype == jnp.bfloat16:
+        return jax.lax.dot_general(a, b, _BDN).astype(jnp.float32)
+    return jax.lax.dot_general(a, b, _BDN,
+                               preferred_element_type=jnp.float32)
+
+
+def _bT(t):
+    return jnp.swapaxes(t, 1, 2)
+
+
+def resolve_block_k(k: int, block_k: int) -> int:
+    """User-tile size for the blocked kernels: ``block_k <= 0`` (or
+    ``>= K``) means the whole cohort in one grid step.  Callers pad the
+    user axis to a multiple first (``ops._pad_users``)."""
+    bk = k if block_k <= 0 or block_k >= k else int(block_k)
+    if k % bk:
+        raise ValueError(f"user axis K={k} not a multiple of block_k={bk}; "
+                         "pad the cohort before calling the blocked kernels")
+    return bk
 
 
 # ---------------------------------------------------------------------------
@@ -197,4 +235,226 @@ def fc_chain_bwd(flat: jnp.ndarray, res: Tuple, params: dict,
     grads = {"fc1": {"w": dw1, "b": db1.reshape(d1)},
              "fc2": {"w": dw2, "b": db2.reshape(d2)},
              "fc3": {"w": dw3, "b": db3.reshape(d3)}}
+    return grads, dflat
+
+
+# ---------------------------------------------------------------------------
+# blocked twins: the user axis IS the kernel grid
+# ---------------------------------------------------------------------------
+#
+# The single-program kernels above batch the K selected users via vmap's
+# batching rule — which rewrites each tiny kernel into K grid programs.
+# Compiled on TPU that is merely suboptimal (K launches of ≤72-lane GEMMs
+# that never fill the MXU); in interpret mode it is catastrophic, because
+# every one of those K programs is a separate Python-interpreted kernel
+# evaluation *per step per layer* (the 23x Pallas gap in BENCH_hsfl.json).
+#
+# The ``*_k`` twins below take the stacked ``(K, ...)`` weights directly
+# and tile the grid over *user tiles* of ``block_k`` users: each grid step
+# gathers im2col patches for its whole tile (merged ``bk·B`` leading axis)
+# and runs one batched ``dot_general`` per layer, so a single kernel launch
+# covers the entire cohort's layer — ``block_k=0`` (the default) is one
+# grid step for all K users.  ``block_k`` trades VMEM residency against
+# launch count on real hardware; in interpret mode it is the number of
+# Python iterations, so whole-cohort blocks are the fast setting there.
+
+
+def _conv_pool_fwd_k_kernel(xp_ref, w_ref, b_ref, a_ref, pat_ref, eq_ref,
+                            m_ref, *, bk, bs, h, wd, c, o):
+    xp = xp_ref[...]                               # (bk, B, H+2, W+2, C)
+    cols = [xp[:, :, i:i + h, j:j + wd, :]
+            for i in range(3) for j in range(3)]
+    pat = jnp.concatenate(cols, axis=-1).reshape(bk, bs * h * wd, 9 * c)
+    pat_ref[...] = pat
+    z = _bdot(pat, w_ref[...]).reshape(bk, bs, h, wd, o)
+    zw = z.reshape(bk, bs, h // 2, 2, wd // 2, 2, o)
+    pz = zw.max(axis=(3, 5))
+    eqw = (zw == pz[:, :, :, None, :, None, :])
+    cnt = eqw.sum(axis=(3, 5), keepdims=True)
+    eq_ref[...] = jnp.where(eqw, 1.0 / cnt, 0.0).astype(z.dtype).reshape(
+        bk, bs, h, wd, o)
+    a = jnp.maximum(pz + b_ref[...].reshape(bk, 1, 1, 1, o), 0.0)
+    m_ref[...] = (a > 0).astype(z.dtype)
+    a_ref[...] = a
+
+
+def conv_pool_fwd_k(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                    block_k: int = 0,
+                    interpret: bool = False) -> Tuple[jnp.ndarray, Tuple]:
+    """Blocked Pallas twin of ``ref.conv_pool_fwd_k``: x (K,B,H,W,C),
+    stacked w (K,3,3,C,O) / b (K,O); grid = (K // block_k,) user tiles."""
+    k, bs, h, wd, c = x.shape
+    o = w.shape[-1]
+    bk = resolve_block_k(k, block_k)
+    xp = jnp.pad(x, ((0, 0), (0, 0), (1, 1), (1, 1), (0, 0)))
+    dt = x.dtype
+    a, pat, eq, relu_m = pl.pallas_call(
+        functools.partial(_conv_pool_fwd_k_kernel, bk=bk, bs=bs, h=h,
+                          wd=wd, c=c, o=o),
+        grid=(k // bk,),
+        in_specs=[
+            pl.BlockSpec((bk, bs, h + 2, wd + 2, c),
+                         lambda i: (i, 0, 0, 0, 0)),
+            pl.BlockSpec((bk, 9 * c, o), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bk, 1, o), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((k, bs, h // 2, wd // 2, o), dt),
+                   jax.ShapeDtypeStruct((k, bs * h * wd, 9 * c), dt),
+                   jax.ShapeDtypeStruct((k, bs, h, wd, o), dt),
+                   jax.ShapeDtypeStruct((k, bs, h // 2, wd // 2, o), dt)],
+        out_specs=[
+            pl.BlockSpec((bk, bs, h // 2, wd // 2, o),
+                         lambda i: (i, 0, 0, 0, 0)),
+            pl.BlockSpec((bk, bs * h * wd, 9 * c), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bk, bs, h, wd, o), lambda i: (i, 0, 0, 0, 0)),
+            pl.BlockSpec((bk, bs, h // 2, wd // 2, o),
+                         lambda i: (i, 0, 0, 0, 0)),
+        ],
+        interpret=interpret,
+    )(xp, w.reshape(k, 9 * c, o), b.reshape(k, 1, o))
+    return a, (pat, eq, relu_m)
+
+
+def _conv_pool_bwd_k_kernel(pat_ref, eq_ref, m_ref, w_ref, da_ref,
+                            dw_ref, db_ref, *maybe_dx_ref,
+                            bk, bs, h, wd, c, o):
+    dp = da_ref[...] * m_ref[...]                  # (bk, B, H/2, W/2, O)
+    db_ref[...] = dp.astype(jnp.float32).sum(axis=(1, 2, 3)).reshape(bk, 1, o)
+    dz = (eq_ref[...].reshape(bk, bs, h // 2, 2, wd // 2, 2, o)
+          * dp[:, :, :, None, :, None, :]).reshape(bk, bs * h * wd, o)
+    pat = pat_ref[...]
+    dw_ref[...] = _bdot32(_bT(pat), dz)
+    if maybe_dx_ref:
+        dx_ref, = maybe_dx_ref
+        dpat = _bdot(dz, _bT(w_ref[...])).reshape(bk, bs, h, wd, 9 * c)
+        dx_ref[...] = jnp.zeros(dx_ref.shape, dx_ref.dtype)
+        for idx in range(9):
+            i, j = divmod(idx, 3)
+            dx_ref[:, :, i:i + h, j:j + wd, :] += (
+                dpat[..., idx * c:(idx + 1) * c])
+
+
+def conv_pool_bwd_k(res: Tuple, w: jnp.ndarray, da: jnp.ndarray,
+                    need_dx: bool, block_k: int = 0,
+                    interpret: bool = False) -> Tuple:
+    """Blocked Pallas twin of ``ref.conv_pool_bwd_k``: stacked (K, ...)
+    residuals/weights in, per-user (dw f32, db f32, dx-or-None) out."""
+    pat, eq, relu_m = res
+    k, bs, h, wd, o = eq.shape
+    c = pat.shape[-1] // 9
+    bk = resolve_block_k(k, block_k)
+    dt = pat.dtype
+    f32 = jnp.float32
+    out_shape = [jax.ShapeDtypeStruct((k, 9 * c, o), f32),
+                 jax.ShapeDtypeStruct((k, 1, o), f32)]
+    out_specs = [pl.BlockSpec((bk, 9 * c, o), lambda i: (i, 0, 0)),
+                 pl.BlockSpec((bk, 1, o), lambda i: (i, 0, 0))]
+    if need_dx:
+        out_shape.append(
+            jax.ShapeDtypeStruct((k, bs, h + 2, wd + 2, c), dt))
+        out_specs.append(pl.BlockSpec((bk, bs, h + 2, wd + 2, c),
+                                      lambda i: (i, 0, 0, 0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_conv_pool_bwd_k_kernel, bk=bk, bs=bs, h=h,
+                          wd=wd, c=c, o=o),
+        grid=(k // bk,),
+        in_specs=[
+            pl.BlockSpec((bk, bs * h * wd, 9 * c), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bk, bs, h, wd, o), lambda i: (i, 0, 0, 0, 0)),
+            pl.BlockSpec((bk, bs, h // 2, wd // 2, o),
+                         lambda i: (i, 0, 0, 0, 0)),
+            pl.BlockSpec((bk, 9 * c, o), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bk, bs, h // 2, wd // 2, o),
+                         lambda i: (i, 0, 0, 0, 0)),
+        ],
+        out_shape=out_shape,
+        out_specs=out_specs,
+        interpret=interpret,
+    )(pat, eq, relu_m, w.reshape(k, 9 * c, o), da)
+    dw, db = out[0], out[1]
+    dx = out[2][:, :, 1:1 + h, 1:1 + wd, :] if need_dx else None
+    return dw.reshape(k, 3, 3, c, o), db.reshape(k, o), dx
+
+
+def _fc_chain_fwd_k_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, w3_ref,
+                           b3_ref, out_ref, h1_ref, h2_ref):
+    h1 = jnp.maximum(_bdot(x_ref[...], w1_ref[...]) + b1_ref[...], 0.0)
+    h1_ref[...] = h1
+    h2 = jnp.maximum(_bdot(h1, w2_ref[...]) + b2_ref[...], 0.0)
+    h2_ref[...] = h2
+    out_ref[...] = _bdot(h2, w3_ref[...]) + b3_ref[...]
+
+
+def fc_chain_fwd_k(flat: jnp.ndarray, params: dict, block_k: int = 0,
+                   interpret: bool = False) -> Tuple[jnp.ndarray, Tuple]:
+    """Blocked Pallas twin of ``ref.fc_chain_fwd_k``: flat (K,B,F),
+    stacked fc params (K, ...)."""
+    k, bs, f = flat.shape
+    bk = resolve_block_k(k, block_k)
+    p1, p2, p3 = params["fc1"], params["fc2"], params["fc3"]
+    d1, d2, d3 = p1["w"].shape[-1], p2["w"].shape[-1], p3["w"].shape[-1]
+    dt = flat.dtype
+    mat = lambda m, n: pl.BlockSpec((bk, m, n), lambda i: (i, 0, 0))
+    logits, h1, h2 = pl.pallas_call(
+        _fc_chain_fwd_k_kernel,
+        grid=(k // bk,),
+        in_specs=[mat(bs, f), mat(f, d1), mat(1, d1), mat(d1, d2),
+                  mat(1, d2), mat(d2, d3), mat(1, d3)],
+        out_shape=[jax.ShapeDtypeStruct((k, bs, d3), dt),
+                   jax.ShapeDtypeStruct((k, bs, d1), dt),
+                   jax.ShapeDtypeStruct((k, bs, d2), dt)],
+        out_specs=[mat(bs, d3), mat(bs, d1), mat(bs, d2)],
+        interpret=interpret,
+    )(flat, p1["w"], p1["b"].reshape(k, 1, d1), p2["w"],
+      p2["b"].reshape(k, 1, d2), p3["w"], p3["b"].reshape(k, 1, d3))
+    return logits, (h1, h2)
+
+
+def _fc_chain_bwd_k_kernel(x_ref, h1_ref, h2_ref, w1_ref, w2_ref, w3_ref,
+                           g_ref, dw1_ref, db1_ref, dw2_ref, db2_ref,
+                           dw3_ref, db3_ref, dx_ref):
+    g = g_ref[...]
+    h1, h2 = h1_ref[...], h2_ref[...]
+    dw3_ref[...] = _bdot32(_bT(h2), g)
+    db3_ref[...] = g.astype(jnp.float32).sum(axis=1, keepdims=True)
+    dh2 = _bdot(g, _bT(w3_ref[...])) * (h2 > 0)
+    dw2_ref[...] = _bdot32(_bT(h1), dh2)
+    db2_ref[...] = dh2.astype(jnp.float32).sum(axis=1, keepdims=True)
+    dh1 = _bdot(dh2, _bT(w2_ref[...])) * (h1 > 0)
+    dw1_ref[...] = _bdot32(_bT(x_ref[...]), dh1)
+    db1_ref[...] = dh1.astype(jnp.float32).sum(axis=1, keepdims=True)
+    dx_ref[...] = _bdot(dh1, _bT(w1_ref[...]))
+
+
+def fc_chain_bwd_k(flat: jnp.ndarray, res: Tuple, params: dict,
+                   dlogits: jnp.ndarray, block_k: int = 0,
+                   interpret: bool = False) -> Tuple[dict, jnp.ndarray]:
+    """Blocked Pallas twin of ``ref.fc_chain_bwd_k``."""
+    h1, h2 = res
+    k, bs, f = flat.shape
+    bk = resolve_block_k(k, block_k)
+    p1, p2, p3 = params["fc1"], params["fc2"], params["fc3"]
+    d1, d2, d3 = p1["w"].shape[-1], p2["w"].shape[-1], p3["w"].shape[-1]
+    dt = flat.dtype
+    f32 = jnp.float32
+    mat = lambda m, n: pl.BlockSpec((bk, m, n), lambda i: (i, 0, 0))
+    dw1, db1, dw2, db2, dw3, db3, dflat = pl.pallas_call(
+        _fc_chain_bwd_k_kernel,
+        grid=(k // bk,),
+        in_specs=[mat(bs, f), mat(bs, d1), mat(bs, d2), mat(f, d1),
+                  mat(d1, d2), mat(d2, d3), mat(bs, d3)],
+        out_shape=[jax.ShapeDtypeStruct((k, f, d1), f32),
+                   jax.ShapeDtypeStruct((k, 1, d1), f32),
+                   jax.ShapeDtypeStruct((k, d1, d2), f32),
+                   jax.ShapeDtypeStruct((k, 1, d2), f32),
+                   jax.ShapeDtypeStruct((k, d2, d3), f32),
+                   jax.ShapeDtypeStruct((k, 1, d3), f32),
+                   jax.ShapeDtypeStruct((k, bs, f), dt)],
+        out_specs=[mat(f, d1), mat(1, d1), mat(d1, d2), mat(1, d2),
+                   mat(d2, d3), mat(1, d3), mat(bs, f)],
+        interpret=interpret,
+    )(flat, h1, h2, p1["w"], p2["w"], p3["w"], dlogits)
+    grads = {"fc1": {"w": dw1, "b": db1.reshape(k, d1)},
+             "fc2": {"w": dw2, "b": db2.reshape(k, d2)},
+             "fc3": {"w": dw3, "b": db3.reshape(k, d3)}}
     return grads, dflat

@@ -52,10 +52,19 @@ PRECISIONS = ("f32", "bf16")
 @dataclass(frozen=True)
 class ForwardPolicy:
     """How the CNN hot path computes.  Hashable → usable as a jit static
-    and inside ``core/sweep``'s program-cache key."""
+    and inside ``core/sweep``'s program-cache key.
+
+    ``block_k`` sizes the user tile of the blocked kernels' grid: 0 (the
+    default) is one grid step for the whole selected cohort, ``n`` runs
+    ``ceil(K/n)`` grid steps of ``n`` users each (the cohort is padded to
+    a multiple; pad users are sliced off the grads).  ``batch_users=False``
+    keeps the PR-4 vmap-of-per-user-kernels step — the baseline the
+    ``blocked-vs-vmapped`` microbench and CI perf-guard compare against."""
     kernel: str = "xla"
     precision: str = "f32"
     interpret: bool = False
+    block_k: int = 0
+    batch_users: bool = True
 
     def validate(self) -> "ForwardPolicy":
         if self.kernel not in KERNELS:
@@ -64,6 +73,9 @@ class ForwardPolicy:
         if self.precision not in PRECISIONS:
             raise ValueError(f"ForwardPolicy.precision={self.precision!r}; "
                              f"choose from {PRECISIONS}")
+        if not isinstance(self.block_k, int) or self.block_k < 0:
+            raise ValueError(f"ForwardPolicy.block_k={self.block_k!r}; "
+                             "expected an int >= 0 (0 = whole cohort)")
         return self
 
 
@@ -219,6 +231,161 @@ def make_eval_forward(policy: ForwardPolicy) -> Callable:
             jnp.float32)
 
     return eval_fwd
+
+
+# ---------------------------------------------------------------------------
+# stacked-cohort step: the K-user axis handled by the kernels, not vmap
+# ---------------------------------------------------------------------------
+
+def _impl_stacked(policy: ForwardPolicy):
+    """(fwd_res_k, bwd_k) over stacked ``(K, ...)`` params for the blocked
+    kernels (xla = batched ``dot_general`` ref twins, pallas = grid-tiled
+    blocked kernels)."""
+    if policy.kernel == "xla":
+        return ref.forward_fwd_ref_k, ref.backward_ref_k
+
+    it = policy.interpret
+    bk = policy.block_k
+
+    def fwd_res(p, x):
+        a1, r1 = knl.conv_pool_fwd_k(x, p["conv1"]["w"], p["conv1"]["b"],
+                                     block_k=bk, interpret=it)
+        a2, r2 = knl.conv_pool_fwd_k(a1, p["conv2"]["w"], p["conv2"]["b"],
+                                     block_k=bk, interpret=it)
+        flat = a2.reshape(a2.shape[0], a2.shape[1], -1)
+        logits, rfc = knl.fc_chain_fwd_k(flat, p, block_k=bk, interpret=it)
+        return logits, (r1, r2, flat, rfc)
+
+    def bwd(p, res, g, need_dx=True):
+        r1, r2, flat, rfc = res
+        gfc, dflat = knl.fc_chain_bwd_k(flat, rfc, p, g, block_k=bk,
+                                        interpret=it)
+        k, bs, h, wd, o = r2[1].shape
+        da2 = dflat.reshape(k, bs, h // 2, wd // 2, o)
+        dw2, db2, da1 = knl.conv_pool_bwd_k(r2, p["conv2"]["w"], da2, True,
+                                            block_k=bk, interpret=it)
+        dw1, db1, dx = knl.conv_pool_bwd_k(r1, p["conv1"]["w"], da1,
+                                           need_dx, block_k=bk,
+                                           interpret=it)
+        grads = {"conv1": {"w": dw1, "b": db1},
+                 "conv2": {"w": dw2, "b": db2}, **gfc}
+        return grads, dx
+
+    return fwd_res, bwd
+
+
+def _pad_users(policy: ForwardPolicy, loss_grad_k: Callable) -> Callable:
+    """Pad the user axis to a multiple of ``block_k`` around a stacked
+    loss-grad (the blocked Pallas grid needs an exact tiling; pad users
+    are zero-weight phantoms whose grads are sliced off)."""
+
+    def wrapped(params, bx, by):
+        k = by.shape[0]
+        bk = k if policy.block_k <= 0 or policy.block_k >= k \
+            else policy.block_k
+        pad = (-k) % bk
+        if not pad:
+            return loss_grad_k(params, bx, by)
+        pw = lambda t: jnp.pad(t, ((0, pad),) + ((0, 0),) * (t.ndim - 1))
+        loss, grads = loss_grad_k(jax.tree_util.tree_map(pw, params),
+                                  pw(bx), pw(by))
+        return loss[:k], jax.tree_util.tree_map(lambda t: t[:k], grads)
+
+    return wrapped
+
+
+def make_stacked_loss_grad(policy: ForwardPolicy) -> Callable:
+    """``(stacked_params, bx, by) -> (loss (K,), grads)`` over the whole
+    selected cohort: params leaves stacked ``(K, ...)``, bx ``(K, B, ...)``,
+    by ``(K, B)``.
+
+    This is ``make_loss_grad`` with the user axis moved *into* the kernels:
+    one batched ``dot_general`` (xla) or one grid-tiled kernel launch
+    (pallas) per layer instead of K vmapped tiny-GEMM programs.  The
+    "im2col" baseline and ``batch_users=False`` keep the vmap composition
+    (bit-identical to PR 4) so the blocked path has an in-tree twin to be
+    pinned and benchmarked against."""
+    policy.validate()
+    if policy.kernel == "im2col" or not policy.batch_users:
+        return jax.vmap(make_loss_grad(policy))
+
+    cd = jnp.bfloat16 if policy.precision == "bf16" else None
+    fwd_res_k, bwd_k = _impl_stacked(policy)
+
+    def loss_grad_k(params, bx, by):
+        p = _cast_tree(params, cd) if cd else params
+        x = bx.astype(cd) if cd else bx
+        logits, res = fwd_res_k(p, x)
+        lf = logits.astype(jnp.float32)            # (K, B, classes)
+        zm = lf - lf.max(axis=-1, keepdims=True)
+        logz = jnp.log(jnp.sum(jnp.exp(zm), axis=-1, keepdims=True))
+        logp = zm - logz
+        onehot = jax.nn.one_hot(by, lf.shape[-1], dtype=jnp.float32)
+        loss = -jnp.mean(jnp.sum(onehot * logp, axis=-1), axis=-1)
+        dlogits = (jnp.exp(logp) - onehot) / lf.shape[1]
+        grads, _ = bwd_k(p, res, dlogits.astype(cd) if cd else dlogits,
+                         need_dx=False)
+        if cd is None:
+            grads = jax.tree_util.tree_map(
+                lambda gg, pp: gg.astype(pp.dtype), grads, p)
+        return loss, grads
+
+    if policy.kernel == "pallas":
+        return _pad_users(policy, loss_grad_k)
+    return loss_grad_k
+
+
+def make_stacked_epoch_fn(policy: ForwardPolicy, lr: float) -> Callable:
+    """``epoch_all(stacked, xs, ys) -> stacked``: one local epoch of SGD
+    for the whole cohort — xs ``(K, steps, B, ...)``, ys ``(K, steps, B)``,
+    params leaves stacked ``(K, ...)`` (f32 master).
+
+    The step axis is scanned with the *user axis inside the kernels*
+    (``make_stacked_loss_grad``), replacing ``vmap(per-user epoch)``.
+
+    bf16 policy (xla/pallas): the master-param round-trip is hoisted to
+    the epoch boundary — images and params cast to bf16 ONCE per epoch,
+    the step scan carries the bf16 trajectory plus an f32 gradient
+    accumulator, and the f32 master updates once at the end with the full
+    f32 gradient sum (``master - lr·Σg``).  The old per-step
+    master→bf16→f32 round-trip both paid 2·|params| casts per step and
+    quantized every SGD update to bf16 resolution against the master;
+    here per-step bf16 drift is confined inside one epoch and the master
+    integrates exact f32 gradients (quality pinned by the loss-tolerance
+    regression test)."""
+    policy.validate()
+    loss_grad_k = make_stacked_loss_grad(policy)
+    bf16_fast = policy.precision == "bf16" and policy.kernel != "im2col"
+    tmap = jax.tree_util.tree_map
+
+    def epoch_all(stacked, xs, ys):
+        sx = jnp.swapaxes(xs, 0, 1)                # (steps, K, B, ...)
+        sy = jnp.swapaxes(ys, 0, 1)
+        if not bf16_fast:
+            def step(p, batch):
+                bx, by = batch
+                _, g = loss_grad_k(p, bx, by)
+                return tmap(lambda w, gg: w - lr * gg, p, g), ()
+
+            out, _ = jax.lax.scan(step, stacked, (sx, sy))
+            return out
+
+        sx = sx.astype(jnp.bfloat16)               # cast ONCE per epoch
+        p0 = _cast_tree(stacked, jnp.bfloat16)
+        acc0 = tmap(jnp.zeros_like, stacked)       # f32 accumulator
+
+        def step(carry, batch):
+            p, acc = carry
+            bx, by = batch
+            _, g = loss_grad_k(p, bx, by)          # grads come back f32
+            acc = tmap(jnp.add, acc, g)
+            p = tmap(lambda w, gg: w - lr * gg.astype(jnp.bfloat16), p, g)
+            return (p, acc), ()
+
+        (_, acc), _ = jax.lax.scan(step, (p0, acc0), (sx, sy))
+        return tmap(lambda w, a: w - lr * a, stacked, acc)
+
+    return epoch_all
 
 
 def resolve_train_step(forward: Any, interpret: bool = False

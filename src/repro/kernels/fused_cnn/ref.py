@@ -141,6 +141,149 @@ def fc_chain_bwd(flat: jnp.ndarray, res: Tuple, params: dict,
     return {"fc1": g1, "fc2": g2, "fc3": g3}, dflat
 
 
+# ---------------------------------------------------------------------------
+# batched-over-users twins: the K-user cohort as ONE GEMM per layer
+# ---------------------------------------------------------------------------
+#
+# The PR-4 step ran per user and relied on ``jax.vmap`` to batch the K axis.
+# These twins take the stacked ``(K, ...)`` weights directly: the patch /
+# pool / mask stages run on the merged ``K·B`` leading axis (one elementwise
+# program for the whole cohort) and every matmul is a single batched
+# ``dot_general`` whose M dimension is the per-user ``B·P`` block — the
+# "blocked" layout the Pallas kernels (``kernel.py``) tile over their grid.
+
+_BDN = (((2,), (1,)), ((0,), (0,)))       # (K,M,P) x (K,P,N) -> (K,M,N)
+
+
+def _bdot(a, b):
+    """Batched-over-users matmul in the compute dtype.
+
+    f32 inputs keep the f32-accumulation contract of ``_dot``.  bf16 inputs
+    run the backend's *native* bf16 GEMM (no forced-f32 output): on
+    AMX/AVX512-BF16 CPUs and TPU MXUs the accumulator is f32 *inside* the
+    GEMM microkernel and only the stored result rounds to bf16 — forcing an
+    f32 output element type pushes CPU XLA off the native path entirely
+    (measured ~2x slower than f32 instead of ~6x faster on the bench
+    container, see ``launch/env.py``)."""
+    if a.dtype == jnp.bfloat16:
+        return jax.lax.dot_general(a, b, _BDN)
+    return jax.lax.dot_general(
+        a, b, _BDN, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def _bdot32(a, b):
+    """Batched grad matmul: f32 result whatever the compute dtype (the
+    master-param SGD update never sees a bf16 gradient leaf)."""
+    if a.dtype == jnp.bfloat16:
+        return jax.lax.dot_general(a, b, _BDN).astype(jnp.float32)
+    return jax.lax.dot_general(a, b, _BDN,
+                               preferred_element_type=jnp.float32)
+
+
+def _bT(t: jnp.ndarray) -> jnp.ndarray:
+    """Transpose the per-user matrix of a (K, M, N) stack."""
+    return jnp.swapaxes(t, 1, 2)
+
+
+def conv_pool_fwd_k(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray
+                    ) -> Tuple[jnp.ndarray, Tuple]:
+    """Batched twin of ``conv_pool_fwd``: x (K,B,H,W,C); w (K,3,3,C,O);
+    b (K,O) -> a (K,B,H/2,W/2,O) + residuals (pat, eq, relu_m) with a
+    leading K.  Values are bit-equal to ``vmap(conv_pool_fwd)`` at f32 —
+    the per-user GEMM is the same contraction, just stacked on the batch
+    dimension of one ``dot_general``."""
+    k, bs, h, wd, c = x.shape
+    o = w.shape[-1]
+    pat = patches3x3(x.reshape(k * bs, h, wd, c)).reshape(
+        k, bs * h * wd, 9 * c)
+    z = _bdot(pat, w.reshape(k, 9 * c, o)).reshape(k, bs, h, wd, o)
+    zw = z.reshape(k, bs, h // 2, 2, wd // 2, 2, o)
+    pz = zw.max(axis=(3, 5))
+    bb = b.reshape(k, 1, 1, 1, o).astype(x.dtype)
+    a = jnp.maximum(pz + bb, 0.0)
+    eqw = (zw == pz[:, :, :, None, :, None, :])
+    cnt = eqw.sum(axis=(3, 5), keepdims=True)
+    eq = jnp.where(eqw, 1.0 / cnt, 0.0).astype(x.dtype).reshape(
+        k, bs, h, wd, o)
+    relu_m = (pz + bb > 0).astype(x.dtype)
+    return a, (pat, eq, relu_m)
+
+
+def conv_pool_bwd_k(res: Tuple, w: jnp.ndarray, da: jnp.ndarray,
+                    need_dx: bool) -> Tuple:
+    """Batched twin of ``conv_pool_bwd``: da (K,B,H/2,W/2,O) ->
+    (dw (K,3,3,C,O) f32, db (K,O) f32, dx (K,B,H,W,C) or None)."""
+    pat, eq, relu_m = res
+    k, bs, h, wd, o = eq.shape
+    c = pat.shape[-1] // 9
+    dp = da * relu_m                               # (K,B,H/2,W/2,O)
+    db = dp.astype(jnp.float32).sum(axis=(1, 2, 3))
+    dz = (eq.reshape(k, bs, h // 2, 2, wd // 2, 2, o)
+          * dp[:, :, :, None, :, None, :]).reshape(k, bs * h * wd, o)
+    dw = _bdot32(_bT(pat), dz).reshape(k, 3, 3, c, o)
+    dx = None
+    if need_dx:
+        dpat = _bdot(dz, _bT(w.reshape(k, 9 * c, o)))
+        dx = fold3x3(dpat.reshape(k * bs, h, wd, 9 * c)).reshape(
+            k, bs, h, wd, c)
+    return dw, db, dx
+
+
+def fc_chain_fwd_k(flat: jnp.ndarray, params: dict
+                   ) -> Tuple[jnp.ndarray, Tuple]:
+    """Batched twin of ``fc_chain_fwd``: flat (K,B,F), params leaves
+    stacked (K, ...) -> logits (K,B,classes) + (h1, h2)."""
+    b1 = params["fc1"]["b"][:, None, :]
+    b2 = params["fc2"]["b"][:, None, :]
+    b3 = params["fc3"]["b"][:, None, :]
+    h1 = jnp.maximum(_bdot(flat, params["fc1"]["w"]) + b1, 0.0)
+    h2 = jnp.maximum(_bdot(h1, params["fc2"]["w"]) + b2, 0.0)
+    logits = _bdot(h2, params["fc3"]["w"]) + b3
+    return logits, (h1, h2)
+
+
+def fc_chain_bwd_k(flat: jnp.ndarray, res: Tuple, params: dict,
+                   dlogits: jnp.ndarray) -> Tuple[dict, jnp.ndarray]:
+    """Batched twin of ``fc_chain_bwd``: per-user fc grads (f32) + dflat."""
+    h1, h2 = res
+    g3 = {"w": _bdot32(_bT(h2), dlogits),
+          "b": dlogits.astype(jnp.float32).sum(axis=1)}
+    dh2 = _bdot(dlogits, _bT(params["fc3"]["w"])) * (h2 > 0)
+    g2 = {"w": _bdot32(_bT(h1), dh2),
+          "b": dh2.astype(jnp.float32).sum(axis=1)}
+    dh1 = _bdot(dh2, _bT(params["fc2"]["w"])) * (h1 > 0)
+    g1 = {"w": _bdot32(_bT(flat), dh1),
+          "b": dh1.astype(jnp.float32).sum(axis=1)}
+    dflat = _bdot(dh1, _bT(params["fc1"]["w"]))
+    return {"fc1": g1, "fc2": g2, "fc3": g3}, dflat
+
+
+def forward_fwd_ref_k(params: dict, images: jnp.ndarray):
+    """Stacked-cohort forward + residuals: params leaves (K, ...),
+    images (K,B,H,W,C)."""
+    a1, r1 = conv_pool_fwd_k(images, params["conv1"]["w"],
+                             params["conv1"]["b"])
+    a2, r2 = conv_pool_fwd_k(a1, params["conv2"]["w"], params["conv2"]["b"])
+    flat = a2.reshape(a2.shape[0], a2.shape[1], -1)
+    logits, rfc = fc_chain_fwd_k(flat, params)
+    return logits, (r1, r2, flat, rfc)
+
+
+def backward_ref_k(params: dict, residuals, dlogits: jnp.ndarray,
+                   need_dx: bool = False):
+    """Stacked-cohort hand-written VJP: dlogits (K,B,classes) -> per-user
+    grads (conv grads f32 via ``_bdot32``)."""
+    r1, r2, flat, rfc = residuals
+    gfc, dflat = fc_chain_bwd_k(flat, rfc, params, dlogits)
+    k, bs, h2_, w2_, o2 = r2[1].shape
+    da2 = dflat.reshape(k, bs, h2_ // 2, w2_ // 2, o2)
+    dw2, db2, da1 = conv_pool_bwd_k(r2, params["conv2"]["w"], da2, True)
+    dw1, db1, dx = conv_pool_bwd_k(r1, params["conv1"]["w"], da1, need_dx)
+    grads = {"conv1": {"w": dw1, "b": db1}, "conv2": {"w": dw2, "b": db2},
+             **gfc}
+    return grads, dx
+
+
 def forward_ref(params: dict, images: jnp.ndarray) -> jnp.ndarray:
     """Full-model forward, bit-identical to ``cnn.forward_im2col`` at f32
     (pool-first reassociation only — see ``conv_pool_fwd``)."""

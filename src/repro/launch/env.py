@@ -1,0 +1,115 @@
+"""Tuned launch environment: XLA flags + allocator knobs for the hot path.
+
+The fleet-scale engines live or die on the CPU backend's GEMM dispatch.
+Two environment-level switches dominate on the bench container (the
+olmax ``run.sh`` idiom: set the process environment *before* the runtime
+initializes, instead of sprinkling per-call options):
+
+* ``--xla_cpu_use_thunk_runtime=false`` — the legacy XLA:CPU runtime
+  keeps the oneDNN-style fused GEMM path that the (default) thunk
+  runtime drops for bf16: measured on the stacked cohort epoch at fig3
+  scale, f32 falls from 66 to 40 ms/epoch and bf16 from 108 to 43
+  ms/epoch when the flag is set, and a raw bf16 ``dot_general`` runs the
+  AMX/AVX512-BF16 native path (f32 accumulation inside the GEMM
+  microkernel) instead of a 2x-slower-than-f32 emulation.  This flag is
+  what makes the ``fused_bf16`` BENCH rows a fast path instead of a
+  regression.
+* tcmalloc via ``LD_PRELOAD`` — glibc malloc serializes its arena under
+  XLA's thread pool; tcmalloc removes the contention (and
+  ``TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD`` silences its large-alloc
+  spam).  Only applied when the library actually exists on the machine
+  (the bench container ships none, TPU VMs do).
+
+``apply_tuned_env()`` mutates ``os.environ`` in-process and must run
+before the first jax *dispatch* (XLA parses ``XLA_FLAGS`` when the
+backend client is created — at the first traced op, not at ``import
+jax``), so benchmarks and ``serve_fl`` call it at the top of ``main()``.
+``tuned_env()`` returns the same additions merged over a copy of a base
+environment — the benchmark hands that to its measurement subprocesses.
+
+User settings always win: ``XLA_FLAGS`` merging is by flag name (a flag
+the user already set, with any value, is never overridden) and plain
+variables already present in the environment are left untouched.
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, Mapping, Optional
+
+__all__ = ["TUNED_XLA_FLAGS", "TUNED_VARS", "merge_xla_flags",
+           "find_tcmalloc", "tuned_env", "apply_tuned_env"]
+
+# flag -> why (the table in EXPERIMENTS.md renders from this)
+TUNED_XLA_FLAGS: Dict[str, str] = {
+    "--xla_cpu_use_thunk_runtime=false":
+        "legacy CPU runtime: fused oneDNN GEMMs; native bf16 (AMX/"
+        "AVX512-BF16) instead of emulation — f32 66->40 ms/epoch, "
+        "bf16 108->43 ms/epoch at fig3 scale",
+}
+
+# plain environment variables (set only when absent)
+TUNED_VARS: Dict[str, str] = {
+    # silence TF/XLA C++ banner noise in benchmark child output
+    "TF_CPP_MIN_LOG_LEVEL": "4",
+    # tcmalloc prints a warning per >1GiB allocation by default; sweep
+    # sims allocate the stacked client datasets in one block
+    "TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD": str(1 << 40),
+}
+
+_TCMALLOC_CANDIDATES = (
+    "/usr/lib/x86_64-linux-gnu/libtcmalloc.so.4",
+    "/usr/lib/x86_64-linux-gnu/libtcmalloc_minimal.so.4",
+    "/usr/lib/libtcmalloc.so.4",
+    "/usr/local/lib/libtcmalloc.so",
+)
+
+
+def _flag_name(flag: str) -> str:
+    return flag.split("=", 1)[0]
+
+
+def merge_xla_flags(existing: str, extra=None) -> str:
+    """Append tuned flags to an ``XLA_FLAGS`` string without overriding
+    any flag (by name) the user already set."""
+    if extra is None:
+        extra = TUNED_XLA_FLAGS
+    have = {_flag_name(f) for f in existing.split()}
+    add = [f for f in extra if _flag_name(f) not in have]
+    return " ".join(([existing] if existing else []) + add)
+
+
+def find_tcmalloc() -> Optional[str]:
+    for path in _TCMALLOC_CANDIDATES:
+        if os.path.exists(path):
+            return path
+    return None
+
+
+def tuned_env(base: Optional[Mapping[str, str]] = None) -> Dict[str, str]:
+    """A copy of ``base`` (default ``os.environ``) with the tuned launch
+    environment merged in — hand this to a measurement subprocess."""
+    env = dict(os.environ if base is None else base)
+    env["XLA_FLAGS"] = merge_xla_flags(env.get("XLA_FLAGS", ""))
+    for var, val in TUNED_VARS.items():
+        env.setdefault(var, val)
+    tc = find_tcmalloc()
+    if tc and "LD_PRELOAD" not in env:
+        env["LD_PRELOAD"] = tc
+    return env
+
+
+def apply_tuned_env(verbose: bool = False) -> Dict[str, str]:
+    """Merge the tuned environment into ``os.environ`` in-process.
+
+    Call before the first jax dispatch (jit/array op), or the backend
+    will already have parsed the un-tuned ``XLA_FLAGS``.  An ``LD_PRELOAD``
+    found here cannot retro-load into a running process — it is exported
+    for child processes only (the subprocess benches still benefit).
+    Returns the variables that changed."""
+    new = tuned_env(os.environ)
+    changed = {k: v for k, v in new.items() if os.environ.get(k) != v}
+    os.environ.update(changed)
+    if verbose and changed:
+        for k, v in sorted(changed.items()):
+            print(f"[launch.env] {k}={v}")
+    return changed

@@ -75,8 +75,17 @@ def main(argv=None) -> int:
     ap.add_argument("--metrics-path", default=None,
                     help="per-round JSONL log (default: "
                          "<ckpt-dir>/metrics.jsonl)")
+    ap.add_argument("--no-tuned-env", action="store_true",
+                    help="skip the tuned launch environment "
+                         "(repro.launch.env: XLA runtime flags, tcmalloc)")
     ap.add_argument("--quiet", action="store_true")
     args = ap.parse_args(argv)
+
+    if not args.no_tuned_env:
+        # before the first jax dispatch: the server's jitted round programs
+        # pick up the tuned XLA runtime (see launch/env.py)
+        from repro.launch.env import apply_tuned_env
+        apply_tuned_env(verbose=not args.quiet)
 
     if args.faults and args.chaos_seed is not None:
         ap.error("--faults and --chaos-seed are mutually exclusive")

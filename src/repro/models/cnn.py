@@ -128,6 +128,21 @@ def forward_im2col(params, images: jnp.ndarray,
     return y.astype(jnp.float32) if compute_dtype is not None else y
 
 
+def forward_im2col_k(params, images: jnp.ndarray,
+                     compute_dtype=None) -> jnp.ndarray:
+    """Stacked-cohort forward: params leaves ``(K, ...)``, images
+    ``(K, B, H, W, C)`` — exactly ``vmap(forward_im2col)`` (and pinned to
+    it bit-for-bit in the tier-1 suite).
+
+    This is the autodiff oracle the *blocked* kernels
+    (``kernels/fused_cnn``'s ``*_k`` twins, which fold the user axis into
+    one batched ``dot_general`` / one grid-tiled kernel launch per layer)
+    are bit-pinned against at f32 for K ∈ {1, 3, 10}."""
+    return jax.vmap(
+        lambda p, x: forward_im2col(p, x, compute_dtype=compute_dtype)
+    )(params, images)
+
+
 def split_params(params, cut: int) -> Tuple[Dict, Dict]:
     """UE-side stages [0, cut), BS-side stages [cut, 5)."""
     ue = {s: params[s] for s in STAGES[:cut]}

@@ -22,7 +22,9 @@ from repro.core.hsfl import HSFLConfig, HSFLSimulation, model_compress_ratio
 from repro.data.synthetic import make_digits
 from repro.kernels.fused_cnn import ref
 from repro.kernels.fused_cnn.ops import (ForwardPolicy, make_eval_forward,
-                                         make_forward)
+                                         make_forward, make_loss_grad,
+                                         make_stacked_epoch_fn,
+                                         make_stacked_loss_grad)
 from repro.models import cnn as cnn_mod
 from repro.training.loss import cross_entropy
 
@@ -281,3 +283,177 @@ def test_codec_block_is_group_static_and_threads_through():
     assert res.n_programs == 2                     # block width is a static
     for g in res.groups:
         assert np.all(np.isfinite(g.metrics["test_loss"]))
+
+
+# -- PR 7: blocked stacked-cohort kernels (user axis inside the grid) ---------
+
+STACKED_POLICIES = [ForwardPolicy(),                                # xla
+                    ForwardPolicy(kernel="pallas", interpret=True)]
+
+
+def _stack_fixture(k, bs=8, seed=0):
+    """Stacked ``(K, ...)`` params + per-user digit shards (real digits:
+    zero backgrounds exercise pool-tie and dead-ReLU mask branches)."""
+    keys = jax.random.split(jax.random.PRNGKey(seed), k)
+    params = jax.vmap(lambda kk: cnn_mod.init_cnn(kk))(keys)
+    ds = make_digits(k * bs, seed=seed + 1)
+    x = jnp.asarray(ds.x).reshape(k, bs, 28, 28, 1)
+    y = jnp.asarray(ds.y).reshape(k, bs)
+    return params, x, y
+
+
+def _vmapped_autodiff_loss_grad(params, x, y):
+    def one(p, bx, by):
+        return jax.value_and_grad(
+            lambda q: cross_entropy(cnn_mod.forward_im2col(q, bx), by))(p)
+
+    return jax.vmap(one)(params, x, y)
+
+
+@pytest.mark.parametrize("k", [1, 3, 10])
+@pytest.mark.parametrize("policy", STACKED_POLICIES, ids=lambda p: p.kernel)
+def test_stacked_forward_bit_equivalence_f32(policy, k):
+    """Blocked forward (xla batched dot_general AND the grid-tiled Pallas
+    kernels in interpret mode) is bit-equal to vmap(forward_im2col) at f32
+    for cohort sizes 1, 3, and the paper's K=10."""
+    from repro.kernels.fused_cnn.ops import _impl_stacked
+    params, x, _ = _stack_fixture(k)
+    want = cnn_mod.forward_im2col_k(params, x)
+    fwd_res_k, _ = _impl_stacked(policy)
+    got, _ = fwd_res_k(params, x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("k", [1, 3, 10])
+@pytest.mark.parametrize("policy", STACKED_POLICIES, ids=lambda p: p.kernel)
+def test_stacked_loss_grad_matches_vmapped_autodiff(policy, k):
+    params, x, y = _stack_fixture(k)
+    lref, gref = _vmapped_autodiff_loss_grad(params, x, y)
+    loss, g = make_stacked_loss_grad(policy)(params, x, y)
+    assert loss.shape == (k,)
+    np.testing.assert_allclose(np.asarray(loss), np.asarray(lref),
+                               rtol=1e-5)
+    for (pa, a), (pb, b) in zip(
+            jax.tree_util.tree_leaves_with_path(gref),
+            jax.tree_util.tree_leaves_with_path(g)):
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                   atol=2e-7, rtol=1e-5,
+                                   err_msg=jax.tree_util.keystr(pa))
+
+
+@pytest.mark.parametrize("policy", STACKED_POLICIES, ids=lambda p: p.kernel)
+def test_stacked_pool_tie_and_dead_relu_gradients(policy):
+    """Constant-ones images put every 2x2 pool window in a 4-way positive
+    tie, and random conv2 signs leave dead-ReLU lanes: the blocked
+    backward must split/zero exactly like jax's reduce-max rule."""
+    k, bs = 3, 2
+    params = jax.vmap(lambda kk: cnn_mod.init_cnn(kk))(
+        jax.random.split(jax.random.PRNGKey(0), k))
+    x = jnp.ones((k, bs, 28, 28, 1))
+    y = jnp.tile(jnp.asarray([1, 7]), (k, 1))
+    lref, gref = _vmapped_autodiff_loss_grad(params, x, y)
+    loss, g = make_stacked_loss_grad(policy)(params, x, y)
+    np.testing.assert_allclose(np.asarray(loss), np.asarray(lref),
+                               rtol=1e-5)
+    for a, b in zip(jax.tree_util.tree_leaves(gref),
+                    jax.tree_util.tree_leaves(g)):
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                   atol=2e-7, rtol=1e-5)
+
+
+def test_block_k_tiling_and_padding_match_full_cohort():
+    """block_k tiles the grid (divisor) or pads the cohort (non-divisor:
+    K=10 @ block_k=4 pads 2 phantom users) without changing the result;
+    on the xla path the knob is an accepted no-op."""
+    params, x, y = _stack_fixture(10, bs=4)
+    want_l, want_g = make_stacked_loss_grad(ForwardPolicy())(params, x, y)
+    for policy in (
+            ForwardPolicy(kernel="pallas", interpret=True, block_k=5),
+            ForwardPolicy(kernel="pallas", interpret=True, block_k=4),
+            ForwardPolicy(block_k=5)):
+        loss, g = make_stacked_loss_grad(policy)(params, x, y)
+        np.testing.assert_allclose(np.asarray(loss), np.asarray(want_l),
+                                   rtol=1e-5)
+        for a, b in zip(jax.tree_util.tree_leaves(want_g),
+                        jax.tree_util.tree_leaves(g)):
+            np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                       atol=2e-7, rtol=1e-5)
+    with pytest.raises(ValueError, match="block_k"):
+        make_stacked_loss_grad(ForwardPolicy(block_k=-1))
+
+
+def test_batch_users_false_is_the_vmapped_step():
+    """batch_users=False must be *bit-identical* to vmap(make_loss_grad):
+    it IS the PR-4 composition, kept as the blocked path's in-tree twin."""
+    params, x, y = _stack_fixture(4)
+    loss_v, g_v = make_stacked_loss_grad(
+        ForwardPolicy(batch_users=False))(params, x, y)
+    loss_m, g_m = jax.vmap(make_loss_grad(ForwardPolicy()))(params, x, y)
+    np.testing.assert_array_equal(np.asarray(loss_v), np.asarray(loss_m))
+    for a, b in zip(jax.tree_util.tree_leaves(g_m),
+                    jax.tree_util.tree_leaves(g_v)):
+        np.testing.assert_array_equal(np.asarray(b), np.asarray(a))
+
+
+def _epoch_fixture(k=3, steps=4, bs=10, seed=0):
+    params, _, _ = _stack_fixture(k, bs=1, seed=seed)
+    ds = make_digits(k * steps * bs, seed=seed + 2)
+    xs = jnp.asarray(ds.x).reshape(k, steps, bs, 28, 28, 1)
+    ys = jnp.asarray(ds.y).reshape(k, steps, bs)
+    return params, xs, ys
+
+
+def test_stacked_epoch_blocked_matches_vmapped_bitwise():
+    """At f32 the blocked epoch (user axis in the kernel grid) and the
+    vmapped epoch produce bit-identical parameter trajectories: the
+    batched dot_generals keep f32 accumulation and contraction order."""
+    params, xs, ys = _epoch_fixture()
+    blocked = make_stacked_epoch_fn(ForwardPolicy(), 0.05)
+    vmapped = make_stacked_epoch_fn(ForwardPolicy(batch_users=False), 0.05)
+    pb, pv = blocked(params, xs, ys), vmapped(params, xs, ys)
+    for a, b in zip(jax.tree_util.tree_leaves(pv),
+                    jax.tree_util.tree_leaves(pb)):
+        np.testing.assert_array_equal(np.asarray(b), np.asarray(a))
+
+
+def test_bf16_stacked_epoch_master_roundtrip_and_loss():
+    """The epoch-boundary bf16 scheme (cast once per epoch, f32 gradient
+    accumulator, master - lr·Σg) must keep an f32 master and land within
+    a small loss band of the f32 trajectory after several epochs — the
+    regression pin for the master-param round-trip fix."""
+    params, xs, ys = _epoch_fixture()
+    x_eval = xs.reshape(xs.shape[0], -1, 28, 28, 1)
+    y_eval = ys.reshape(ys.shape[0], -1)
+
+    def cohort_loss(p):
+        logits = cnn_mod.forward_im2col_k(p, x_eval)
+        return float(jnp.mean(jax.vmap(cross_entropy)(logits, y_eval)))
+
+    f32_fn = jax.jit(make_stacked_epoch_fn(ForwardPolicy(), 0.02))
+    bf_fn = jax.jit(make_stacked_epoch_fn(
+        ForwardPolicy(precision="bf16"), 0.02))
+    p32 = pbf = params
+    for _ in range(10):
+        p32, pbf = f32_fn(p32, xs, ys), bf_fn(pbf, xs, ys)
+    assert all(l.dtype == jnp.float32
+               for l in jax.tree_util.tree_leaves(pbf))
+    loss0, l32, lbf = cohort_loss(params), cohort_loss(p32), cohort_loss(pbf)
+    assert l32 < 0.8 * loss0 and lbf < 0.8 * loss0, (loss0, l32, lbf)
+    assert abs(lbf - l32) < 0.15, (l32, lbf)
+
+
+def test_stacked_epoch_donates_stacked_carry():
+    """The stacked ``(K, ...)`` parameter carry must donate through the
+    blocked epoch: same buffer in and out, no per-epoch model copy."""
+    params, xs, ys = _epoch_fixture(k=4, steps=2, bs=5)
+    fn = jax.jit(make_stacked_epoch_fn(ForwardPolicy(), 0.01),
+                 donate_argnums=(0,))
+    leaf = params["fc1"]["w"]
+    ptr0 = leaf.unsafe_buffer_pointer()
+    out = fn(params, xs, ys)
+    jax.block_until_ready(out)
+    assert leaf.is_deleted(), "stacked carry was not donated"
+    assert out["fc1"]["w"].unsafe_buffer_pointer() == ptr0, \
+        "donated stacked buffer was not aliased to the output"
+    assert out["fc1"]["w"].shape == (4,) + tuple(cnn_mod.init_cnn(
+        jax.random.PRNGKey(0))["fc1"]["w"].shape)
