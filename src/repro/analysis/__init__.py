@@ -1,0 +1,26 @@
+"""repro.analysis — repo-specific static analysis for the JAX engines.
+
+Three halves (see ANALYSIS.md for the rule list and rationale):
+
+- ``lint``: AST rules over the repo's own invariants (scheme-registry
+  dispatch, host-sync-free traced bodies, RNG discipline, donated jits,
+  dtype-policy threading, numpy-free hot modules);
+- ``contracts``: shape/dtype contracts for the public entry points via
+  ``jax.eval_shape`` — no execution;
+- ``guards``: runtime context managers (compile budgets, transfer guards,
+  leak checks) the guarded test/CI smokes run under.
+
+CLI: ``python -m repro.analysis`` — file:line findings, exit 1 on any
+non-baselined violation.
+"""
+from repro.analysis.findings import Baseline, Finding
+from repro.analysis.guards import (CompileBudgetExceeded, CompileCounter,
+                                   compile_budget, engine_guard, leak_check,
+                                   no_implicit_transfers)
+from repro.analysis.lint import all_rules, lint_paths, lint_source
+
+__all__ = [
+    "Baseline", "Finding", "CompileBudgetExceeded", "CompileCounter",
+    "compile_budget", "engine_guard", "leak_check", "no_implicit_transfers",
+    "all_rules", "lint_paths", "lint_source",
+]

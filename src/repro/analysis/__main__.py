@@ -1,0 +1,86 @@
+"""CLI: ``python -m repro.analysis [paths...]``.
+
+Runs the AST lint rules and the eval_shape contract sweep over the repo
+tree, prints ``path:line:col: [rule] message`` findings and exits non-zero
+if any finding is neither pragma'd (``# analysis: ok=<rule>``) nor listed
+in the baseline file (``analysis_baseline.txt``) with a justification.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from repro.analysis.findings import Baseline, filter_findings
+from repro.analysis.lint import all_rules, lint_paths
+
+DEFAULT_PATHS = ("src/repro", "benchmarks", "examples")
+DEFAULT_BASELINE = "analysis_baseline.txt"
+
+
+def find_repo_root(start: Path) -> Path:
+    for cand in [start] + list(start.parents):
+        if (cand / "src" / "repro").is_dir():
+            return cand
+    return start
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repo-specific static analysis (lint + contracts)")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help=f"files/dirs to lint (default: {DEFAULT_PATHS})")
+    ap.add_argument("--root", type=Path, default=None,
+                    help="repo root (default: auto-detected)")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="baseline file, relative to the root")
+    ap.add_argument("--no-contracts", action="store_true",
+                    help="skip the eval_shape contract sweep (lint only)")
+    ap.add_argument("--no-lint", action="store_true",
+                    help="skip the AST lint rules (contracts only)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="print a baseline covering the current findings")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    root = args.root or find_repo_root(Path.cwd())
+    paths = args.paths or list(DEFAULT_PATHS)
+
+    if args.list_rules:
+        for rule in all_rules():
+            print(f"{rule.name:15s} {rule.description}")
+        return 0
+
+    findings, sources = [], {}
+    if not args.no_lint:
+        findings, sources = lint_paths(root, paths)
+    if not args.no_contracts:
+        # imported lazily: the contract sweep imports every engine
+        from repro.analysis.contracts import run_contracts
+        findings.extend(run_contracts(repo_root=root))
+
+    baseline = Baseline.load(root / args.baseline)
+    live = filter_findings(findings, baseline, sources)
+
+    if args.write_baseline:
+        sys.stdout.write(Baseline.render(live))
+        return 0
+
+    for f in live:
+        print(f.format())
+    for key in baseline.stale():
+        print(f"note: stale baseline entry (matched nothing): "
+              f"{' :: '.join(key)}", file=sys.stderr)
+    if live:
+        print(f"\n{len(live)} finding(s). Fix, pragma "
+              f"(# analysis: ok=<rule>) or baseline with a justification "
+              f"in {args.baseline}.", file=sys.stderr)
+        return 1
+    suffix = "" if args.no_contracts else " (lint + contracts)"
+    print(f"repro.analysis: clean{suffix}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,395 @@
+"""Abstract-interpretation contract checker — shapes/dtypes via eval_shape.
+
+Everything here runs through ``jax.eval_shape``: the round programs and
+kernels are *traced*, never executed, so the whole sweep below finishes in
+seconds on any backend and proves the declared signatures statically.
+
+Checked contracts:
+
+1. **Device round carry stability** — for every registered scheme,
+   ``build_device_round``'s round function must return a
+   ``DeviceSimCarry`` abstractly identical to its input (the sweep engine
+   chains it under ``lax.scan``; any aval drift is a scan type error at
+   best and a silent recompile per round at worst), and
+   ``DeviceRoundMetrics`` fields must keep their declared dtypes.
+2. **Fused round params preservation** — for every registered scheme,
+   ``build_fused_round`` must return ``new_params`` with exactly the input
+   params avals (the host engine chains rounds through donated buffers —
+   aval drift breaks donation), ``RoundStats`` stays ``(K,)``
+   bool/int32, and the async straggler carry keeps its fixed width.
+3. **Kernel twin equivalence** — every ``kernels/*`` package with a
+   ``ref.py``/``kernel.py`` pair must appear in the twin registry below,
+   and each twin pair must produce identical abstract signatures on
+   representative inputs (the runtime bit-level pins live in the tier-1
+   suite; this is the execution-free half of that contract).
+4. **Scheme program identity** — ``lowered_program`` of every scheme
+   resolves to a registered scheme for representative budget pins.
+"""
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Any, Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.findings import Finding
+
+_SCHEMES_PATH = "src/repro/core/schemes.py"
+_FUSED_PATH = "src/repro/core/fused_round.py"
+
+# tiny-but-representative example scale (shapes only; nothing executes)
+_N, _K, _E, _STEPS, _BS = 8, 4, 2, 1, 4
+
+
+def _sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _avalize(tree: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda l: _sds(jnp.shape(l), jnp.result_type(l)), tree)
+
+
+def _sig(tree: Any) -> List[str]:
+    """Canonical printable signature of a pytree of avals."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    out = [f"treedef={treedef}"]
+    out += [f"{i}: {tuple(l.shape)} {jnp.result_type(l)}"
+            for i, l in enumerate(leaves)]
+    return out
+
+
+def diff_signatures(a: Any, b: Any) -> List[str]:
+    """Human-readable differences between two aval trees ([] if equal)."""
+    sa, sb = _sig(a), _sig(b)
+    return [f"{x} != {y}" for x, y in zip(sa, sb) if x != y] \
+        + [f"arity {len(sa)} != {len(sb)}"] * (len(sa) != len(sb))
+
+
+# ---------------------------------------------------------------------------
+# scheme round contracts
+# ---------------------------------------------------------------------------
+
+def _example_params():
+    from repro.models.cnn import init_cnn
+    return jax.eval_shape(lambda: init_cnn(jax.random.PRNGKey(0)))
+
+
+def _key_aval():
+    k = jax.random.PRNGKey(0)
+    return _sds(k.shape, k.dtype)
+
+
+def check_device_round(schemes=None) -> List[Finding]:
+    """Contract 1: per-scheme scan-carry stability of build_device_round."""
+    from repro.core.channel_lib import ChannelParams, fleet_init
+    from repro.core.fused_round import (DeviceRoundMetrics, DeviceSimCarry,
+                                        build_device_round)
+    from repro.core.schemes import registered_schemes
+    from repro.kernels.fused_cnn.ops import ForwardPolicy
+
+    findings: List[Finding] = []
+    params = _example_params()
+    chan = ChannelParams()
+    fleet = jax.eval_shape(
+        lambda k: fleet_init(k, _N, chan), jax.random.PRNGKey(0))
+    stacked = jax.tree_util.tree_map(
+        lambda l: _sds((_K,) + tuple(l.shape), l.dtype), params)
+    carry = DeviceSimCarry(params=params, fleet=fleet, delayed=stacked,
+                           delayed_mask=_sds((_K,), jnp.bool_))
+    xdim = (28, 28, 1)
+    sim = {
+        "client_x": _sds((_N, 32) + xdim, jnp.float32),
+        "client_y": _sds((_N, 32), jnp.int32),
+        "client_len": _sds((_N,), jnp.int32),
+        "flops": _sds((_N,), jnp.float32),
+        "samples": _sds((_N,), jnp.float32),
+        "test_x": _sds((16,) + xdim, jnp.float32),
+        "test_y": _sds((16,), jnp.int32),
+    }
+    cfg = {"b": _sds((), jnp.float32), "tau_max": _sds((), jnp.float32),
+           "bandwidth_ratio": _sds((), jnp.float32)}
+    metric_dtypes = DeviceRoundMetrics(
+        selected=jnp.int32, arrived=jnp.int32, rescued=jnp.int32,
+        delayed=jnp.int32, dropped=jnp.int32, bytes_sent=jnp.float32,
+        test_loss=jnp.float32, test_acc=jnp.float32)
+
+    variants: List[Tuple[str, Dict[str, Any]]] = []
+    for name in (schemes or registered_schemes()):
+        variants.append((name, {}))
+    variants.append(("opt", {"use_codec": True, "compress_ratio": 0.252}))
+    variants.append(("opt", {"forward": ForwardPolicy(kernel="pallas",
+                                                      interpret=True)}))
+
+    for name, extra in variants:
+        label = name + ("" if not extra else f"+{sorted(extra)}")
+        try:
+            round_fn = build_device_round(
+                scheme=name, local_epochs=_E, steps_per_epoch=_STEPS,
+                batch_size=_BS, lr=0.01, k_select=_K, channel=chan,
+                model_bytes=1e6, ue_model_fraction=0.25, interpret=True,
+                **extra)
+            out_carry, metrics = jax.eval_shape(
+                round_fn, carry, _key_aval(), sim, cfg)
+        except Exception as exc:  # a broken build IS the finding
+            findings.append(Finding(
+                _FUSED_PATH, 1, 0, "contract-device-round",
+                f"build_device_round({label}) failed abstract "
+                f"evaluation: {type(exc).__name__}: {exc}"))
+            continue
+        for d in diff_signatures(_avalize(carry), _avalize(out_carry)):
+            findings.append(Finding(
+                _FUSED_PATH, 1, 0, "contract-device-round",
+                f"scheme {label!r}: DeviceSimCarry is not scan-stable "
+                f"(in != out): {d}"))
+        for field, want in metric_dtypes._asdict().items():
+            got = getattr(metrics, field)
+            if tuple(got.shape) != () or jnp.result_type(got) != want:
+                findings.append(Finding(
+                    _FUSED_PATH, 1, 0, "contract-device-round",
+                    f"scheme {label!r}: metrics.{field} is "
+                    f"{tuple(got.shape)} {jnp.result_type(got)}, declared "
+                    f"() {jnp.dtype(want)}"))
+    return findings
+
+
+def check_fused_round(schemes=None) -> List[Finding]:
+    """Contract 2: build_fused_round preserves params avals per scheme."""
+    from repro.core.fused_round import build_fused_round
+    from repro.core.schemes import get_scheme, registered_schemes
+
+    findings: List[Finding] = []
+    params = _example_params()
+    xdim = (28, 28, 1)
+    xs = _sds((_E, _K, _STEPS, _BS) + xdim, jnp.float32)
+    ys = _sds((_E, _K, _STEPS, _BS), jnp.int32)
+    chan = {
+        "rates": _sds((_E, _K), jnp.float32),
+        "outages": _sds((_E, _K), jnp.bool_),
+        "payload_bits": _sds((_K,), jnp.float32),
+        "tau_extra0": _sds((_K,), jnp.float32),
+        "final_rate": _sds((_K,), jnp.float32),
+        "train_time": _sds((_K,), jnp.float32),
+        "final_outage": _sds((_K,), jnp.bool_),
+        "valid": _sds((_K,), jnp.bool_),
+    }
+    stats_dtypes = {"arrived": jnp.bool_, "rescued": jnp.bool_,
+                    "delayed": jnp.bool_, "dropped": jnp.bool_,
+                    "opp_sends": jnp.int32}
+
+    for name in (schemes or registered_schemes()):
+        scheme = get_scheme(name)
+        probe = scheme.static_schedule(_E, 2)
+        kw: Dict[str, Any] = dict(
+            scheme=name, local_epochs=_E, steps_per_epoch=_STEPS, lr=0.01,
+            tau_max=9.0, probe_epochs=probe, interpret=True)
+        try:
+            if scheme.carries_delayed:
+                fn = build_fused_round(k_carry=_K, async_weight=0.283, **kw)
+                stacked = jax.tree_util.tree_map(
+                    lambda l: _sds((_K,) + tuple(l.shape), l.dtype), params)
+                mask = _sds((_K,), jnp.bool_)
+                new_params, new_stack, new_mask, stats = jax.eval_shape(
+                    fn, params, stacked, mask, xs, ys, chan)
+                carry_pairs = [("delayed_stack", stacked, new_stack),
+                               ("delayed_mask", mask, new_mask)]
+            else:
+                fn = build_fused_round(**kw)
+                new_params, stats = jax.eval_shape(fn, params, xs, ys, chan)
+                carry_pairs = []
+        except Exception as exc:
+            findings.append(Finding(
+                _FUSED_PATH, 1, 0, "contract-fused-round",
+                f"build_fused_round({name!r}) failed abstract "
+                f"evaluation: {type(exc).__name__}: {exc}"))
+            continue
+        for d in diff_signatures(_avalize(params), _avalize(new_params)):
+            findings.append(Finding(
+                _FUSED_PATH, 1, 0, "contract-fused-round",
+                f"scheme {name!r}: new_params drifts from params "
+                f"(breaks donation/chaining): {d}"))
+        for label, want, got in carry_pairs:
+            for d in diff_signatures(_avalize(want), _avalize(got)):
+                findings.append(Finding(
+                    _FUSED_PATH, 1, 0, "contract-fused-round",
+                    f"scheme {name!r}: {label} is not round-stable: {d}"))
+        for field, want in stats_dtypes.items():
+            got = getattr(stats, field)
+            if tuple(got.shape) != (_K,) or jnp.result_type(got) != want:
+                findings.append(Finding(
+                    _FUSED_PATH, 1, 0, "contract-fused-round",
+                    f"scheme {name!r}: RoundStats.{field} is "
+                    f"{tuple(got.shape)} {jnp.result_type(got)}, declared "
+                    f"({_K},) {jnp.dtype(want)}"))
+    return findings
+
+
+def check_scheme_programs() -> List[Finding]:
+    """Contract 4: lowered_program resolves inside the registry."""
+    from repro.core.schemes import get_scheme, registered_schemes
+    findings: List[Finding] = []
+    names = registered_schemes()
+    for name in names:
+        scheme = get_scheme(name)
+        for pins in ((1.0,), (2.0,), (1.0, 2.0, 4.0)):
+            prog = scheme.lowered_program(pins)
+            if prog not in names:
+                findings.append(Finding(
+                    _SCHEMES_PATH, 1, 0, "contract-scheme-program",
+                    f"scheme {name!r}: lowered_program({pins}) -> "
+                    f"{prog!r}, which is not a registered scheme"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# kernel twins
+# ---------------------------------------------------------------------------
+
+def compare_twin(name: str, path: str, ref_thunk: Callable[[], Any],
+                 kernel_thunk: Callable[[], Any]) -> List[Finding]:
+    """Findings if two abstract evaluations disagree (or either fails)."""
+    outs = {}
+    for side, thunk in (("ref", ref_thunk), ("kernel", kernel_thunk)):
+        try:
+            outs[side] = thunk()
+        except Exception as exc:
+            return [Finding(path, 1, 0, "contract-kernel-twin",
+                            f"{name}: {side} side failed abstract "
+                            f"evaluation: {type(exc).__name__}: {exc}")]
+    return [Finding(path, 1, 0, "contract-kernel-twin",
+                    f"{name}: ref/kernel abstract signatures differ: {d}")
+            for d in diff_signatures(outs["ref"], outs["kernel"])]
+
+
+def twin_registry() -> List[Tuple[str, str, Callable, Callable]]:
+    """Every kernels/* ref/kernel twin pair as (name, path, ref, kernel).
+
+    The thunks return aval trees via eval_shape — adapters fold layout
+    differences (wkv6's (B,S,H,D) vs (BH,S,D)) so "identical signature"
+    means identical *user-facing* outputs."""
+    import repro.kernels.delta_codec.kernel as dck
+    import repro.kernels.delta_codec.ref as dcr
+    import repro.kernels.flash_attention.kernel as fak
+    import repro.kernels.flash_attention.ref as far
+    import repro.kernels.fused_cnn.ops as cnn_ops
+    import repro.kernels.fused_cnn.ref as cnn_ref
+    import repro.kernels.wkv6.ops as wko
+    import repro.kernels.wkv6.ref as wkr
+    from repro.kernels.fused_cnn.ops import ForwardPolicy
+
+    ev = jax.eval_shape
+    pairs: List[Tuple[str, str, Callable, Callable]] = []
+
+    # -- delta_codec ------------------------------------------------------
+    x = _sds((256, 512), jnp.float32)
+    q, s = _sds((256, 512), jnp.int8), _sds((256, 1), jnp.float32)
+    for bits in (8, 4):
+        pairs.append((
+            f"delta_codec.quantize[bits={bits}]",
+            "src/repro/kernels/delta_codec/kernel.py",
+            lambda bits=bits: ev(lambda a: dcr.quantize_ref(a, bits=bits), x),
+            lambda bits=bits: ev(lambda a: dck.quantize_blocks(
+                a, interpret=True, bits=bits), x)))
+    pairs.append((
+        "delta_codec.dequantize", "src/repro/kernels/delta_codec/kernel.py",
+        lambda: ev(dcr.dequantize_ref, q, s),
+        lambda: ev(lambda a, b: dck.dequantize_blocks(
+            a, b, interpret=True), q, s)))
+
+    # -- flash_attention --------------------------------------------------
+    qa = _sds((4, 256, 64), jnp.float32)
+    for label, kw in (("causal", dict(causal=True)),
+                      ("window", dict(causal=True, window=128))):
+        pairs.append((
+            f"flash_attention.{label}",
+            "src/repro/kernels/flash_attention/kernel.py",
+            lambda kw=kw: ev(lambda a, b, c: far.attention_ref(
+                a, b, c, **kw), qa, qa, qa),
+            lambda kw=kw: ev(lambda a, b, c: fak.flash_attention_bh(
+                a, b, c, interpret=True, **kw), qa, qa, qa)))
+
+    # -- wkv6 -------------------------------------------------------------
+    B, S, H, D = 2, 256, 2, 64
+    r = _sds((B, S, H, D), jnp.float32)
+    u = _sds((H, D), jnp.float32)
+    s0 = _sds((B, H, D, D), jnp.float32)
+    pairs.append((
+        "wkv6.recurrence", "src/repro/kernels/wkv6/kernel.py",
+        lambda: ev(wkr.wkv6_ref, r, r, r, r, u, s0),
+        lambda: ev(lambda *a: wko.wkv6(*a, interpret=True), r, r, r, r, u)))
+
+    # -- fused_cnn --------------------------------------------------------
+    params = _example_params()
+    img = _sds((_BS, 28, 28, 1), jnp.float32)
+    base = ForwardPolicy(interpret=True)
+    for kernel in ("pallas", "im2col"):
+        pol = ForwardPolicy(kernel=kernel, interpret=True)
+        pairs.append((
+            f"fused_cnn.forward[{kernel} vs xla]",
+            "src/repro/kernels/fused_cnn/kernel.py",
+            lambda: ev(cnn_ops.make_forward(base), params, img),
+            lambda pol=pol: ev(cnn_ops.make_forward(pol), params, img)))
+    # the hand-written VJP twin against the pure-jnp reference fwd
+    pairs.append((
+        "fused_cnn.forward[ref oracle]",
+        "src/repro/kernels/fused_cnn/ref.py",
+        lambda: ev(cnn_ref.forward_ref, params, img),
+        lambda: ev(cnn_ops.make_forward(base), params, img)))
+    # stacked-cohort twins: blocked kernels vs the vmapped composition
+    stacked = jax.tree_util.tree_map(
+        lambda l: _sds((_K,) + tuple(l.shape), l.dtype), params)
+    bx = _sds((_K, _BS, 28, 28, 1), jnp.float32)
+    by = _sds((_K, _BS), jnp.int32)
+    vm = ForwardPolicy(interpret=True, batch_users=False)
+    for label, pol in (("xla", base),
+                       ("pallas", ForwardPolicy(kernel="pallas",
+                                                interpret=True)),
+                       ("block_k", ForwardPolicy(interpret=True, block_k=2)),
+                       ("bf16", ForwardPolicy(precision="bf16",
+                                              interpret=True))):
+        pairs.append((
+            f"fused_cnn.stacked_loss_grad[{label} vs vmapped]",
+            "src/repro/kernels/fused_cnn/kernel.py",
+            lambda: ev(cnn_ops.make_stacked_loss_grad(vm), stacked, bx, by),
+            lambda pol=pol: ev(cnn_ops.make_stacked_loss_grad(pol),
+                               stacked, bx, by)))
+    return pairs
+
+
+def covered_twin_packages() -> set:
+    return {name.split(".")[0] for name, _, _, _ in twin_registry()}
+
+
+def kernel_twin_packages(repo_root: Path) -> set:
+    """kernels/* packages shipping a ref.py/kernel.py twin pair."""
+    kdir = repo_root / "src" / "repro" / "kernels"
+    return {d.name for d in kdir.iterdir()
+            if d.is_dir() and (d / "ref.py").exists()
+            and (d / "kernel.py").exists()}
+
+
+def check_kernel_twins(repo_root: Path | None = None) -> List[Finding]:
+    """Contract 3: twin signatures agree + every twin package is covered."""
+    findings: List[Finding] = []
+    for name, path, ref_thunk, kernel_thunk in twin_registry():
+        findings.extend(compare_twin(name, path, ref_thunk, kernel_thunk))
+    if repo_root is not None:
+        missing = kernel_twin_packages(repo_root) - covered_twin_packages()
+        for pkg in sorted(missing):
+            findings.append(Finding(
+                f"src/repro/kernels/{pkg}/kernel.py", 1, 0,
+                "contract-kernel-twin",
+                f"kernels/{pkg} ships a ref.py/kernel.py twin pair but "
+                f"has no entry in analysis.contracts.twin_registry()"))
+    return findings
+
+
+def run_contracts(repo_root: Path | None = None) -> List[Finding]:
+    """The full contract sweep (every registered scheme, every twin)."""
+    findings: List[Finding] = []
+    findings.extend(check_scheme_programs())
+    findings.extend(check_device_round())
+    findings.extend(check_fused_round())
+    findings.extend(check_kernel_twins(repo_root))
+    return findings

@@ -1,0 +1,144 @@
+"""Runtime guards: recompile budgets, transfer guards, tracer-leak checks.
+
+The static halves (lint + contracts) prove structure; these context
+managers prove the *dispatch-time* invariants the engines advertise:
+
+- ``CompileCounter``/``compile_budget`` — counts actual XLA compiles by
+  listening to jax's compile logging (``jax.log_compiles``): the sweep
+  engine claims ``SweepResult.n_programs`` distinct round programs per
+  run, the fused engine claims O(1) compiles per configuration, and a
+  budget overrun is exactly the silent-recompile-per-round regression
+  class PR 2/PR 7 fought.
+- ``no_implicit_transfers`` — ``jax.transfer_guard_*("disallow")`` around
+  engine execution: after the engines stage inputs with explicit
+  ``jax.device_put``, any remaining implicit host→device transfer inside
+  the round loop is a bug.  Device→host reads of *results* are the
+  intended sync boundary, so the default guards only host→device.
+- ``leak_check`` — ``jax.checking_leaks()``: no tracer escapes a traced
+  scope (the runtime twin of the lint host-sync rule).
+"""
+from __future__ import annotations
+
+import contextlib
+import logging
+import re
+import threading
+from typing import Iterator, List, Optional
+
+import jax
+
+# The dispatch logger emits "Finished XLA compilation of jit(<name>) in
+# ..." exactly once per real XLA compile on BOTH dispatch paths — eager
+# jit calls and AOT ``lower().compile()`` (which the sweep engine uses
+# from a background thread).  Cache hits are silent.  The pxla
+# "Compiling <name> with global shapes" message is eager-only, so it is
+# not used: matching both would double-count eager compiles.
+_COMPILE_LOGGERS = ("jax._src.dispatch",)
+_COMPILE_RE = re.compile(
+    r"Finished XLA compilation of (?:jit\()?([\w<>\[\]()., -]+?)\)? in ")
+
+
+class CompileBudgetExceeded(AssertionError):
+    pass
+
+
+class CompileCounter(logging.Handler):
+    """Context manager counting XLA compiles (by compiled-program name).
+
+    >>> with CompileCounter() as cc:
+    ...     run_things()
+    >>> cc.count(), cc.count(match="over_sim")
+    """
+
+    def __init__(self) -> None:
+        super().__init__(level=logging.DEBUG)
+        self.names: List[str] = []
+        self._lock_names = threading.Lock()
+        self._prev: Optional[bool] = None
+
+    def emit(self, record: logging.LogRecord) -> None:
+        mt = _COMPILE_RE.search(record.getMessage())
+        if mt:
+            with self._lock_names:
+                self.names.append(mt.group(1))
+
+    def count(self, match: Optional[str] = None) -> int:
+        with self._lock_names:
+            if match is None:
+                return len(self.names)
+            return sum(1 for n in self.names if re.search(match, n))
+
+    def __enter__(self) -> "CompileCounter":
+        # the *global* flag, not the jax.log_compiles context manager: the
+        # CM's setting is thread-local, and the sweep engine AOT-compiles
+        # its next program in a background thread
+        self._prev = jax.config.jax_log_compiles
+        jax.config.update("jax_log_compiles", True)
+        for name in _COMPILE_LOGGERS:
+            logging.getLogger(name).addHandler(self)
+        return self
+
+    def __exit__(self, *exc) -> None:
+        for name in _COMPILE_LOGGERS:
+            logging.getLogger(name).removeHandler(self)
+        jax.config.update("jax_log_compiles", bool(self._prev))
+        self._prev = None
+
+
+@contextlib.contextmanager
+def compile_budget(budget: int, match: Optional[str] = None
+                   ) -> Iterator[CompileCounter]:
+    """Fail if the enclosed block compiles more than ``budget`` programs
+    (optionally only those whose name matches ``match``)."""
+    with CompileCounter() as cc:
+        yield cc
+        n = cc.count(match)
+        if n > budget:
+            what = f"programs matching {match!r}" if match else "programs"
+            raise CompileBudgetExceeded(
+                f"compiled {n} {what}, budget is {budget}; names: "
+                f"{[x for x in cc.names if match is None or re.search(match, x)]}")
+
+
+@contextlib.contextmanager
+def no_implicit_transfers(direction: str = "host_to_device"
+                          ) -> Iterator[None]:
+    """Disallow implicit transfers inside the block.
+
+    ``direction``: ``"host_to_device"`` (default — result reads stay
+    legal; the engines' documented sync boundary), ``"device_to_host"``,
+    or ``"all"``."""
+    if direction == "host_to_device":
+        cm = jax.transfer_guard_host_to_device("disallow")
+    elif direction == "device_to_host":
+        cm = jax.transfer_guard_device_to_host("disallow")
+    elif direction == "all":
+        cm = jax.transfer_guard("disallow")
+    else:
+        raise ValueError(f"unknown transfer-guard direction {direction!r}")
+    with cm:
+        yield
+
+
+@contextlib.contextmanager
+def leak_check() -> Iterator[None]:
+    """Raise if a tracer leaks out of any traced scope in the block."""
+    with jax.checking_leaks():
+        yield
+
+
+@contextlib.contextmanager
+def engine_guard(budget: Optional[int] = None, match: Optional[str] = None
+                 ) -> Iterator[CompileCounter]:
+    """The combined harness the guarded CI smokes run under: no implicit
+    host→device transfers + an optional compile budget."""
+    with contextlib.ExitStack() as stack:
+        cc = stack.enter_context(CompileCounter())
+        stack.enter_context(no_implicit_transfers())
+        yield cc
+        if budget is not None:
+            n = cc.count(match)
+            if n > budget:
+                raise CompileBudgetExceeded(
+                    f"compiled {n} programs (match={match!r}), budget "
+                    f"{budget}; names: {cc.names}")

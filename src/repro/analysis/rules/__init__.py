@@ -1,0 +1,4 @@
+"""Lint rules — importing this package registers every rule."""
+from repro.analysis.rules import (dtype_policy, host_sync, jit_donate,
+                                  numpy_hot, rng_discipline,
+                                  scheme_strings)  # noqa: F401

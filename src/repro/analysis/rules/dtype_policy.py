@@ -1,0 +1,68 @@
+"""dtype-thread: dtype-policy parameters must be threaded, not shadowed.
+
+Motivation (PR 7): the ``ForwardPolicy.precision`` plumbing works only if
+every function that *accepts* a compute-dtype parameter actually honors
+it — a kernel that takes ``compute_dtype`` and then hard-codes
+``astype(jnp.float32)`` silently pins the path to f32 and the bf16 sweep
+rows measure nothing.  For functions in ``kernels/`` and ``models/``
+declaring a dtype-like parameter (``compute_dtype``/``dtype``/
+``out_dtype``/...), this rule flags
+
+- a parameter the body never references, and
+- ``.astype(jnp.float32 | jnp.bfloat16 | jnp.float16)`` with a hard-coded
+  dtype — deliberate f32-accumulation contracts are allowlisted inline
+  where they occur (the pragma doubles as documentation).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from repro.analysis.findings import Finding
+from repro.analysis.lint import ModuleContext, Rule, dotted_name, \
+    register_rule
+
+DTYPE_PARAMS = frozenset({"compute_dtype", "dtype", "out_dtype",
+                          "param_dtype", "acc_dtype"})
+_HARD_DTYPES = frozenset({"jnp.float32", "jnp.bfloat16", "jnp.float16",
+                          "np.float32"})
+
+
+@register_rule
+class DtypeThreadRule(Rule):
+    name = "dtype-thread"
+    description = ("functions taking a compute_dtype/dtype policy must "
+                   "thread it instead of hard-coding jnp.float32")
+
+    def applies(self, relpath: str) -> bool:
+        return relpath.startswith(("src/repro/kernels/", "src/repro/models/"))
+
+    def check(self, ctx: ModuleContext) -> Iterable[Finding]:
+        for fn in ast.walk(ctx.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            args = fn.args
+            names = [a.arg for a in (args.posonlyargs + args.args
+                                     + args.kwonlyargs)]
+            dtype_args = [n for n in names if n in DTYPE_PARAMS]
+            if not dtype_args:
+                continue
+            used = {n.id for sub in fn.body for n in ast.walk(sub)
+                    if isinstance(n, ast.Name)}
+            for missing in (a for a in dtype_args if a not in used):
+                yield ctx.finding(
+                    fn, self.name,
+                    f"dtype parameter {missing!r} of {fn.name}() is never "
+                    f"threaded into the body")
+            for sub in ast.walk(fn):
+                if isinstance(sub, ast.Call) \
+                        and isinstance(sub.func, ast.Attribute) \
+                        and sub.func.attr == "astype" and sub.args:
+                    d = dotted_name(sub.args[0])
+                    if d in _HARD_DTYPES:
+                        yield ctx.finding(
+                            sub, self.name,
+                            f"{fn.name}() takes {dtype_args[0]!r} but "
+                            f"hard-codes astype({d}); thread the policy "
+                            f"dtype (pragma if this is a deliberate "
+                            f"accumulation contract)")

@@ -1,0 +1,99 @@
+"""host-sync: no host-synchronizing primitives inside traced code.
+
+Motivation (PR 1/PR 2): the fused round and the sweep engine exist to
+eliminate host round-trips; one stray ``.item()``/``float()``/``np.*`` on
+a traced value either crashes under jit (TracerConversionError) or —
+worse — silently forces a device sync per step when the surrounding code
+happens to run eagerly.  Inside traced scopes (see ``lint.ModuleContext``)
+in ``core/`` and ``kernels/`` this rule flags:
+
+- ``.item()`` / ``.tolist()`` / ``.block_until_ready()``
+- any ``np.*`` call (host numpy cannot consume tracers)
+- ``time.time()``-family wall clocks (trace-time constants, a classic
+  silent bug in scanned bodies)
+- ``jax.device_get``
+- ``float()/int()/bool()`` on non-static values (shape/ndim/len
+  expressions and literals are trace-time constants and stay legal)
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from repro.analysis.findings import Finding
+from repro.analysis.lint import ModuleContext, Rule, dotted_name, \
+    register_rule
+
+_SYNC_METHODS = frozenset({"item", "tolist", "block_until_ready"})
+_CLOCKS = frozenset({"time.time", "time.perf_counter", "time.monotonic",
+                     "time.process_time"})
+_STATIC_ATTRS = frozenset({"shape", "ndim", "size", "dtype"})
+
+
+def _is_static(expr: ast.AST) -> bool:
+    """Conservatively: is ``expr`` a trace-time constant?"""
+    if isinstance(expr, ast.Constant):
+        return True
+    if isinstance(expr, ast.Attribute):
+        return expr.attr in _STATIC_ATTRS or _is_static(expr.value)
+    if isinstance(expr, ast.Subscript):
+        return _is_static(expr.value)
+    if isinstance(expr, ast.BinOp):
+        return _is_static(expr.left) and _is_static(expr.right)
+    if isinstance(expr, ast.UnaryOp):
+        return _is_static(expr.operand)
+    if isinstance(expr, ast.Call):
+        d = dotted_name(expr.func)
+        if d == "len":
+            return True
+        if d in ("int", "float", "bool"):
+            return all(_is_static(a) for a in expr.args)
+        return False
+    return False
+
+
+@register_rule
+class HostSyncRule(Rule):
+    name = "host-sync"
+    description = ("no .item()/float()/np.*/time.time() on traced values "
+                   "inside jitted or scanned bodies in core/ and kernels/")
+
+    def applies(self, relpath: str) -> bool:
+        return relpath.startswith(("src/repro/core/", "src/repro/kernels/"))
+
+    def check(self, ctx: ModuleContext) -> Iterable[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call) \
+                    or not ctx.in_traced_scope(node):
+                continue
+            if isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in _SYNC_METHODS:
+                yield ctx.finding(
+                    node, self.name,
+                    f".{node.func.attr}() forces a host sync inside a "
+                    f"traced body")
+                continue
+            d = dotted_name(node.func)
+            if d is None:
+                continue
+            if d.startswith("np.") or d.startswith("numpy."):
+                yield ctx.finding(
+                    node, self.name,
+                    f"host numpy call {d}() inside a traced body "
+                    f"(use jnp)")
+            elif d in _CLOCKS:
+                yield ctx.finding(
+                    node, self.name,
+                    f"{d}() in a traced body is a trace-time constant, "
+                    f"not a clock")
+            elif d == "jax.device_get":
+                yield ctx.finding(
+                    node, self.name,
+                    "jax.device_get inside a traced body forces a host "
+                    "sync")
+            elif d in ("float", "int", "bool") and node.args \
+                    and not _is_static(node.args[0]):
+                yield ctx.finding(
+                    node, self.name,
+                    f"{d}() on a possibly-traced value inside a traced "
+                    f"body (hoist to the builder, or use jnp casts)")

@@ -1,0 +1,60 @@
+"""jit-donate: ``jax.jit`` in ``core/`` must declare donated arguments.
+
+Motivation (PR 7): the engines chain full model/carry state through their
+jits every round; forgetting ``donate_argnums`` silently doubles the
+parameter-state footprint and copies it every dispatch (the exact
+regression PR 7's donated carries removed).  Any ``jax.jit(...)`` — or
+``partial(jax.jit, ...)`` decorator form — under ``src/repro/core/``
+without ``donate_argnums``/``donate_argnames`` is a finding.  Jits whose
+inputs are genuinely reused by the caller (eval params, shared batches)
+are allowlisted inline with ``# analysis: ok=jit-donate`` or via the
+baseline, with the justification recorded.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Optional
+
+from repro.analysis.findings import Finding
+from repro.analysis.lint import ModuleContext, Rule, dotted_name, \
+    register_rule
+
+_DONATE_KW = ("donate_argnums", "donate_argnames")
+
+
+def _jit_call(node: ast.Call) -> Optional[ast.Call]:
+    """The call whose keywords carry jit options, if ``node`` is a jit."""
+    d = dotted_name(node.func)
+    if d in ("jax.jit", "jit"):
+        return node
+    if d is not None and d.split(".")[-1] == "partial" and node.args:
+        inner = dotted_name(node.args[0])
+        if inner in ("jax.jit", "jit"):
+            return node
+    return None
+
+
+@register_rule
+class JitDonateRule(Rule):
+    name = "jit-donate"
+    description = ("jax.jit in core/ must declare donate_argnums/"
+                   "donate_argnames (or be allowlisted)")
+
+    def applies(self, relpath: str) -> bool:
+        return relpath.startswith("src/repro/core/")
+
+    def check(self, ctx: ModuleContext) -> Iterable[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            jit = _jit_call(node)
+            if jit is None:
+                continue
+            if any(kw.arg in _DONATE_KW for kw in jit.keywords):
+                continue
+            yield ctx.finding(
+                node, self.name,
+                "jax.jit without donate_argnums/donate_argnames: chained "
+                "round state gets copied every dispatch (allowlist with "
+                "'# analysis: ok=jit-donate' if the caller reuses the "
+                "inputs)")

@@ -1,0 +1,58 @@
+"""np-hot: no host numpy in the device-resident hot modules.
+
+Motivation (PR 1/PR 7): the fused round, the schemes' traced methods and
+every kernel package are device code end to end — a ``np.`` call there
+either breaks under jit or forces an eager host round-trip.  Host
+*constants* (``np.pi``, dtype objects) are fine; everything else in the
+hot-module list below must be ``jnp``.  Host orchestration modules
+(``sweep.py``'s AOT driver, ``selection.py``'s greedy schedule,
+``hsfl.py``'s host engine) legitimately use numpy and are not listed.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from repro.analysis.findings import Finding
+from repro.analysis.lint import ModuleContext, Rule, register_rule
+
+HOT_MODULES = (
+    "src/repro/core/fused_round.py",
+    "src/repro/core/schemes.py",
+    "src/repro/core/channel_lib.py",
+    "src/repro/core/opportunistic_sync.py",
+    "src/repro/core/transmission.py",
+    "src/repro/kernels/",
+)
+
+# host constants and dtype objects are jit-safe trace-time values
+ALLOWED_ATTRS = frozenset({
+    "pi", "e", "inf", "nan", "euler_gamma", "newaxis",
+    "float32", "float64", "float16", "int32", "int64", "int16", "int8",
+    "uint8", "uint32", "bool_", "ndarray", "dtype", "generic",
+})
+
+
+@register_rule
+class NumpyHotRule(Rule):
+    name = "np-hot"
+    description = ("no np.* (beyond constants/dtypes) in core//kernels/ "
+                   "hot modules — device code is jnp end to end")
+
+    def applies(self, relpath: str) -> bool:
+        return relpath.startswith(HOT_MODULES)
+
+    def check(self, ctx: ModuleContext) -> Iterable[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Attribute):
+                continue
+            if not isinstance(node.value, ast.Name) \
+                    or node.value.id not in ("np", "numpy"):
+                continue
+            if node.attr in ALLOWED_ATTRS:
+                continue
+            # np.random.<x> chains surface as Attribute(np, 'random')
+            yield ctx.finding(
+                node, self.name,
+                f"host numpy ({node.value.id}.{node.attr}) in a hot "
+                f"module; use jnp (np constants/dtypes are exempt)")

@@ -1,0 +1,205 @@
+"""rng-reuse: a PRNG key is consumed at most once per path.
+
+Motivation (channel calibration + the device engines): feeding the same
+key to two ``jax.random`` draws silently correlates them — in this repo
+that means fading and outage streams that move in lockstep, which skews
+the eq. 1-7 channel statistics without failing any shape check.  The rule
+does a per-function, statement-ordered walk:
+
+- a ``jax.random`` *distribution* call (normal, uniform, randint, ...)
+  and ``jax.random.split`` **consume** their key argument;
+- ``fold_in`` / ``PRNGKey`` / ``key`` / ``clone`` do not (repeated
+  ``fold_in(key, e)`` with distinct data is the idiomatic stream split);
+- rebinding a name resets it; branches of an ``if`` are analyzed
+  independently (two exclusive arms may each consume the same key);
+- consuming a key inside a loop whose binding lives outside the loop is
+  a reuse (the same key every iteration).
+
+Only first-argument *names* are tracked — composite expressions like
+``normal(fold_in(k, i), ...)`` derive fresh keys by construction.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional
+
+from repro.analysis.findings import Finding
+from repro.analysis.lint import ModuleContext, Rule, dotted_name, \
+    register_rule
+
+CONSUMING = frozenset({
+    "normal", "uniform", "randint", "bernoulli", "permutation",
+    "categorical", "choice", "gumbel", "exponential", "laplace", "logistic",
+    "truncated_normal", "bits", "poisson", "dirichlet", "beta", "gamma",
+    "cauchy", "rademacher", "maxwell", "orthogonal", "ball", "split",
+})
+_RANDOM_BASES = ("jax.random.", "jrandom.", "random.")
+
+
+def _consuming_key(call: ast.Call) -> Optional[str]:
+    """Name of the key consumed by ``call``, if any."""
+    d = dotted_name(call.func)
+    if d is None:
+        return None
+    base, _, fn = d.rpartition(".")
+    if fn not in CONSUMING or not (base + ".").startswith(_RANDOM_BASES) \
+            and not d.startswith(_RANDOM_BASES):
+        return None
+    if call.args and isinstance(call.args[0], ast.Name):
+        return call.args[0].id
+    return None
+
+
+class _Walker:
+    """Statement-ordered abstract walk of one function body."""
+
+    def __init__(self, ctx: ModuleContext, rule: str):
+        self.ctx = ctx
+        self.rule = rule
+        self.findings: List[Finding] = []
+
+    def run(self, body) -> None:
+        self._block(body, bindings={}, consumed={}, depth=0)
+
+    # state: bindings name->loop depth of binding; consumed name->node
+    def _block(self, stmts, bindings: Dict[str, int],
+               consumed: Dict[str, ast.AST], depth: int) -> None:
+        for stmt in stmts:
+            self._stmt(stmt, bindings, consumed, depth)
+
+    def _stmt(self, stmt, bindings, consumed, depth) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            a = stmt.args
+            params = {p.arg: 0 for p in (a.posonlyargs + a.args
+                                         + a.kwonlyargs)}
+            self._block(stmt.body, params, {}, 0)
+            return
+        if isinstance(stmt, ast.ClassDef):
+            self._block(stmt.body, {}, {}, 0)
+            return
+        if isinstance(stmt, (ast.If,)):
+            self._exprs(stmt.test, bindings, consumed, depth)
+            b1, c1 = dict(bindings), dict(consumed)
+            b2, c2 = dict(bindings), dict(consumed)
+            self._block(stmt.body, b1, c1, depth)
+            self._block(stmt.orelse, b2, c2, depth)
+            consumed.clear()
+            consumed.update(c1)
+            consumed.update(c2)
+            bindings.update(b1)
+            bindings.update(b2)
+            return
+        if isinstance(stmt, (ast.For, ast.AsyncFor)):
+            self._exprs(stmt.iter, bindings, consumed, depth)
+            self._bind_target(stmt.target, bindings, consumed, depth + 1)
+            self._block(stmt.body, bindings, consumed, depth + 1)
+            self._block(stmt.orelse, bindings, consumed, depth)
+            return
+        if isinstance(stmt, ast.While):
+            self._exprs(stmt.test, bindings, consumed, depth + 1)
+            self._block(stmt.body, bindings, consumed, depth + 1)
+            self._block(stmt.orelse, bindings, consumed, depth)
+            return
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            for item in stmt.items:
+                self._exprs(item.context_expr, bindings, consumed, depth)
+            self._block(stmt.body, bindings, consumed, depth)
+            return
+        if isinstance(stmt, ast.Try):
+            self._block(stmt.body, bindings, consumed, depth)
+            for h in stmt.handlers:
+                self._block(h.body, dict(bindings), dict(consumed), depth)
+            self._block(stmt.orelse, bindings, consumed, depth)
+            self._block(stmt.finalbody, bindings, consumed, depth)
+            return
+        if isinstance(stmt, ast.Assign):
+            # `sub, key = split(key)` chaining: the statement rebinds the
+            # key it consumes — exempt from the loop-reuse check
+            rebound = set()
+            for t in stmt.targets:
+                self._target_names(t, rebound)
+            self._exprs(stmt.value, bindings, consumed, depth,
+                        rebinding=rebound)
+            for t in stmt.targets:
+                self._bind_target(t, bindings, consumed, depth)
+            return
+        if isinstance(stmt, ast.AugAssign):
+            self._exprs(stmt.value, bindings, consumed, depth)
+            self._bind_target(stmt.target, bindings, consumed, depth)
+            return
+        if isinstance(stmt, ast.AnnAssign):
+            if stmt.value is not None:
+                self._exprs(stmt.value, bindings, consumed, depth)
+            self._bind_target(stmt.target, bindings, consumed, depth)
+            return
+        if isinstance(stmt, ast.Return) and stmt.value is not None:
+            self._exprs(stmt.value, bindings, consumed, depth)
+            return
+        if isinstance(stmt, ast.Expr):
+            self._exprs(stmt.value, bindings, consumed, depth)
+            return
+        # anything else: scan its expressions conservatively
+        for child in ast.iter_child_nodes(stmt):
+            if isinstance(child, ast.expr):
+                self._exprs(child, bindings, consumed, depth)
+
+    def _target_names(self, target, out: set) -> None:
+        if isinstance(target, ast.Name):
+            out.add(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for el in target.elts:
+                self._target_names(el, out)
+        elif isinstance(target, ast.Starred):
+            self._target_names(target.value, out)
+
+    def _bind_target(self, target, bindings, consumed, depth) -> None:
+        if isinstance(target, ast.Name):
+            bindings[target.id] = depth
+            consumed.pop(target.id, None)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for el in target.elts:
+                self._bind_target(el, bindings, consumed, depth)
+        elif isinstance(target, ast.Starred):
+            self._bind_target(target.value, bindings, consumed, depth)
+
+    def _exprs(self, expr, bindings, consumed, depth,
+               rebinding: set = frozenset()) -> None:
+        for node in ast.walk(expr):
+            if isinstance(node, (ast.Lambda, ast.ListComp, ast.SetComp,
+                                 ast.DictComp, ast.GeneratorExp)):
+                continue  # handled below / out of scope for the linear walk
+            if not isinstance(node, ast.Call):
+                continue
+            key = _consuming_key(node)
+            if key is None:
+                continue
+            if key in consumed:
+                self.findings.append(self.ctx.finding(
+                    node, self.rule,
+                    f"PRNG key {key!r} already consumed at line "
+                    f"{consumed[key].lineno}; split (or fold_in) before "
+                    f"reusing it"))
+            elif key in bindings and bindings[key] < depth \
+                    and key not in rebinding:
+                self.findings.append(self.ctx.finding(
+                    node, self.rule,
+                    f"PRNG key {key!r} bound outside this loop is "
+                    f"consumed every iteration; derive a per-iteration "
+                    f"key (fold_in/split)"))
+            else:
+                consumed[key] = node
+
+
+@register_rule
+class RngReuseRule(Rule):
+    name = "rng-reuse"
+    description = ("no jax.random key consumed twice (or loop-consumed) "
+                   "without an intervening split/fold_in")
+
+    def applies(self, relpath: str) -> bool:
+        return not relpath.startswith("src/repro/analysis/")
+
+    def check(self, ctx: ModuleContext) -> Iterable[Finding]:
+        w = _Walker(ctx, self.name)
+        w.run(ctx.tree.body)
+        return w.findings

@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Tuple
 
 _VOCAB_PAD_MULTIPLE = 256
@@ -78,7 +78,8 @@ class ModelConfig:
     @property
     def is_subquadratic(self) -> bool:
         """True if decode with 500k context needs no quadratic attention."""
-        return self.attn_free or self.family in ("ssm", "hybrid") or self.sliding_window > 0
+        return (self.attn_free or self.family in ("ssm", "hybrid")
+                or self.sliding_window > 0)
 
     @property
     def d_inner(self) -> int:
@@ -133,7 +134,8 @@ class ModelConfig:
             hw = (half - t) // 2
             sections = (half - 2 * hw, hw, hw)
         heads = max(2, min(4, self.num_heads))
-        kv = max(1, min(heads, self.num_kv_heads if self.num_kv_heads < self.num_heads else heads))
+        kv = max(1, min(heads, self.num_kv_heads
+                        if self.num_kv_heads < self.num_heads else heads))
         return self.replace(
             num_layers=2,
             d_model=d,

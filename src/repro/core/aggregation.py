@@ -52,11 +52,9 @@ def aggregate_round(arrived: List[Any], delayed: List[tuple],
                     alpha: float = 0.4, a: float = 0.5) -> Any:
     """One round of global aggregation.
 
-    .. deprecated:: PR 5 — the engines now dispatch through
-       ``repro.core.schemes``: ``get_scheme(scheme).aggregate_host(...)``
-       is the single per-scheme implementation (this string-branched
-       wrapper is kept for back-compat and delegates nothing; prefer the
-       registry so new schemes are covered).
+    Back-compat wrapper: delegates to the scheme registry, where
+    ``get_scheme(scheme).aggregate_host(...)`` holds the single
+    per-scheme implementation — new schemes are covered automatically.
 
     arrived:  fresh updates received this round (final or OPT snapshots).
     delayed:  [(update, staleness), ...] — only used by the 'async' scheme.
@@ -65,25 +63,7 @@ def aggregate_round(arrived: List[Any], delayed: List[tuple],
               'async' — FedAvg over timely + staleness-weighted delayed
               (weights α(s+1)^(−a) vs 1.0 for timely, Sec. IV).
     """
-    if scheme in ("opt", "discard"):
-        if not arrived:
-            return global_params
-        return fedavg(arrived)
-    if scheme == "async":
-        if arrived:
-            updates = list(arrived)
-            weights = [1.0] * len(arrived)
-            for upd, staleness in delayed:
-                updates.append(upd)
-                weights.append(fedasync_weight(staleness, alpha, a))
-            return fedavg(updates, weights)
-        if delayed:
-            # A round with ONLY delayed updates must not fully replace the
-            # global model (normalized FedAvg would): apply the FedAsync
-            # server merge ω ← (1−α_t)·ω + α_t·ω_d per delayed arrival.
-            out = global_params
-            for upd, staleness in delayed:
-                out = fedasync_merge(out, upd, staleness, alpha, a)
-            return out
-        return global_params
-    raise ValueError(f"unknown aggregation scheme {scheme!r}")
+    # local import: schemes.py imports this module for the primitives
+    from repro.core.schemes import get_scheme
+    return get_scheme(scheme).aggregate_host(arrived, delayed, global_params,
+                                             alpha=alpha, a=a)

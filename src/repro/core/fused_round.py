@@ -65,7 +65,7 @@ from repro.core.channel_lib import (ChannelParams, FleetState,
                                     fleet_rates, fleet_resample_fading)
 from repro.core.opportunistic_sync import snapshot_decision
 from repro.core.schemes import (get_scheme, kx as _kx,
-                                masked_mean as _masked_mean,
+                                masked_mean as _masked_mean,  # noqa: F401
                                 probe_schedule_mask,
                                 tree_where_k as _tree_where_k)
 from repro.kernels.delta_codec.kernel import (BLOCK, dequantize_blocks,

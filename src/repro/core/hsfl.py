@@ -261,9 +261,10 @@ class HSFLSimulation:
             logits = cnn_mod.forward(params, x)
             return cross_entropy(logits, y), accuracy(logits, y)
 
-        # host path: all selected users advance one epoch at once (K, ...)
-        self._epoch_all = jax.jit(jax.vmap(epoch_fn))
-        self._eval = jax.jit(eval_fn)
+        # host path: all selected users advance one epoch at once (K, ...);
+        # params are re-read host-side between epochs, so no donation
+        self._epoch_all = jax.jit(jax.vmap(epoch_fn))  # analysis: ok=jit-donate
+        self._eval = jax.jit(eval_fn)  # analysis: ok=jit-donate
         from repro.kernels.fused_cnn.ops import ForwardPolicy
         self._fused = build_fused_round(
             scheme=self.scheme, local_epochs=cfg.local_epochs,
@@ -361,8 +362,9 @@ class HSFLSimulation:
         # first use
         k = self.cfg.k_select
         stack = jax.tree_util.tree_map(
-            lambda a: jnp.zeros((k,) + a.shape, a.dtype), self.params)
-        return (stack, jnp.zeros((k,), bool))
+            lambda a: jax.device_put(np.zeros((k,) + a.shape, a.dtype)),
+            self.params)
+        return (stack, jax.device_put(np.zeros((k,), bool)))
 
     def _run_round_fused(self, t: int, carry_delayed):
         cfg = self.cfg
@@ -391,29 +393,29 @@ class HSFLSimulation:
         payload, tau_extra0, train_time, valid = \
             self._user_consts(sched, ue_bytes, K)
 
-        if self._batch_shard is not None:
-            xs = jax.device_put(xs, self._batch_shard)
-            ys = jax.device_put(ys, self._batch_shard)
-        chan = {
-            "rates": jnp.asarray(rates), "outages": jnp.asarray(outs),
-            "payload_bits": jnp.asarray(payload * 8.0, jnp.float32),
-            "tau_extra0": jnp.asarray(tau_extra0, jnp.float32),
-            "final_rate": jnp.asarray(final_rate),
-            "final_outage": jnp.asarray(final_out),
-            "train_time": jnp.asarray(train_time, jnp.float32),
-            "valid": jnp.asarray(valid),
-        }
+        # dtype conversions happen host-side; a single explicit device_put
+        # per input stages the round, so the loop runs clean under
+        # jax.transfer_guard_host_to_device("disallow")
+        xs = jax.device_put(xs, self._batch_shard)
+        ys = jax.device_put(ys, self._batch_shard)
+        chan = jax.device_put({
+            "rates": np.asarray(rates), "outages": np.asarray(outs),
+            "payload_bits": np.asarray(payload * 8.0, np.float32),
+            "tau_extra0": np.asarray(tau_extra0, np.float32),
+            "final_rate": np.asarray(final_rate),
+            "final_outage": np.asarray(final_out),
+            "train_time": np.asarray(train_time, np.float32),
+            "valid": np.asarray(valid),
+        })
 
         if self.scheme.carries_delayed:
             stack, mask = (carry_delayed if carry_delayed is not None
                            else self._empty_carry())
             self.params, c_stack, c_mask, stats = self._fused(
-                self.params, stack, mask, jnp.asarray(xs), jnp.asarray(ys),
-                chan)
+                self.params, stack, mask, xs, ys, chan)
             new_carry = (c_stack, c_mask)
         else:
-            self.params, stats = self._fused(
-                self.params, jnp.asarray(xs), jnp.asarray(ys), chan)
+            self.params, stats = self._fused(self.params, xs, ys, chan)
             new_carry = None
 
         arrived = np.asarray(stats.arrived)
@@ -501,9 +503,9 @@ class HSFLSimulation:
         outages = self.fleet.outages()
         for i, u in enumerate(sched):
             tx = txs[u.index]
-            tr_time = (lat.train_time_fl(self.devices[u.index], self.workloads[u.index])
-                       if u.mode == "FL" else
-                       lat.train_time_sl(self.devices[u.index], self.workloads[u.index]))
+            dev, wl = self.devices[u.index], self.workloads[u.index]
+            tr_time = (lat.train_time_fl(dev, wl) if u.mode == "FL"
+                       else lat.train_time_sl(dev, wl))
             # the scheme's deadline: extra seconds charged against τ_max
             # (0 for the paper schemes; eq. 14 allowance for 'deadline',
             # −inf — the server waits — for 'sync')

@@ -13,7 +13,6 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
-import numpy as np
 
 
 @dataclass
@@ -52,7 +51,8 @@ def uplink_fl(b: int, model_bytes: float, rate_bps: float) -> float:
     return b * model_bytes * 8.0 / max(rate_bps, 1e-9)
 
 
-def uplink_sl(b: int, ue_model_bytes: float, act_bytes: float, rate_bps: float) -> float:
+def uplink_sl(b: int, ue_model_bytes: float, act_bytes: float,
+              rate_bps: float) -> float:
     """eq. (13) right: (b·m_l + m_a) / r⁰."""
     return (b * ue_model_bytes + act_bytes) * 8.0 / max(rate_bps, 1e-9)
 
@@ -95,5 +95,6 @@ def energy_fl(dev: DeviceProfile, wl: WorkloadProfile, tx_seconds: float) -> flo
 
 
 def energy_sl(dev: DeviceProfile, wl: WorkloadProfile, tx_seconds: float) -> float:
-    ue_t = wl.local_epochs * wl.samples * wl.ue_fraction * wl.flops_per_sample / dev.flops_per_sec
+    ue_t = (wl.local_epochs * wl.samples * wl.ue_fraction
+            * wl.flops_per_sample / dev.flops_per_sec)
     return ue_t * dev.power_compute_w + tx_seconds * dev.power_tx_w

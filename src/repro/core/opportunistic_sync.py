@@ -25,13 +25,13 @@ trips inside a round.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
-from typing import Any, Callable, Optional, Tuple
+from typing import Any, Callable, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core.schemes import get_scheme
 from repro.core.transmission import schedule_period as _schedule_period
 from repro.models import module as m
 from repro.training.train_state import TrainState
@@ -98,22 +98,15 @@ def maybe_snapshot(cfg: OppSyncConfig, state: TrainState,
 
 def round_contribution(cfg: OppSyncConfig, state: TrainState,
                        arrived: jnp.ndarray) -> Tuple[Any, jnp.ndarray]:
-    """This pod's aggregation payload and validity under the chosen scheme."""
+    """This pod's aggregation payload and validity under the chosen scheme.
+
+    Dispatches through the scheme registry — ``pod_contribution`` is the
+    per-pod twin of ``Scheme.aggregate``, so a newly registered scheme is
+    picked up here without edits."""
     have_snap = state.snapshot_step >= 0
-    if cfg.scheme == "opt":
-        contrib = m.tree_where(arrived, state.params, state.snapshot)
-        valid = (arrived | have_snap).astype(jnp.float32)
-    elif cfg.scheme == "discard":
-        contrib = state.params
-        valid = arrived.astype(jnp.float32)
-    elif cfg.scheme == "async":
-        # the delayed update arrives anyway but staleness-weighted [3]
-        w = cfg.async_alpha * (1.0 + 1.0) ** (-cfg.async_a)
-        contrib = state.params
-        valid = jnp.where(arrived, 1.0, w)
-    else:
-        raise ValueError(cfg.scheme)
-    return contrib, valid
+    return get_scheme(cfg.scheme).pod_contribution(
+        state.params, state.snapshot, have_snap, arrived,
+        alpha=cfg.async_alpha, a=cfg.async_a)
 
 
 def round_sync(cfg: OppSyncConfig, state: TrainState,
@@ -187,4 +180,6 @@ def make_opp_sync_round(cfg: OppSyncConfig, train_step: Callable,
         in_specs=(state_spec, batch_spec, P(None, ax), P(None, ax), P(ax)),
         out_specs=(state_spec, P(ax, None)),
         check_rep=False)
-    return jax.jit(smapped)
+    # both callers rebind `state, losses = one_round(state, ...)`, so the
+    # old sharded state is safely donated to the new one
+    return jax.jit(smapped, donate_argnums=(0,))

@@ -55,7 +55,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, replace
-from typing import Any, Dict, Optional, Sequence, Tuple
+from typing import Any, Dict, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -240,6 +240,17 @@ class Scheme:
             return global_params
         return fedavg(arrived)
 
+    def pod_contribution(self, params, snapshot, have_snap, arrived, *,
+                         alpha: float = 0.4, a: float = 0.5):
+        """Per-pod twin of ``aggregate`` for the shard_map engine
+        (``opportunistic_sync``): this pod's payload and its weight in
+        the cross-pod mean.  ``arrived``/``have_snap`` are scalar bools
+        local to the pod; returns ``(contrib, valid)`` with ``valid`` a
+        scalar f32 weight.  Base: a missed final contributes nothing
+        (discard/sync)."""
+        del snapshot, have_snap, alpha, a
+        return params, arrived.astype(jnp.float32)
+
     def delayed_out(self, valid, arrived) -> jnp.ndarray:
         """Which users enter next round's staleness carry."""
         return jnp.zeros_like(arrived)
@@ -362,6 +373,13 @@ class OptScheme(Scheme):
         weights = (arrived | rescued).astype(jnp.float32)
         return masked_mean(contrib, weights, params), rescued
 
+    def pod_contribution(self, params, snapshot, have_snap, arrived, *,
+                         alpha: float = 0.4, a: float = 0.5):
+        del alpha, a
+        contrib = jax.tree_util.tree_map(
+            lambda p, s: jnp.where(arrived, p, s), params, snapshot)
+        return contrib, (arrived | have_snap).astype(jnp.float32)
+
 
 @register_scheme("async")
 class AsyncScheme(Scheme):
@@ -394,6 +412,13 @@ class AsyncScheme(Scheme):
                 out = fedasync_merge(out, upd, staleness, alpha, a)
             return out
         return global_params
+
+    def pod_contribution(self, params, snapshot, have_snap, arrived, *,
+                         alpha: float = 0.4, a: float = 0.5):
+        del snapshot, have_snap
+        # the delayed update arrives anyway, one round stale [3]
+        w = alpha * 2.0 ** (-a)
+        return params, jnp.where(arrived, 1.0, w)
 
     def delayed_out(self, valid, arrived) -> jnp.ndarray:
         return valid & ~arrived

@@ -39,7 +39,7 @@ import numpy as np
 
 from repro.core.hsfl import HSFLConfig, build_sim_arrays
 from repro.core.metrics import RoundLog, SimLog
-from repro.core.schemes import Scheme, get_scheme
+from repro.core.schemes import get_scheme
 
 # Fields of HSFLConfig a sweep may vary *per traced config axis* (the inner
 # vmap).  Everything else that varies must be a sim axis (data-level: seed,
@@ -283,35 +283,45 @@ def _group_inputs(group: CompiledGroup, rounds: int,
     from repro.models import cnn as cnn_mod
 
     base = group.base
-    if data is None:
-        data = {k: jnp.asarray(v) for k, v in _stack_sims(group).items()}
+    # this function IS the host->device staging boundary of the sweep
+    # engine (seeds, init params, sim constants), so transfers are
+    # explicitly opted in here; everything after it — the scanned round
+    # programs — runs clean under transfer_guard_host_to_device("disallow")
+    with jax.transfer_guard_host_to_device("allow"):
+        if data is None:
+            data = {k: jax.device_put(np.asarray(v))
+                    for k, v in _stack_sims(group).items()}
 
-    params0, fleets, rkeys = [], [], []
-    for seed, _ in group.sims:
-        params0.append(cnn_mod.init_cnn(jax.random.PRNGKey(seed)))
-        fleets.append(jax.random.PRNGKey(seed + 1))
-        rkeys.append(jax.random.split(
-            jax.random.fold_in(jax.random.PRNGKey(seed), 2), rounds))
-    params0 = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *params0)
-    fleet0 = jax.vmap(
-        lambda k: fleet_init(k, base.n_uavs, base.channel))(
-            jnp.stack(fleets))
-    round_keys = jnp.stack(rkeys)             # (S, rounds, key)
+        params0, fleets, rkeys = [], [], []
+        for seed, _ in group.sims:
+            params0.append(cnn_mod.init_cnn(jax.random.PRNGKey(seed)))
+            fleets.append(jax.random.PRNGKey(seed + 1))
+            rkeys.append(jax.random.split(
+                jax.random.fold_in(jax.random.PRNGKey(seed), 2), rounds))
+        params0 = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *params0)
+        fleet0 = jax.vmap(
+            lambda k: fleet_init(k, base.n_uavs, base.channel))(
+                jnp.stack(fleets))
+        round_keys = jnp.stack(rkeys)             # (S, rounds, key)
 
-    k = base.k_select
-    zstack = jax.tree_util.tree_map(
-        lambda a: jnp.zeros((a.shape[0], k) + a.shape[1:], a.dtype), params0)
-    carry0 = DeviceSimCarry(
-        params=params0, fleet=fleet0, delayed=zstack,
-        delayed_mask=jnp.zeros((len(group.sims), k), bool))
-    # materialize the config axis on the carry (every config evolves its
-    # own state anyway) so the jit can donate it: leaves become (S, C, ...)
-    c = len(group.cfgs)
-    carry0 = jax.tree_util.tree_map(
-        lambda a: jnp.broadcast_to(a[:, None], a.shape[:1] + (c,)
-                                   + a.shape[1:]), carry0)
-    cfg_stack = {key: jnp.asarray([cf[key] for cf in group.cfgs], jnp.float32)
-                 for key in CFG_AXES}
+        k = base.k_select
+        zstack = jax.tree_util.tree_map(
+            lambda a: jnp.zeros((a.shape[0], k) + a.shape[1:], a.dtype),
+            params0)
+        carry0 = DeviceSimCarry(
+            params=params0, fleet=fleet0, delayed=zstack,
+            delayed_mask=jnp.zeros((len(group.sims), k), bool))
+        # materialize the config axis on the carry (every config evolves its
+        # own state anyway) so the jit can donate it: leaves become
+        # (S, C, ...)
+        c = len(group.cfgs)
+        carry0 = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[:, None], a.shape[:1] + (c,)
+                                       + a.shape[1:]), carry0)
+        cfg_stack = {key: jax.device_put(
+                         np.asarray([cf[key] for cf in group.cfgs],
+                                    np.float32))
+                     for key in CFG_AXES}
     return carry0, round_keys, data, cfg_stack
 
 
@@ -436,7 +446,7 @@ def _run_sweep(spec: SweepSpec, mesh: Any = "auto", verbose: bool = False,
             programs[key] = (_build_group_fn(group), len(programs))
         fn, pid = programs[key]
         if group.sims not in sims_data:
-            sims_data[group.sims] = {k: jnp.asarray(v)
+            sims_data[group.sims] = {k: jax.device_put(np.asarray(v))
                                      for k, v in _stack_sims(group).items()}
         specs = input_specs(group)
         sig = (pid,) + tuple((l.shape, str(l.dtype))

@@ -54,7 +54,10 @@ def _quant_kernel(x_ref, q_ref, s_ref, *, qmax):
 
 
 def _dequant_kernel(q_ref, s_ref, x_ref, *, dtype):
-    x_ref[...] = (q_ref[...].astype(jnp.float32) * s_ref[...]).astype(dtype)
+    # int8 q always widens through f32 (the scales' dtype) before the
+    # *threaded* output cast — the f32 step is the accumulator, not policy
+    x_ref[...] = (q_ref[...].astype(jnp.float32)  # analysis: ok=dtype-thread
+                  * s_ref[...]).astype(dtype)
 
 
 def quantize_blocks(x: jnp.ndarray, interpret: bool = False, bits: int = 8):

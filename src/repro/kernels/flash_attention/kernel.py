@@ -46,7 +46,8 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
     if causal:
         block_live &= (kj * block_k) <= (qi * block_q + block_q - 1 + (seq_k - seq_q))
     if window > 0:
-        block_live &= (qi * block_q + (seq_k - seq_q)) - (kj * block_k + block_k - 1) < window
+        block_live &= ((qi * block_q + (seq_k - seq_q))
+                       - (kj * block_k + block_k - 1) < window)
 
     @pl.when(block_live)
     def _compute():

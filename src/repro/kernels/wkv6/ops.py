@@ -8,7 +8,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.wkv6.kernel import wkv6_bh
-from repro.kernels.wkv6.ref import wkv6_ref
 
 
 @partial(jax.jit, static_argnames=("chunk", "interpret"))

@@ -17,7 +17,6 @@ Per program it records: bytes-per-device (memory_analysis), HLO FLOPs/bytes
 utils/hlo.py), and the three §Roofline terms.
 """
 import argparse
-import dataclasses
 import json
 import sys
 import time
@@ -133,7 +132,8 @@ def build_program(cfg: ModelConfig, shape: InputShape, mesh, multi_pod: bool,
 
 
 def roofline_terms(cfg: ModelConfig, shape: InputShape, flops: float,
-                   hbm_bytes: float, coll_bytes: float, n_chips: int) -> Dict[str, float]:
+                   hbm_bytes: float, coll_bytes: float,
+                   n_chips: int) -> Dict[str, float]:
     compute_s = flops / (n_chips * PEAK_FLOPS_BF16)
     memory_s = hbm_bytes / (n_chips * HBM_BW)
     collective_s = coll_bytes / (n_chips * ICI_BW)
@@ -221,7 +221,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
             rec["total_compile_s"] = rec["lower_compile_s"]
             rec["status"] = "ok"
             if verbose:
-                print(f"OK {arch} x {shape_name} mesh={'2x16x16' if multi_pod else '16x16'} "
+                mesh_name = "2x16x16" if multi_pod else "16x16"
+                print(f"OK {arch} x {shape_name} mesh={mesh_name} "
                       f"compile={rec['lower_compile_s']}s "
                       f"mem/dev={per_dev_bytes/2**30:.2f}GiB (lowering proof only)",
                       flush=True)
@@ -254,7 +255,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
         rec["status"] = "ok"
         if verbose:
             r = rec["roofline"]
-            print(f"OK {arch} x {shape_name} mesh={'2x16x16' if multi_pod else '16x16'} "
+            mesh_name = "2x16x16" if multi_pod else "16x16"
+            print(f"OK {arch} x {shape_name} mesh={mesh_name} "
                   f"compile={rec['total_compile_s']}s "
                   f"mem/dev={per_dev_bytes/2**30:.2f}GiB "
                   f"compute={r['compute_s']*1e3:.2f}ms mem={r['memory_s']*1e3:.2f}ms "

@@ -11,7 +11,7 @@ interpret-validated on CPU — see repro.kernels.flash_attention).
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -171,7 +171,8 @@ def cache_len(cfg: ModelConfig, context_len: int) -> int:
     return context_len
 
 
-def init_cache(cfg: ModelConfig, batch: int, context_len: int, dtype) -> Dict[str, jnp.ndarray]:
+def init_cache(cfg: ModelConfig, batch: int, context_len: int,
+               dtype) -> Dict[str, jnp.ndarray]:
     C = cache_len(cfg, context_len)
     shape = (batch, C, cfg.num_kv_heads, cfg.head_dim)
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}

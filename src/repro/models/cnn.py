@@ -22,13 +22,16 @@ def init_cnn(key, num_classes: int = 10, image_side: int = 28):
     side = image_side // 4                        # two 2x2 pools
     flat = side * side * 16
     return {
-        "conv1": {"w": (jax.random.normal(ks[0], (3, 3, 1, 8)) * (9 ** -0.5)).astype(jnp.float32),
+        "conv1": {"w": (jax.random.normal(ks[0], (3, 3, 1, 8))
+                        * (9 ** -0.5)).astype(jnp.float32),
                   "b": m.zeros((8,))},
-        "conv2": {"w": (jax.random.normal(ks[1], (3, 3, 8, 16)) * (72 ** -0.5)).astype(jnp.float32),
+        "conv2": {"w": (jax.random.normal(ks[1], (3, 3, 8, 16))
+                        * (72 ** -0.5)).astype(jnp.float32),
                   "b": m.zeros((16,))},
         "fc1": {"w": m.dense_init(ks[2], flat, 128), "b": m.zeros((128,))},
         "fc2": {"w": m.dense_init(ks[3], 128, 64), "b": m.zeros((64,))},
-        "fc3": {"w": m.dense_init(ks[4], 64, num_classes), "b": m.zeros((num_classes,))},
+        "fc3": {"w": m.dense_init(ks[4], 64, num_classes),
+                "b": m.zeros((num_classes,))},
     }
 
 
@@ -59,7 +62,8 @@ def apply_stage(params, stage: str, x: jnp.ndarray) -> jnp.ndarray:
     return _fc(params["fc3"], x, act=False)
 
 
-def forward(params, images: jnp.ndarray, start: int = 0, stop: int = NUM_STAGES) -> jnp.ndarray:
+def forward(params, images: jnp.ndarray, start: int = 0,
+            stop: int = NUM_STAGES) -> jnp.ndarray:
     """images: (B, 28, 28, 1) (or the cut activation when start > 0)."""
     x = images
     for stage in STAGES[start:stop]:
@@ -125,7 +129,10 @@ def forward_im2col(params, images: jnp.ndarray,
     y = _fc(params["fc1"], y)
     y = _fc(params["fc2"], y)
     y = _fc(params["fc3"], y, act=False)
-    return y.astype(jnp.float32) if compute_dtype is not None else y
+    # f32-logits contract: losses always reduce in f32 whatever the
+    # compute dtype, so the cast target is deliberately not threaded
+    return (y.astype(jnp.float32)  # analysis: ok=dtype-thread
+            if compute_dtype is not None else y)
 
 
 def forward_im2col_k(params, images: jnp.ndarray,

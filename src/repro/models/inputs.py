@@ -71,7 +71,8 @@ def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
 # real arrays with the same structure (smoke tests / examples)
 # ---------------------------------------------------------------------------
 
-def materialize(spec: Dict[str, Any], cfg: ModelConfig, seed: int = 0) -> Dict[str, Any]:
+def materialize(spec: Dict[str, Any], cfg: ModelConfig,
+                seed: int = 0) -> Dict[str, Any]:
     rng = np.random.default_rng(seed)
     out: Dict[str, Any] = {}
     for name, s in spec.items():

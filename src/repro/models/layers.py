@@ -65,7 +65,8 @@ def init_lm_head(key, cfg: ModelConfig):
     return {"w": m.dense_init(key, cfg.d_model, cfg.vocab_padded, pdt)}
 
 
-def lm_logits(head_params, embed_params, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+def lm_logits(head_params, embed_params, cfg: ModelConfig,
+              x: jnp.ndarray) -> jnp.ndarray:
     """Logits over the padded vocab; padded slots masked to a large negative."""
     if cfg.tie_embeddings:
         logits = x @ embed_params["table"].astype(x.dtype).T

@@ -67,7 +67,7 @@ def mamba_full(params, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
     xf = xc.astype(jnp.float32)
 
     def step(h, t):
-        dt_t, B_t, C_t, x_t = t                               # (B,di) (B,N) (B,N) (B,di)
+        dt_t, B_t, C_t, x_t = t                    # (B,di) (B,N) (B,N) (B,di)
         decay = jnp.exp(dt_t[..., None] * A)                  # (B, di, N)
         h = decay * h + (dt_t * x_t)[..., None] * B_t[:, None, :]
         y = jnp.einsum("bdn,bn->bd", h, C_t)

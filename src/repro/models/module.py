@@ -25,7 +25,8 @@ def dtype_of(name: str):
 # initialisers
 # ---------------------------------------------------------------------------
 
-def dense_init(key, in_dim: int, out_dim: int, dtype=jnp.float32, scale: float | None = None):
+def dense_init(key, in_dim: int, out_dim: int, dtype=jnp.float32,
+               scale: float | None = None):
     """Fan-in scaled truncated-normal (LeCun) weight (in_dim, out_dim)."""
     std = scale if scale is not None else in_dim ** -0.5
     w = jax.random.truncated_normal(key, -2.0, 2.0, (in_dim, out_dim)) * std
@@ -44,7 +45,8 @@ def ones(shape, dtype=jnp.float32):
     return jnp.ones(shape, dtype)
 
 
-def stack_layers(init_fn: Callable[[jax.Array], Params], key, num_layers: int) -> Params:
+def stack_layers(init_fn: Callable[[jax.Array], Params], key,
+                 num_layers: int) -> Params:
     """vmap a single-layer init over per-layer keys -> stacked leaves (L, ...)."""
     keys = jax.random.split(key, num_layers)
     return jax.vmap(init_fn)(keys)

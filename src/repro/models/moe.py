@@ -15,7 +15,7 @@ Router aux loss is the Switch load-balance term  E * sum_e f_e * P_e.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -69,7 +69,8 @@ def _route(params, cfg: ModelConfig, x2d: jnp.ndarray):
     return top_w.astype(x2d.dtype), top_e, aux
 
 
-def moe_dense(params, cfg: ModelConfig, x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+def moe_dense(params, cfg: ModelConfig,
+              x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """All-experts einsum path.  x: (B, S, d) -> (y, aux).
 
     The router combine is folded INTO the down-projection contraction

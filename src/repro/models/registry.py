@@ -30,7 +30,8 @@ def build_model(cfg: ModelConfig) -> Model:
         return Model(
             cfg=cfg,
             init=lambda key: cnn_mod.init_cnn(key, cfg.vocab_size, cfg.d_model),
-            forward=lambda p, inputs, opts=None: (cnn_mod.forward(p, inputs["images"]), 0.0),
+            forward=lambda p, inputs, opts=None: (
+                cnn_mod.forward(p, inputs["images"]), 0.0),
             decode=None,
             init_decode_state=None,
         )
@@ -40,9 +41,11 @@ def build_model(cfg: ModelConfig) -> Model:
         init=lambda key: tf.init_model(key, cfg),
         forward=lambda p, inputs, opts=None: tf.forward_full(p, cfg, inputs, opts),
         decode=(lambda p, token, state, position, opts=None:
-                tf.decode_step(p, cfg, token, state, position, opts)) if has_decode else None,
+                tf.decode_step(p, cfg, token, state, position, opts)
+                ) if has_decode else None,
         init_decode_state=(lambda batch, context_len, dtype:
-                           tf.init_decode_state(cfg, batch, context_len, dtype)) if has_decode else None,
+                           tf.init_decode_state(cfg, batch, context_len, dtype)
+                           ) if has_decode else None,
     )
 
 

@@ -37,7 +37,9 @@ def rope_angles(positions: jnp.ndarray, head_dim: int, theta: float,
                         total_repeat_length=half)            # (half,)
     pos = jnp.take_along_axis(
         positions.astype(jnp.float32),                       # (B, 3, S)
-        jnp.broadcast_to(sec_id[None, :, None], (positions.shape[0], half, positions.shape[2])).astype(jnp.int32),
+        jnp.broadcast_to(
+            sec_id[None, :, None],
+            (positions.shape[0], half, positions.shape[2])).astype(jnp.int32),
         axis=1)                                              # (B, half, S)
     return jnp.swapaxes(pos, 1, 2) * inv                     # (B, S, half)
 

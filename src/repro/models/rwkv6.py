@@ -120,10 +120,12 @@ def init_channel_mix(key, cfg: ModelConfig):
     pdt = m.dtype_of(cfg.param_dtype)
     ks = jax.random.split(key, 3)
     return {
-        "mu": (jax.random.uniform(ks[2], (2, cfg.d_model)) * 0.5 + 0.25).astype(jnp.float32),
+        "mu": (jax.random.uniform(ks[2], (2, cfg.d_model))
+               * 0.5 + 0.25).astype(jnp.float32),
         "w_k": m.dense_init(ks[0], cfg.d_model, cfg.d_ff, pdt),
         "w_v": m.dense_init(ks[1], cfg.d_ff, cfg.d_model, pdt),
-        "w_r": m.dense_init(jax.random.fold_in(ks[0], 1), cfg.d_model, cfg.d_model, pdt),
+        "w_r": m.dense_init(jax.random.fold_in(ks[0], 1), cfg.d_model,
+                            cfg.d_model, pdt),
     }
 
 

@@ -95,7 +95,8 @@ def _mixer_full(p, cfg: ModelConfig, h: jnp.ndarray, positions, opts) -> jnp.nda
                             act=act)
 
 
-def _ffn_full(p, cfg: ModelConfig, h: jnp.ndarray, opts) -> Tuple[jnp.ndarray, jnp.ndarray]:
+def _ffn_full(p, cfg: ModelConfig, h: jnp.ndarray,
+              opts) -> Tuple[jnp.ndarray, jnp.ndarray]:
     if cfg.family == "ssm":
         return rk.channel_mix_full(p["channel"], cfg, h), jnp.zeros((), jnp.float32)
     if cfg.num_experts:

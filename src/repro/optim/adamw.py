@@ -1,7 +1,7 @@
 """AdamW with fp32 master moments (params may live in bf16)."""
 from __future__ import annotations
 
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -44,7 +44,8 @@ def adamw(learning_rate: float | Callable, b1: float = 0.9, b2: float = 0.95,
         flat_g, treedef = jax.tree_util.tree_flatten(grads)
         flat_m = treedef.flatten_up_to(state["m"])
         flat_v = treedef.flatten_up_to(state["v"])
-        flat_p = treedef.flatten_up_to(params) if params is not None else [None] * len(flat_g)
+        flat_p = (treedef.flatten_up_to(params) if params is not None
+                  else [None] * len(flat_g))
         out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
         updates = treedef.unflatten([o[0] for o in out])
         new_m = treedef.unflatten([o[1] for o in out])

@@ -1,8 +1,7 @@
 """SGD (+ optional momentum) — mini-optax style (init/update pairs)."""
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Any, Callable, NamedTuple, Optional, Tuple
+from typing import Any, Callable, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

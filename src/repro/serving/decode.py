@@ -1,7 +1,7 @@
 """Batched autoregressive serving loop on top of decode_step."""
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -54,7 +54,7 @@ from repro.checkpoint.msgpack_ckpt import (_decode_leaf, _encode_leaf,
                                            restore_checkpoint,
                                            save_checkpoint)
 from repro.core import latency as lat
-from repro.core.faults import (BackoffPolicy, CorruptPayload, FaultPlan,
+from repro.core.faults import (BackoffPolicy, CorruptPayload,
                                RetriesExhausted, ServerCrash, UploadTimeout,
                                as_fault_plan, client_rng, retry_call)
 from repro.core.hsfl import (HSFLConfig, HSFLSimulation, _k_bucket,

@@ -4,7 +4,7 @@ Also carries the OpportunisticSync snapshot slots when the pod-axis OPT
 feature is enabled (core/opportunistic_sync.py)."""
 from __future__ import annotations
 
-from typing import Any, Dict, NamedTuple, Optional
+from typing import Any, NamedTuple, Optional
 
 import jax.numpy as jnp
 

@@ -22,5 +22,6 @@ def tree_describe(tree: Any, max_leaves: int = 20) -> str:
     lines = []
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0][:max_leaves]:
         keys = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
-        lines.append(f"{keys}: {getattr(leaf, 'shape', ())} {getattr(leaf, 'dtype', '')}")
+        lines.append(f"{keys}: {getattr(leaf, 'shape', ())} "
+                     f"{getattr(leaf, 'dtype', '')}")
     return "\n".join(lines)

@@ -1,0 +1,502 @@
+"""repro.analysis lint + contract tests.
+
+Every rule gets a positive fixture (the violation fires at the expected
+line) and a negative fixture (the compliant twin stays silent) — the
+fixtures are the repo's own bug taxonomy: each one reproduces, in
+miniature, a defect class an earlier PR actually fixed.  The contract
+half is checked both ways: the real tree must be clean, and a planted
+mismatch must be caught.
+"""
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis.findings import Baseline, Finding, filter_findings, \
+    pragma_rules, suppressed_by_pragma
+from repro.analysis.lint import all_rules, lint_source
+
+REPO = Path(__file__).resolve().parents[1]
+
+CORE = "src/repro/core/somemod.py"
+KERN = "src/repro/kernels/somepkg/kernel.py"
+
+
+def findings_for(src, relpath, rule=None):
+    out = [f for f in lint_source(textwrap.dedent(src), relpath)]
+    if rule is not None:
+        out = [f for f in out if f.rule == rule]
+    return out
+
+
+def test_rule_registry_nonempty():
+    names = {r.name for r in all_rules()}
+    assert {"scheme-branch", "host-sync", "rng-reuse", "jit-donate",
+            "dtype-thread", "np-hot"} <= names
+
+
+# ---------------------------------------------------------------------------
+# scheme-branch
+# ---------------------------------------------------------------------------
+
+SCHEME_BRANCH = """
+def agg(scheme, x):
+    if scheme == "opt":
+        return x
+    if scheme in ("async", "discard"):
+        return -x
+"""
+
+
+def test_scheme_branch_fires_outside_registry():
+    got = findings_for(SCHEME_BRANCH, CORE, "scheme-branch")
+    assert len(got) == 2
+    assert {f.line for f in got} == {3, 5}
+
+
+def test_scheme_branch_allowed_in_schemes_py():
+    assert not findings_for(SCHEME_BRANCH, "src/repro/core/schemes.py",
+                            "scheme-branch")
+
+
+def test_scheme_branch_ignores_other_strings():
+    src = """
+    def f(mode, x):
+        if mode == "fast":
+            return x
+    """
+    assert not findings_for(src, CORE, "scheme-branch")
+
+
+# ---------------------------------------------------------------------------
+# host-sync
+# ---------------------------------------------------------------------------
+
+def test_host_sync_item_in_scanned_body():
+    src = """
+    import jax
+
+    def build_round():
+        def body(c, x):
+            return c + x.item(), None
+        return jax.lax.scan(body, 0.0, xs)
+    """
+    got = findings_for(src, CORE, "host-sync")
+    assert len(got) == 1 and got[0].line == 6
+
+
+def test_host_sync_clock_in_jitted_fn():
+    src = """
+    import time
+    import jax
+
+    @jax.jit
+    def step(x):
+        t0 = time.time()
+        return x * t0
+    """
+    got = findings_for(src, CORE, "host-sync")
+    assert len(got) == 1 and "time.time" in got[0].snippet
+
+
+def test_host_sync_float_of_traced_value():
+    src = """
+    import jax
+
+    def make_step():
+        def step(x):
+            return float(x) * 2.0
+        return jax.jit(step, donate_argnums=(0,))
+    """
+    assert findings_for(src, CORE, "host-sync")
+
+
+def test_host_sync_allows_static_shape_math():
+    src = """
+    import jax
+
+    def make_step():
+        def step(x):
+            return x / float(x.shape[0])
+        return jax.jit(step, donate_argnums=(0,))
+    """
+    assert not findings_for(src, CORE, "host-sync")
+
+
+def test_host_sync_host_code_untouched():
+    src = """
+    import time
+
+    def report(x):
+        t0 = time.time()
+        return x.item(), t0
+    """
+    assert not findings_for(src, CORE, "host-sync")
+
+
+def test_host_sync_only_core_and_kernels():
+    src = """
+    import jax
+
+    @jax.jit
+    def step(x):
+        return float(x)
+    """
+    assert not findings_for(src, "src/repro/serving/server.py", "host-sync")
+
+
+# ---------------------------------------------------------------------------
+# rng-reuse
+# ---------------------------------------------------------------------------
+
+def test_rng_double_consume():
+    src = """
+    import jax
+
+    def sample(key):
+        a = jax.random.normal(key, (3,))
+        b = jax.random.uniform(key, (3,))
+        return a + b
+    """
+    got = findings_for(src, CORE, "rng-reuse")
+    assert len(got) == 1 and got[0].line == 6
+
+
+def test_rng_loop_reuse():
+    src = """
+    import jax
+
+    def sample(key):
+        out = []
+        for i in range(4):
+            out.append(jax.random.normal(key, (3,)))
+        return out
+    """
+    got = findings_for(src, CORE, "rng-reuse")
+    assert len(got) == 1 and "loop" in got[0].message
+
+
+def test_rng_split_chain_ok():
+    src = """
+    import jax
+
+    def sample(key):
+        out = []
+        for i in range(4):
+            sub, key = jax.random.split(key)
+            out.append(jax.random.normal(sub, (3,)))
+        return out
+    """
+    assert not findings_for(src, CORE, "rng-reuse")
+
+
+def test_rng_fold_in_ok():
+    src = """
+    import jax
+
+    def sample(key):
+        return [jax.random.normal(jax.random.fold_in(key, i), (3,))
+                for i in range(4)]
+    """
+    assert not findings_for(src, CORE, "rng-reuse")
+
+
+def test_rng_exclusive_branches_ok():
+    src = """
+    import jax
+
+    def sample(key, flag):
+        if flag:
+            return jax.random.normal(key, (3,))
+        else:
+            return jax.random.uniform(key, (3,))
+    """
+    assert not findings_for(src, CORE, "rng-reuse")
+
+
+# ---------------------------------------------------------------------------
+# jit-donate
+# ---------------------------------------------------------------------------
+
+def test_jit_donate_fires_in_core():
+    src = """
+    import jax
+
+    def build(f):
+        return jax.jit(f)
+    """
+    assert findings_for(src, CORE, "jit-donate")
+
+
+def test_jit_donate_satisfied():
+    src = """
+    import jax
+
+    def build(f):
+        return jax.jit(f, donate_argnums=(0,))
+    """
+    assert not findings_for(src, CORE, "jit-donate")
+
+
+def test_jit_donate_scope_is_core_only():
+    src = """
+    import jax
+
+    def build(f):
+        return jax.jit(f)
+    """
+    assert not findings_for(src, KERN, "jit-donate")
+
+
+def test_jit_donate_pragma_suppression():
+    src = """
+    import jax
+
+    def build(f):
+        return jax.jit(f)  # analysis: ok=jit-donate
+    """
+    findings = findings_for(src, CORE, "jit-donate")
+    assert len(findings) == 1  # raw lint still reports it ...
+    lines = textwrap.dedent(src).splitlines()
+    assert suppressed_by_pragma(findings[0], lines)  # ... filter drops it
+
+
+def test_pragma_wrong_rule_does_not_suppress():
+    line = "return jax.jit(f)  # analysis: ok=np-hot"
+    f = Finding(path=CORE, line=1, col=0, rule="jit-donate", message="m",
+                snippet=line.strip())
+    assert not suppressed_by_pragma(f, [line])
+    assert pragma_rules(line) == frozenset({"np-hot"})
+
+
+# ---------------------------------------------------------------------------
+# dtype-thread
+# ---------------------------------------------------------------------------
+
+def test_dtype_thread_unused_param():
+    src = """
+    import jax.numpy as jnp
+
+    def forward(params, x, compute_dtype=None):
+        return x @ params
+    """
+    got = findings_for(src, KERN, "dtype-thread")
+    assert len(got) == 1 and "compute_dtype" in got[0].message
+
+
+def test_dtype_thread_hardcoded_cast():
+    src = """
+    import jax.numpy as jnp
+
+    def forward(params, x, compute_dtype=jnp.float32):
+        y = x.astype(compute_dtype) @ params
+        return y.astype(jnp.float32)
+    """
+    got = findings_for(src, KERN, "dtype-thread")
+    assert len(got) == 1 and "astype" in got[0].snippet
+
+
+def test_dtype_thread_threaded_ok():
+    src = """
+    import jax.numpy as jnp
+
+    def forward(params, x, compute_dtype=jnp.float32):
+        return (x @ params).astype(compute_dtype)
+    """
+    assert not findings_for(src, KERN, "dtype-thread")
+
+
+# ---------------------------------------------------------------------------
+# np-hot
+# ---------------------------------------------------------------------------
+
+def test_np_hot_fires_in_hot_module():
+    src = """
+    import numpy as np
+
+    def agg(x):
+        return np.mean(x)
+    """
+    got = findings_for(src, "src/repro/core/fused_round.py", "np-hot")
+    assert len(got) == 1
+
+
+def test_np_hot_constants_allowed():
+    src = """
+    import numpy as np
+
+    def agg(x):
+        return x * np.pi + np.float32(0)
+    """
+    assert not findings_for(src, "src/repro/core/fused_round.py", "np-hot")
+
+
+def test_np_hot_cold_modules_exempt():
+    src = """
+    import numpy as np
+
+    def agg(x):
+        return np.mean(x)
+    """
+    assert not findings_for(src, "src/repro/core/metrics.py", "np-hot")
+
+
+# ---------------------------------------------------------------------------
+# baseline round-trip + syntax errors
+# ---------------------------------------------------------------------------
+
+def test_baseline_round_trip(tmp_path):
+    f = Finding(path=CORE, line=7, col=4, rule="jit-donate",
+                message="msg", snippet="return jax.jit(f)")
+    text = Baseline.render([f])
+    p = tmp_path / "baseline.txt"
+    p.write_text(text.replace("TODO: one-line justification", "reviewed"))
+    bl = Baseline.load(p)
+    assert bl.covers(f)
+    # line drift must not invalidate the entry (keyed on source text)
+    drifted = Finding(path=f.path, line=99, col=0, rule=f.rule,
+                      message=f.message, snippet=f.snippet)
+    assert bl.covers(drifted)
+    assert not bl.stale()
+    other = Finding(path=f.path, line=7, col=4, rule="np-hot",
+                    message="msg", snippet="np.mean(x)")
+    assert not bl.covers(other)
+
+
+def test_filter_findings_applies_baseline_and_pragma(tmp_path):
+    src = "import jax\ndef build(f):\n    return jax.jit(f)\n"
+    live = lint_source(src, CORE)
+    assert live
+    p = tmp_path / "baseline.txt"
+    p.write_text(Baseline.render(live))
+    bl = Baseline.load(p)
+    kept = filter_findings(live, bl, {CORE: src.splitlines()})
+    assert kept == []
+    assert not bl.stale()
+
+
+def test_syntax_error_is_a_finding():
+    got = lint_source("def broken(:\n", CORE)
+    assert len(got) == 1 and got[0].rule == "syntax"
+
+
+# ---------------------------------------------------------------------------
+# CLI end-to-end on a temp tree
+# ---------------------------------------------------------------------------
+
+VIOLATION = """import jax
+
+def build(f):
+    return jax.jit(f)
+"""
+
+
+def _run_cli(root, *extra):
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--root", str(root),
+         "--no-contracts", *extra],
+        capture_output=True, text=True,
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin",
+             "HOME": "/tmp"})
+
+
+@pytest.fixture
+def tmp_tree(tmp_path):
+    mod = tmp_path / "src" / "repro" / "core"
+    mod.mkdir(parents=True)
+    (mod / "bad.py").write_text(VIOLATION)
+    return tmp_path
+
+
+def test_cli_exits_nonzero_on_violation(tmp_tree):
+    res = _run_cli(tmp_tree, "src/repro")
+    assert res.returncode == 1
+    assert "[jit-donate]" in res.stdout
+    assert "src/repro/core/bad.py:4" in res.stdout
+
+
+def test_cli_baseline_silences(tmp_tree):
+    res = _run_cli(tmp_tree, "--write-baseline", "src/repro")
+    assert res.returncode == 0
+    (tmp_tree / "analysis_baseline.txt").write_text(
+        res.stdout.replace("TODO: one-line justification", "reviewed"))
+    res2 = _run_cli(tmp_tree, "src/repro")
+    assert res2.returncode == 0, res2.stdout + res2.stderr
+
+
+def test_cli_clean_tree_exits_zero(tmp_tree):
+    (tmp_tree / "src" / "repro" / "core" / "bad.py").write_text(
+        "import jax\n\ndef build(f):\n"
+        "    return jax.jit(f, donate_argnums=(0,))\n")
+    res = _run_cli(tmp_tree, "src/repro")
+    assert res.returncode == 0
+    assert "clean" in res.stdout
+
+
+def test_repo_tree_is_clean():
+    """The repo's own lint findings are all fixed, pragma'd or baselined."""
+    res = _run_cli(REPO)
+    assert res.returncode == 0, res.stdout + res.stderr
+
+
+# ---------------------------------------------------------------------------
+# contracts
+# ---------------------------------------------------------------------------
+
+def test_compare_twin_catches_mismatch():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis.contracts import _sds, compare_twin
+
+    bad = compare_twin(
+        "demo", "src/repro/kernels/demo",
+        lambda: jax.eval_shape(lambda x: x.astype(jnp.float32),
+                               _sds((4,), jnp.int8)),
+        lambda: jax.eval_shape(lambda x: x.astype(jnp.bfloat16),
+                               _sds((4,), jnp.int8)))
+    assert len(bad) == 1 and bad[0].rule == "contract-kernel-twin"
+
+    good = compare_twin(
+        "demo", "src/repro/kernels/demo",
+        lambda: jax.eval_shape(lambda x: x + 1, _sds((4,), jnp.float32)),
+        lambda: jax.eval_shape(lambda x: x * 2, _sds((4,), jnp.float32)))
+    assert good == []
+
+
+def test_compare_twin_catches_build_failure():
+    from repro.analysis.contracts import compare_twin
+
+    def boom():
+        raise ValueError("kernel build exploded")
+
+    bad = compare_twin("demo", "src/repro/kernels/demo",
+                       lambda: {"ok": 1}, boom)
+    assert len(bad) == 1 and "exploded" in bad[0].message
+
+
+def test_twin_coverage_matches_filesystem():
+    """Every kernels/* package with a ref.py/kernel.py pair is in the
+    twin registry — adding a kernel without contract coverage fails."""
+    from repro.analysis.contracts import (covered_twin_packages,
+                                          kernel_twin_packages)
+
+    on_disk = kernel_twin_packages(REPO)
+    assert on_disk, "expected ref/kernel twin packages under src/repro/kernels"
+    assert set(on_disk) <= covered_twin_packages()
+
+
+def test_scheme_contract_sweep_covers_registry():
+    from repro.analysis.contracts import check_scheme_programs
+    from repro.core.schemes import SCHEMES
+
+    assert set(SCHEMES) >= {"opt", "discard", "async", "sync", "deadline"}
+    assert check_scheme_programs() == []
+
+
+def test_full_contract_sweep_clean():
+    from repro.analysis.contracts import run_contracts
+
+    assert run_contracts(repo_root=REPO) == []

@@ -1,0 +1,159 @@
+"""Runtime-guard tests: compile budgets, transfer guards, leak checks.
+
+The headline invariant: the sweep engine's ``SweepResult.n_programs``
+accounting must equal the number of XLA programs actually compiled — a
+silent recompile-per-round (the PR 2/PR 7 regression class) shows up here
+as a budget overrun, not as a mysteriously slow CI run.  Both engines
+must also run clean under ``jax.transfer_guard_host_to_device("disallow")``
+after their explicit ``device_put`` staging.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.guards import (CompileBudgetExceeded, CompileCounter,
+                                   compile_budget, engine_guard, leak_check,
+                                   no_implicit_transfers)
+from repro.core.hsfl import HSFLConfig, HSFLSimulation
+from repro.core.sweep import SweepSpec, run_sweep
+
+
+def tiny_base(**kw):
+    base = dict(rounds=2, n_uavs=6, k_select=3, n_train=400, n_test=100,
+                steps_per_epoch=2, local_epochs=2)
+    base.update(kw)
+    return HSFLConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# CompileCounter / compile_budget
+# ---------------------------------------------------------------------------
+
+def test_counter_sees_fresh_compile_not_cache_hit():
+    def fresh_fn_alpha(x):
+        return x * 3.0 + 1.0
+
+    f = jax.jit(fresh_fn_alpha)
+    x = jax.device_put(np.ones((8,), np.float32))
+    with CompileCounter() as cc:
+        f(x)
+        f(x)                       # cache hit — must not count
+    assert cc.count(match="fresh_fn_alpha") == 1
+    with CompileCounter() as cc2:
+        f(x)                       # still cached
+    assert cc2.count(match="fresh_fn_alpha") == 0
+
+
+def test_counter_sees_aot_compile():
+    def fresh_fn_beta(x):
+        return x - 2.0
+
+    lowered = jax.jit(fresh_fn_beta).lower(
+        jax.ShapeDtypeStruct((4,), jnp.float32))
+    with CompileCounter() as cc:
+        lowered.compile()
+    assert cc.count(match="fresh_fn_beta") == 1
+
+
+def test_compile_budget_raises_on_overrun():
+    def fresh_fn_gamma(x):
+        return x + 5.0
+
+    x = jax.device_put(np.ones((8,), np.float32))
+    with pytest.raises(CompileBudgetExceeded):
+        with compile_budget(0, match="fresh_fn_gamma"):
+            jax.jit(fresh_fn_gamma)(x)
+
+
+def test_compile_budget_passes_within_budget():
+    def fresh_fn_delta(x):
+        return x * 0.5
+
+    x = jax.device_put(np.ones((8,), np.float32))
+    with compile_budget(1, match="fresh_fn_delta") as cc:
+        jax.jit(fresh_fn_delta)(x)
+    assert cc.count(match="fresh_fn_delta") == 1
+
+
+# ---------------------------------------------------------------------------
+# transfer guard / leak check
+# ---------------------------------------------------------------------------
+
+def test_transfer_guard_blocks_implicit_h2d():
+    f = jax.jit(lambda a: a + 1.0)
+    host = np.ones((4,), np.float32)
+    with no_implicit_transfers():
+        with pytest.raises(Exception, match="[Dd]isallowed"):
+            f(host)                          # implicit numpy->device
+        out = f(jax.device_put(host))        # explicit staging is fine
+    assert np.allclose(np.asarray(out), 2.0)
+
+
+def test_transfer_guard_allows_result_reads():
+    f = jax.jit(lambda a: a + 1.0)
+    x = jax.device_put(np.ones((4,), np.float32))
+    with no_implicit_transfers():             # h2d only: d2h is the
+        val = np.asarray(f(x))                # documented sync boundary
+    assert np.allclose(val, 2.0)
+
+
+def test_leak_check_catches_escaped_tracer():
+    leaked = []
+
+    @jax.jit
+    def bad(x):
+        leaked.append(x)
+        return x * 2.0
+
+    with pytest.raises(Exception):
+        with leak_check():
+            bad(jax.device_put(np.float32(1.0)))
+
+
+# ---------------------------------------------------------------------------
+# engine-level guarantees
+# ---------------------------------------------------------------------------
+
+def test_sweep_compiles_exactly_n_programs_under_guard():
+    """run_sweep under the combined guard: no implicit h2d transfers and
+    exactly SweepResult.n_programs XLA round programs (name ``sim_one`` —
+    the innermost scanned/vmapped body each group jit compiles)."""
+    spec = SweepSpec(base=tiny_base(), seeds=(0, 1),
+                     schemes=("opt", "async"), b=(1.0, 2.0))
+    with engine_guard() as cc:
+        res = run_sweep(spec)
+    assert res.n_programs == 2                 # opt and async programs
+    assert cc.count(match="sim_one") == res.n_programs
+
+
+def test_sweep_recompile_budget_overrun_fails():
+    """If a sweep compiles more round programs than its result claims,
+    the budget context raises — the recompile-regression tripwire."""
+    spec = SweepSpec(base=tiny_base(), seeds=(0,),
+                     schemes=("opt", "async"))
+    probe = run_sweep(spec)                    # how many programs it needs
+    assert probe.n_programs == 2
+    with pytest.raises(CompileBudgetExceeded):
+        # fresh run_sweep rebuilds its closures -> recompiles every program
+        with compile_budget(probe.n_programs - 1, match="sim_one"):
+            run_sweep(spec)
+
+
+def test_fused_engine_clean_under_guard():
+    sim = HSFLSimulation(tiny_base())
+    delayed = None
+    with no_implicit_transfers():
+        for t in (1, 2):
+            log, delayed = sim.run_round(t, delayed)
+    assert log.selected == 3
+
+
+def test_fused_async_carry_clean_under_guard():
+    sim = HSFLSimulation(tiny_base(scheme="async"))
+    delayed = None
+    with no_implicit_transfers():
+        for t in (1, 2):
+            log, delayed = sim.run_round(t, delayed)
+    assert log.selected == 3

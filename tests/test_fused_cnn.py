@@ -20,7 +20,6 @@ import pytest
 
 from repro.core.hsfl import HSFLConfig, HSFLSimulation, model_compress_ratio
 from repro.data.synthetic import make_digits
-from repro.kernels.fused_cnn import ref
 from repro.kernels.fused_cnn.ops import (ForwardPolicy, make_eval_forward,
                                          make_forward, make_loss_grad,
                                          make_stacked_epoch_fn,

@@ -6,7 +6,6 @@ are the guards that kept the hillclimb honest.
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_config
 from repro.models import attention as attn_mod

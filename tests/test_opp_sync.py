@@ -112,8 +112,10 @@ _SUBPROCESS_SCRIPT = textwrap.dedent("""
     B, S = 2, 16
     rng = np.random.default_rng(0)
     batches = {
-        "tokens": jnp.asarray(rng.integers(0, 500, (N_PODS, cfg.inner_steps, B, S)), jnp.int32),
-        "labels": jnp.asarray(rng.integers(0, 500, (N_PODS, cfg.inner_steps, B, S)), jnp.int32),
+        "tokens": jnp.asarray(
+            rng.integers(0, 500, (N_PODS, cfg.inner_steps, B, S)), jnp.int32),
+        "labels": jnp.asarray(
+            rng.integers(0, 500, (N_PODS, cfg.inner_steps, B, S)), jnp.int32),
     }
     rates, outages, arrived = channel_trace(cfg, jax.random.PRNGKey(1),
                                             N_PODS, rounds=3)
@@ -123,8 +125,10 @@ _SUBPROCESS_SCRIPT = textwrap.dedent("""
 
     with jax.sharding.use_mesh(mesh) if hasattr(jax.sharding, "use_mesh") else mesh:
         for r in range(3):
-            state, losses = one_round(state, batches, rates[r].T.reshape(cfg.inner_steps+1, N_PODS),
-                                      outages[r].reshape(cfg.inner_steps+1, N_PODS), arrived[r])
+            state, losses = one_round(
+                state, batches,
+                rates[r].T.reshape(cfg.inner_steps + 1, N_PODS),
+                outages[r].reshape(cfg.inner_steps + 1, N_PODS), arrived[r])
 
     # after round_sync, all pods hold identical params
     p0 = jax.tree_util.tree_leaves(state.params)[3]

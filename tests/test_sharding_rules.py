@@ -52,7 +52,6 @@ def test_decode_state_specs_divisible(arch, multi_pod):
         shp = INPUT_SHAPES[shape_name]
         ccfg = cfg if cfg.is_subquadratic or shape_name != "long_500k" \
             else cfg.with_sliding_window()
-        from repro.models.attention import cache_len
         state = jax.eval_shape(
             lambda: tf.init_decode_state(ccfg, shp.global_batch, shp.seq_len,
                                          jax.numpy.bfloat16))

@@ -15,7 +15,6 @@ from repro.configs import get_config
 from repro.core.split import merge_stacked, split_stacked
 from repro.models import build_model
 from repro.models import cnn as cnn_mod
-from repro.models.inputs import materialize, prefill_specs
 from repro.serving import generate, prefill
 
 

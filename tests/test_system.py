@@ -1,9 +1,8 @@
 """End-to-end behaviour tests for the paper's system (HSFL + OPT)."""
-import jax
 import numpy as np
 import pytest
 
-from repro.core.hsfl import HSFLConfig, HSFLSimulation, run_hsfl
+from repro.core.hsfl import HSFLConfig, run_hsfl
 from repro.core.selection import schedule_users
 from repro.core import latency as lat
 
