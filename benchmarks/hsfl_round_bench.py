@@ -32,7 +32,10 @@ Measures rounds/sec of ``HSFLSimulation.run_round`` at the paper's scale
 
 All ``fused*`` kernel/precision variants above are measured **paired**:
 interleaved round-robin in ONE process (the container swings ±50%
-between subprocesses — see Methodology).  A ``step_bench`` child
+between subprocesses — see Methodology).  A second paired run prices the
+PR-9 Byzantine-robust aggregation: ``fused_trimmed`` (coordinate-wise
+trimmed-mean, ``opt_trimmed``) against ``fused_mean`` (the masked
+arithmetic mean, ``opt``) on the identical blocked round.  A ``step_bench`` child
 additionally microbenchmarks the training *epoch* alone
 (blocked-vs-vmapped for xla and pallas-interpret, f32-vs-bf16, the
 ``block_k`` tiling ladder) — the CI perf-guard reuses it.
@@ -95,11 +98,16 @@ ENGINES = ("host", "fused", "fused_im2col", "fused_bf16", "fused_pallas",
            "fused_vmapped", "fused_codec", "fused_sharded",
            "grid_loop", "grid_sweep", "grid_sweep_codec")
 
-# engine name -> HSFLConfig forward-policy overrides (missing = CLI flags)
+# engine name -> HSFLConfig overrides (missing = CLI flags).  Entries may
+# pin ``scheme`` too: the PR-9 robust-aggregate pair prices the fused
+# coordinate-wise trimmed-mean against the masked arithmetic mean on the
+# identical blocked round, interleaved in one process.
 ENGINE_POLICY = {"fused_im2col": dict(kernel="im2col", precision="f32"),
                  "fused_bf16": dict(precision="bf16"),
                  "fused_pallas": dict(kernel="pallas"),
-                 "fused_vmapped": dict(batch_users=False)}
+                 "fused_vmapped": dict(batch_users=False),
+                 "fused_mean": dict(scheme="opt"),
+                 "fused_trimmed": dict(scheme="opt_trimmed")}
 
 # the default paired-variant set (round-robin, one process)
 PAIR_VARIANTS = ("fused", "fused_im2col", "fused_bf16", "fused_pallas",
@@ -182,10 +190,10 @@ def measure_pair(warmup: int, rounds: int, kernel: str = "xla",
     base = dict(kernel=kernel, precision=precision, block_k=block_k)
     sims, state, policy = {}, {}, {}
     for name in names:
-        over = dict(base, **ENGINE_POLICY.get(name, {}))
+        over = {"scheme": scheme, **base, **ENGINE_POLICY.get(name, {})}
         if batch_size > 0:
             over["batch_size"] = batch_size
-        cfg = HSFLConfig(scheme=scheme, b=2, rounds=warmup + rounds, **over)
+        cfg = HSFLConfig(b=2, rounds=warmup + rounds, **over)
         sims[name] = HSFLSimulation(cfg)
         state[name] = ([], 1)
         policy[name] = cfg
@@ -215,7 +223,7 @@ def measure_pair(warmup: int, rounds: int, kernel: str = "xla",
         rows.append({"engine": name + suffix, "ms_per_round": round(ms, 1),
                      "rounds_per_sec": round(1e3 / ms, 3),
                      "mean_selected": round(sel[name] / rounds, 1),
-                     "scheme": scheme, "kernel": cfg.kernel,
+                     "scheme": cfg.scheme, "kernel": cfg.kernel,
                      "precision": cfg.precision, "block_k": cfg.block_k,
                      "batch_users": cfg.batch_users,
                      "batch_size": cfg.batch_size,
@@ -490,6 +498,12 @@ def main() -> None:
             "fused_pair", args,
             extra=["--pair-variants", "fused,fused_bf16",
                    "--pair-batch", str(args.bf16_batch)])["rows"]
+        # PR 9: price the Byzantine-robust aggregate — fused rounds under
+        # coordinate-wise trimmed-mean vs the masked arithmetic mean,
+        # identical blocked step, interleaved in one process
+        recs += run_child(
+            "fused_pair", args,
+            extra=["--pair-variants", "fused_mean,fused_trimmed"])["rows"]
         step = run_child("step_bench", args)
     recs.append(run_child("fused_codec", args))
     if args.devices > 1:
@@ -526,6 +540,11 @@ def main() -> None:
         result["round_bf16_vs_f32"] = ratio("fused", "fused_bf16")
     if "fused_pallas" in by:
         result["round_pallas_vs_xla"] = ratio("fused_pallas", "fused")
+    if "fused_trimmed" in by:
+        # robust-aggregation overhead: the masked sort network per
+        # coordinate vs one masked mean, full fused round
+        result["round_trimmed_vs_mean"] = ratio("fused_trimmed",
+                                                "fused_mean")
     b32 = f"@b{args.bf16_batch}"
     if f"fused_bf16{b32}" in by:
         result[f"round_bf16_vs_f32{b32}"] = ratio(f"fused{b32}",
@@ -543,7 +562,9 @@ def main() -> None:
             ("round_bf16_vs_f32", "bf16 vs f32 (round, batch=10)"),
             (f"round_bf16_vs_f32{b32}",
              f"bf16 vs f32 (round, batch={args.bf16_batch})"),
-            ("round_pallas_vs_xla", "pallas/xla round-time ratio")):
+            ("round_pallas_vs_xla", "pallas/xla round-time ratio"),
+            ("round_trimmed_vs_mean",
+             "trimmed-mean vs masked-mean (round)")):
         if key in result:
             print(f"{label}: {result[key]}x")
     if step is not None:

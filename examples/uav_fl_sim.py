@@ -69,6 +69,14 @@ ap.add_argument("--ckpt-dir", default=None,
 ap.add_argument("--quorum", type=float, default=0.0,
                 help="with --serve: hold rounds open for late uploads "
                      "until this fraction of scheduled finals arrived")
+ap.add_argument("--transport", action="store_true",
+                help="with --serve: chunked lossy-wire uploads with "
+                     "XOR-parity erasure rescue (core/transport)")
+ap.add_argument("--ber-bad", type=float, default=0.0,
+                help="with --transport: bit-error rate in the wire's "
+                     "bad (burst) state")
+ap.add_argument("--parity-k", type=int, default=4,
+                help="with --transport: data chunks per XOR parity group")
 args = ap.parse_args()
 
 if args.schemes:
@@ -94,6 +102,11 @@ base = Experiment(rounds=args.rounds, distribution=args.distribution,
 if args.serve:
     from repro.serving.fl_server import run_with_restarts
 
+    transport = None
+    if args.transport:
+        from repro.core.transport import TransportConfig
+        transport = TransportConfig(parity_k=args.parity_k,
+                                    ber_bad=args.ber_bad)
     scheme, b = schemes[0]
     ex = base.with_seeds(args.seed).with_scheme(scheme, b=float(b))
     print(f"--- serving {scheme} (b={b}) on {args.distribution}"
@@ -101,9 +114,10 @@ if args.serve:
     if args.ckpt_dir:
         server, restarts = run_with_restarts(
             ex.to_config(), ckpt_dir=args.ckpt_dir, fault_plan=args.faults,
-            quorum=args.quorum, verbose=True)
+            quorum=args.quorum, transport=transport, verbose=True)
     else:
-        server = ex.serve(faults=args.faults, quorum=args.quorum)
+        server = ex.serve(faults=args.faults, quorum=args.quorum,
+                          transport=transport)
         server.serve(verbose=True)
         restarts = 0
     s = server.log.summary()

@@ -250,7 +250,11 @@ class Experiment:
         Returns an un-started ``serving.fl_server.FLServer``; drive it
         with ``.serve()``/``.step()``, or hand the same config to
         ``serving.fl_server.run_with_restarts`` for crash supervision.
-        ``faults`` is a ``FaultPlan`` or plan-grammar string."""
+        ``faults`` is a ``FaultPlan`` or plan-grammar string.  Pass
+        ``transport=core.transport.TransportConfig(...)`` (rides
+        ``**server_kw``) to opt into the chunked lossy-wire model:
+        resumable uploads, Gilbert-Elliott burst errors, XOR-parity
+        erasure rescue."""
         from repro.serving.fl_server import FLServer
         return FLServer(self.to_config(), ckpt_dir=ckpt_dir,
                         fault_plan=faults, quorum=quorum, **server_kw)

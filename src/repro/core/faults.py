@@ -23,6 +23,16 @@ Fault kinds (the grammar below):
   ``crash``    — the *server* dies at a named phase of the round
                  (``train`` | ``close`` | ``checkpoint``); a supervisor
                  restarts it from the latest committed msgpack checkpoint.
+  ``flip``     — ``count`` *pre-encode* bit flips in the client's upload:
+                 the payload CRC is computed after the flip, so the
+                 corruption is CRC-clean and sails through the inbox —
+                 only Byzantine-robust aggregation (the ``opt_trimmed`` /
+                 ``opt_median`` / ``opt_clip`` schemes) can absorb it.
+  ``partial``  — the upload is truncated: the last ``count`` chunks never
+                 leave the client.  Under the chunked+parity transport
+                 (``core.transport``) one missing chunk per parity group
+                 rebuilds bitwise at round close; without it the blob
+                 fails CRC on every attempt and the upload is lost.
 
 Plan grammar (``FaultPlan.parse`` / ``str(plan)`` round-trip)::
 
@@ -47,7 +57,7 @@ from typing import Callable, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-FAULT_KINDS = ("drop", "dup", "corrupt", "delay", "crash")
+FAULT_KINDS = ("drop", "dup", "corrupt", "delay", "crash", "flip", "partial")
 CRASH_PHASES = ("train", "close", "checkpoint")
 
 
@@ -245,6 +255,7 @@ class FaultPlan:
     def random(cls, seed: int, rounds: int, clients: Sequence[int], *,
                p_dup: float = 0.0, p_corrupt: float = 0.0,
                p_drop: float = 0.0, p_delay: float = 0.0,
+               p_flip: float = 0.0, p_partial: float = 0.0,
                crash_rounds: Iterable[int] = ()) -> "FaultPlan":
         """A seeded chaos schedule: each (round, client) cell draws each
         fault kind independently; ``crash_rounds`` add one close-phase
@@ -252,7 +263,8 @@ class FaultPlan:
         rng = np.random.default_rng(seed)
         events: List[FaultEvent] = []
         probs = (("dup", p_dup), ("corrupt", p_corrupt),
-                 ("drop", p_drop), ("delay", p_delay))
+                 ("drop", p_drop), ("delay", p_delay),
+                 ("flip", p_flip), ("partial", p_partial))
         for t in range(1, rounds + 1):
             for c in clients:
                 for kind, p in probs:
@@ -283,6 +295,18 @@ class FaultPlan:
         chaos property test's precondition); drop/delay change which
         updates aggregate and so legitimately move the trajectory."""
         return all(e.kind in ("dup", "corrupt", "crash") for e in self.events)
+
+    @property
+    def parity_recoverable(self) -> bool:
+        """True when every fault is absorbed *bitwise* by the chunked
+        transport with XOR parity: the legacy recoverable kinds plus
+        ``partial`` events truncating at most one chunk (one parity chunk
+        per group rebuilds exactly one missing data chunk).  ``flip`` is
+        never bitwise-recoverable — it is CRC-clean by construction and
+        only *tolerance*-bounded under robust aggregation."""
+        return all(e.kind in ("dup", "corrupt", "crash")
+                   or (e.kind == "partial" and e.count == 1)
+                   for e in self.events)
 
     def __str__(self) -> str:
         return ";".join(str(e) for e in self.events)

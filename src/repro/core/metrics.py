@@ -24,6 +24,15 @@ class RoundLog:
     late_accepted: int = 0
     unregistered_skipped: int = 0
     quorum_met: bool = True
+    # lossy-wire transport counters (serving path with core.transport):
+    # zero when the transport model is disabled
+    backoff_s: float = 0.0             # simulated seconds burnt in backoff
+    chunks_sent: int = 0               # chunks handed to the wire (1st try)
+    chunks_retransmitted: int = 0      # NACKed chunks re-sent
+    chunks_corrupt: int = 0            # wire corruptions detected (CRC)
+    chunks_recovered: int = 0          # data chunks rebuilt via XOR parity
+    transfers_incomplete: int = 0      # uploads lost beyond parity rescue
+    parity_bytes: float = 0.0          # FEC overhead on the wire
 
 
 @dataclass
@@ -68,4 +77,10 @@ class SimLog:
             "stale_rejected": sum(r.stale_rejected for r in self.rounds),
             "corrupt_rejected": sum(r.corrupt_rejected for r in self.rounds),
             "retries": sum(r.retries for r in self.rounds),
+            "chunks_sent": sum(r.chunks_sent for r in self.rounds),
+            "chunks_retransmitted": sum(r.chunks_retransmitted
+                                        for r in self.rounds),
+            "chunks_recovered": sum(r.chunks_recovered for r in self.rounds),
+            "transfers_incomplete": sum(r.transfers_incomplete
+                                        for r in self.rounds),
         }

@@ -32,6 +32,7 @@ import shutil
 from repro.core.faults import FaultPlan
 from repro.core.hsfl import HSFLConfig
 from repro.core.schemes import registered_schemes
+from repro.core.transport import TransportConfig
 from repro.serving.fl_server import FLServer, run_with_restarts
 
 
@@ -60,13 +61,34 @@ def main(argv=None) -> int:
                     help="wipe --ckpt-dir before serving")
     ap.add_argument("--faults", default=None, metavar="PLAN",
                     help="fault plan, e.g. 'dup@r2:c*; crash@r3:close' "
-                         "(kinds: drop dup corrupt delay crash)")
+                         "(kinds: drop dup corrupt delay crash flip "
+                         "partial)")
     ap.add_argument("--chaos-seed", type=int, default=None,
                     help="seeded random fault plan instead of --faults")
     ap.add_argument("--chaos-dup", type=float, default=0.05)
     ap.add_argument("--chaos-corrupt", type=float, default=0.05)
     ap.add_argument("--chaos-drop", type=float, default=0.0)
     ap.add_argument("--chaos-delay", type=float, default=0.0)
+    ap.add_argument("--chaos-flip", type=float, default=0.0,
+                    help="per-(round,client) prob of CRC-clean bit flips")
+    ap.add_argument("--chaos-partial", type=float, default=0.0,
+                    help="per-(round,client) prob of a truncated upload")
+    tr = ap.add_argument_group(
+        "lossy-wire transport (opt-in chunked uploads; see core/transport)")
+    tr.add_argument("--transport", action="store_true",
+                    help="chunked resumable uploads + XOR-parity erasure "
+                         "rescue over a Gilbert-Elliott burst-error wire")
+    tr.add_argument("--chunk-bytes", type=int, default=4096)
+    tr.add_argument("--parity-k", type=int, default=4,
+                    help="data chunks per XOR parity group (0 = no parity)")
+    tr.add_argument("--ber-good", type=float, default=0.0,
+                    help="wire bit-error rate in the good channel state")
+    tr.add_argument("--ber-bad", type=float, default=0.0,
+                    help="wire bit-error rate in the bad (burst) state")
+    tr.add_argument("--wire-outage", type=float, default=0.30,
+                    help="stationary bad-state probability of the wire")
+    tr.add_argument("--wire-persistence", type=float, default=0.70,
+                    help="bad-state persistence of the wire")
     ap.add_argument("--quorum", type=float, default=0.0,
                     help="hold the round open for late uploads until this "
                          "fraction of scheduled finals arrived")
@@ -94,7 +116,15 @@ def main(argv=None) -> int:
         plan = FaultPlan.random(
             args.chaos_seed, args.rounds, range(args.n_uavs),
             p_dup=args.chaos_dup, p_corrupt=args.chaos_corrupt,
-            p_drop=args.chaos_drop, p_delay=args.chaos_delay)
+            p_drop=args.chaos_drop, p_delay=args.chaos_delay,
+            p_flip=args.chaos_flip, p_partial=args.chaos_partial)
+    transport = None
+    if args.transport:
+        transport = TransportConfig(
+            chunk_bytes=args.chunk_bytes, parity_k=args.parity_k,
+            ber_good=args.ber_good, ber_bad=args.ber_bad,
+            wire_outage_prob=args.wire_outage,
+            wire_persistence=args.wire_persistence)
     if args.fresh and args.ckpt_dir and os.path.isdir(args.ckpt_dir):
         shutil.rmtree(args.ckpt_dir)
 
@@ -113,11 +143,12 @@ def main(argv=None) -> int:
             cfg, ckpt_dir=args.ckpt_dir, fault_plan=plan,
             max_restarts=args.max_restarts, quorum=args.quorum,
             eval_every=args.eval_every, metrics_path=args.metrics_path,
-            verbose=verbose)
+            transport=transport, verbose=verbose)
     else:
         server = FLServer(cfg, fault_plan=plan, quorum=args.quorum,
                           eval_every=args.eval_every,
-                          metrics_path=args.metrics_path)
+                          metrics_path=args.metrics_path,
+                          transport=transport)
         server.serve(verbose=verbose)
         restarts = 0
 
@@ -130,6 +161,11 @@ def main(argv=None) -> int:
           f"stale_rejected={s['stale_rejected']} "
           f"corrupt_rejected={s['corrupt_rejected']} "
           f"retries={s['retries']} restarts={restarts}")
+    if transport is not None:
+        print(f"[serve_fl] transport: chunks={s['chunks_sent']} "
+              f"retransmitted={s['chunks_retransmitted']} "
+              f"parity_recovered={s['chunks_recovered']} "
+              f"transfers_lost={s['transfers_incomplete']}")
     if server.metrics_path:
         print(f"[serve_fl] metrics log: {server.metrics_path}")
     return 0

@@ -61,11 +61,18 @@ from repro.core.hsfl import (HSFLConfig, HSFLSimulation, _k_bucket,
                              _sample_epoch)
 from repro.core.metrics import RoundLog, SimLog
 from repro.core.transmission import OppTransmitter
+from repro.core.transport import (ChunkedUploader, LossyWire, TransferLedger,
+                                  TransportConfig, make_chunks)
 from repro.kernels.delta_codec.ops import decode_delta, encode_delta
 
 import msgpack
 
-__all__ = ["ClientRegistry", "FLServer", "UploadMsg", "run_with_restarts"]
+__all__ = ["ClientRegistry", "FLServer", "METRICS_SCHEMA", "UploadMsg",
+           "run_with_restarts"]
+
+# metrics.jsonl record schema: bump when the per-round row shape changes
+# (2 = lossy-wire transport counters + this version field)
+METRICS_SCHEMA = 2
 
 
 # ---------------------------------------------------------------------------
@@ -104,7 +111,9 @@ class UploadMsg:
     @classmethod
     def build(cls, client_id: int, round_id: int, kind: str, seq: int,
               tree: Any, wire_bytes: float) -> "UploadMsg":
-        payload = encode_tree(tree)
+        """``tree`` may be a pytree or pre-encoded wire bytes (the chunked
+        transport reassembles payloads without re-decoding them)."""
+        payload = tree if isinstance(tree, bytes) else encode_tree(tree)
         return cls(client_id, round_id, kind, seq, payload,
                    zlib.crc32(payload), wire_bytes)
 
@@ -260,9 +269,16 @@ class FLServer:
                  backoff: Optional[BackoffPolicy] = None,
                  eval_every: int = 1, resume: bool = True,
                  metrics_path: Optional[str] = None,
-                 initial_clients=None, skip_crashes=frozenset()):
+                 initial_clients=None, skip_crashes=frozenset(),
+                 transport: Optional[TransportConfig] = None):
         if not (0.0 <= quorum <= 1.0):
             raise ValueError(f"quorum must lie in [0, 1], got {quorum}")
+        # opt-in lossy wire (core.transport): chunked resumable uploads,
+        # Gilbert–Elliott burst errors, XOR-parity erasure rescue.  None
+        # keeps the legacy atomic-blob wire (and the bit-identical
+        # host-loop trajectory contract).
+        self.transport = transport.validate() if transport else None
+        self._ledger = TransferLedger()
         # the service wraps the host reference path: per-client transmitters
         # and list-form aggregation are what an inbox can mediate
         self.cfg = replace(cfg, use_fused_round=False)
@@ -338,16 +354,57 @@ class FLServer:
             raise ServerCrash(t, phase)
 
     # -- transport ----------------------------------------------------------
+    def _fault_state(self, t: int, client_id: int,
+                     fault_state: Dict[int, Dict[str, int]]
+                     ) -> Dict[str, int]:
+        return fault_state.setdefault(client_id, {
+            "corrupt_left": self.faults.count("corrupt", t, client_id),
+            "dropped": self.faults.count("drop", t, client_id),
+            "partial": self.faults.count("partial", t, client_id),
+            "seq": 0,
+        })
+
+    def _maybe_flip(self, t: int, client_id: int, tree: Any) -> Any:
+        """The ``flip`` fault: seeded *pre-encode* bit flips in the upload
+        copy.  The wire CRC is computed afterwards, so the corruption is
+        CRC-clean — only a robust aggregate can absorb it.  Flipping the
+        top exponent bit (30) turns any sub-unit weight into a huge
+        (~1e37) outlier; if the result lands on exponent 255 (inf/NaN)
+        the exponent LSB is flipped too, keeping the outlier *finite* —
+        a NaN would poison even robust sorts at small cohort sizes."""
+        n = self.faults.count("flip", t, client_id)
+        if not n:
+            return tree
+        rng = np.random.default_rng(np.random.SeedSequence(
+            (int(self.cfg.seed), int(t), int(client_id), 0xF11D)))
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        out = [np.array(x) for x in leaves]
+        elig = [i for i, x in enumerate(out) if x.dtype == np.float32]
+        total = sum(out[i].size for i in elig)
+        for pos in rng.integers(0, total, size=n):
+            for i in elig:
+                if pos < out[i].size:
+                    flat = out[i].reshape(-1)
+                    bits = flat.view(np.int32)
+                    bits[pos] ^= np.int32(1 << 30)
+                    if not np.isfinite(flat[pos]):
+                        bits[pos] ^= np.int32(1 << 23)
+                    break
+                pos -= out[i].size
+        return jax.tree_util.tree_unflatten(
+            treedef, [jnp.asarray(x) for x in out])
+
     def _send(self, t: int, client_id: int, kind: str, tree: Any,
               wire_bytes: float, inbox: RoundInbox, rlog: RoundLog,
               fault_state: Dict[int, Dict[str, int]]) -> str:
         """One upload through the faulty transport with client-side
-        retry/backoff.  Returns 'accepted' | 'lost' | 'deferred'."""
-        fs = fault_state.setdefault(client_id, {
-            "corrupt_left": self.faults.count("corrupt", t, client_id),
-            "dropped": self.faults.count("drop", t, client_id),
-            "seq": 0,
-        })
+        retry/backoff.  ``tree`` may be pre-encoded wire bytes (the
+        chunked transport's reassembled payload — flip/partial already
+        applied at the chunk layer).  Returns 'accepted' | 'lost' |
+        'deferred'."""
+        fs = self._fault_state(t, client_id, fault_state)
+        if not isinstance(tree, bytes):
+            tree = self._maybe_flip(t, client_id, tree)
         if kind == "final" and self.faults.count("delay", t, client_id):
             # misses the deadline: parked for the quorum policy at close
             fs["seq"] += 1
@@ -372,6 +429,16 @@ class FLServer:
             fs["seq"] += 1
             msg = UploadMsg.build(client_id, t, kind, fs["seq"], tree,
                                   wire_bytes)
+            if fs["partial"] and kind == "final" \
+                    and self.transport is None:
+                # truncated blob on the legacy atomic wire: fails CRC on
+                # *every* attempt — unrecoverable without chunking+parity
+                try:
+                    inbox.offer(replace(
+                        msg, payload=msg.payload[:len(msg.payload) // 2]))
+                finally:
+                    rlog.corrupt_rejected += 1
+                return None           # unreachable: offer raised
             if fs["corrupt_left"] > 0:
                 fs["corrupt_left"] -= 1
                 try:
@@ -387,6 +454,7 @@ class FLServer:
             rlog.retries += self.backoff.max_attempts - 1
             return "lost"
         rlog.retries += res.retries
+        rlog.backoff_s += res.backoff_s
         status, msg = res.value
         if status != "accepted":
             return "lost"
@@ -397,6 +465,138 @@ class FLServer:
                 rlog.duplicates_rejected += 1
                 rlog.bytes_sent += wire_bytes
         return "accepted"
+
+    # -- chunked lossy-wire transport (core.transport) ----------------------
+    def _wire_for(self, t: int, client_id: int,
+                  wires: Dict[int, LossyWire]) -> LossyWire:
+        """The per-(round, client) Gilbert–Elliott burst-error wire; its
+        RNG stream is independent of both the simulation RNG and the
+        backoff jitter stream (fault handling never perturbs training)."""
+        if client_id not in wires:
+            wires[client_id] = LossyWire(
+                self.transport, np.random.default_rng(np.random.SeedSequence(
+                    (int(self.cfg.seed), int(t), int(client_id), 0x317E))))
+        return wires[client_id]
+
+    def _deliver_chunks(self, t: int, client_id: int, chunks,
+                        wire: LossyWire, asm, rlog: RoundLog) -> None:
+        """Push chunks over the lossy wire into the server-side assembler.
+        A wire-corrupted chunk fails its CRC, is NACKed, and retransmits
+        under the backoff policy; a chunk that exhausts its retries stays
+        missing — the XOR parity group may still rebuild it."""
+        rng = client_rng(self.cfg.seed, t, client_id)
+        for ch in chunks:
+            attempt_no = {"n": 0}
+
+            def attempt(ch=ch):
+                attempt_no["n"] += 1
+                if attempt_no["n"] > 1:
+                    rlog.chunks_retransmitted += 1
+                    rlog.bytes_sent += len(ch.data)
+                st = asm.add(wire.transmit(ch))
+                if st == "corrupt":
+                    rlog.chunks_corrupt += 1
+                    raise CorruptPayload(
+                        f"round {t} client {client_id}: chunk "
+                        f"{ch.kind}[{ch.index}] of transfer "
+                        f"{ch.transfer_id:#010x} corrupted on the wire")
+                return st
+
+            try:
+                res = retry_call(attempt, self.backoff, rng)
+            except RetriesExhausted:
+                rlog.retries += self.backoff.max_attempts - 1
+                continue                  # lost chunk; parity may rescue
+            rlog.retries += res.retries
+            rlog.backoff_s += res.backoff_s
+
+    def _pump_snapshot(self, t: int, client_id: int, up: ChunkedUploader,
+                       rate: float, inbox: RoundInbox, rlog: RoundLog,
+                       fault_state, wires: Dict[int, LossyWire]) -> None:
+        """One probe epoch of a chunked snapshot upload: send what the
+        eq. 14 budget share affords, and hand the transfer off to the
+        inbox once every chunk has been on the wire."""
+        chunks = up.take_epoch(rate)
+        if chunks:
+            asm = self._ledger.assembler(client_id, chunks[0],
+                                         self.transport)
+            send = [c for c in chunks if c.key not in asm.have()]
+            par = sum(len(c.data) for c in send if c.kind == "parity")
+            rlog.chunks_sent += len(send)
+            rlog.bytes_sent += sum(len(c.data) for c in send)
+            rlog.parity_bytes += par
+            self._deliver_chunks(t, client_id, send,
+                                 self._wire_for(t, client_id, wires),
+                                 asm, rlog)
+        if up.idle and up.chunks:
+            # every chunk had its chance on the wire: close the transfer
+            self._finish_transfer(t, client_id, up, inbox, rlog,
+                                  fault_state)
+
+    def _finish_transfer(self, t: int, client_id: int, up: ChunkedUploader,
+                         inbox: RoundInbox, rlog: RoundLog,
+                         fault_state) -> str:
+        """Close out an in-flight snapshot transfer: XOR-reconstruct what
+        parity can, offer the reassembled payload to the inbox, or count
+        the upload as lost.  Also the round-close rescue path for
+        transfers whose budget ran out mid-upload."""
+        asm = self._ledger.get(client_id, up.transfer_id) \
+            if up.transfer_id is not None else None
+        up.finish()
+        if asm is None:
+            rlog.transfers_incomplete += 1
+            return "lost"
+        rlog.chunks_recovered += asm.try_reconstruct()
+        if not asm.complete():
+            rlog.transfers_incomplete += 1
+            return "lost"                 # assembler stays in the ledger:
+        payload = asm.payload()           # a re-offer resumes from it
+        self._ledger.pop(client_id, asm.transfer_id)
+        return self._send(t, client_id, "snapshot", payload,
+                          float(len(payload)), inbox, rlog, fault_state)
+
+    def _send_final_transport(self, t: int, client_id: int, tree: Any,
+                              wire_bytes: float, inbox: RoundInbox,
+                              rlog: RoundLog, fault_state,
+                              wires: Dict[int, LossyWire]) -> str:
+        """The final upload over the chunked lossy wire.  ``partial``
+        truncates the tail of the chunk sequence before it leaves the
+        client; parity can rebuild at most one missing data chunk per
+        group.  Data airtime is already accounted by the transmitter's
+        final-upload event — only parity overhead adds wire bytes here."""
+        fs = self._fault_state(t, client_id, fault_state)
+        tree = self._maybe_flip(t, client_id, tree)
+        payload = encode_tree(tree)
+        if fs["dropped"]:
+            # black-holed before the first chunk: legacy retry accounting
+            rlog.retries += self.backoff.max_attempts - 1
+            return "lost"
+        if self.faults.count("delay", t, client_id):
+            fs["seq"] += 1
+            self._late.append(UploadMsg.build(
+                client_id, t, "final", fs["seq"], payload, wire_bytes))
+            return "deferred"
+        chunks = make_chunks(payload, self.transport)
+        if fs["partial"]:
+            chunks = chunks[:max(0, len(chunks) - fs["partial"])]
+        if not chunks:
+            return "lost"
+        asm = self._ledger.assembler(client_id, chunks[0], self.transport)
+        send = [c for c in chunks if c.key not in asm.have()]
+        par = sum(len(c.data) for c in send if c.kind == "parity")
+        rlog.chunks_sent += len(send)
+        rlog.bytes_sent += par
+        rlog.parity_bytes += par
+        self._deliver_chunks(t, client_id, send,
+                             self._wire_for(t, client_id, wires), asm, rlog)
+        rlog.chunks_recovered += asm.try_reconstruct()
+        if not asm.complete():
+            rlog.transfers_incomplete += 1
+            return "lost"
+        reassembled = asm.payload()
+        self._ledger.pop(client_id, asm.transfer_id)
+        return self._send(t, client_id, "final", reassembled, wire_bytes,
+                          inbox, rlog, fault_state)
 
     # -- one round ----------------------------------------------------------
     def _run_round(self, t: int) -> RoundLog:
@@ -449,6 +649,13 @@ class FLServer:
                                 interpret=sim._interpret)
 
         fault_state: Dict[int, Dict[str, int]] = {}
+        wires: Dict[int, LossyWire] = {}
+        uploaders: Dict[int, ChunkedUploader] = {}
+        if self.transport is not None:
+            for u in sched:
+                tx = txs[u.index]
+                uploaders[u.index] = ChunkedUploader(
+                    self.transport, tx.tau_extra0, len(tx.schedule))
         # local training in lockstep; probe uploads ride the faulty
         # transport into the inbox (the server, not the transmitter, is
         # the durable holder of the latest snapshot)
@@ -466,7 +673,22 @@ class FLServer:
             if sim._probe_epochs:
                 for i, u in enumerate(sched):
                     tx = txs[u.index]
-                    if e_t in tx.schedule:
+                    if e_t not in tx.schedule:
+                        continue
+                    if self.transport is not None:
+                        # chunked resumable upload: an outage skips the
+                        # epoch (the in-flight transfer survives it); an
+                        # idle uploader starts shipping a fresh snapshot
+                        if bool(outages[u.index]):
+                            continue
+                        up = uploaders[u.index]
+                        if up.idle:
+                            up.begin(encode_tree(self._maybe_flip(
+                                t, u.index, snapshot_of(i))))
+                        self._pump_snapshot(t, u.index, up,
+                                            float(rates[u.index]), inbox,
+                                            rlog, fault_state, wires)
+                    else:
                         sent = tx.maybe_transmit(
                             e_t, float(rates[u.index]),
                             bool(outages[u.index]),
@@ -477,6 +699,14 @@ class FLServer:
                                        fault_state)
             if e_t == 1:
                 self._crash_maybe(t, "train")
+
+        # round-close rescue: transfers whose budget ran out mid-upload
+        # get one XOR-parity reconstruction attempt before aggregation
+        for u in sched:
+            up = uploaders.get(u.index)
+            if up is not None and up.chunks:
+                self._finish_transfer(t, u.index, up, inbox, rlog,
+                                      fault_state)
 
         # final uploads through the transport
         rates = sim.fleet.rates()
@@ -495,6 +725,10 @@ class FLServer:
                                  tr_time + slack, cfg.tau_max)
             if ok and self.registry.is_dropped(u.index, t):
                 outcome[u.index] = "lost"       # left mid-round
+            elif ok and self.transport is not None:
+                outcome[u.index] = self._send_final_transport(
+                    t, u.index, user_tree(i), tx.payload_bytes,
+                    inbox, rlog, fault_state, wires)
             elif ok:
                 outcome[u.index] = self._send(
                     t, u.index, "final", user_tree(i), tx.payload_bytes,
@@ -630,7 +864,8 @@ class FLServer:
         stal = [self.registry.staleness(r.client_id, rlog.round)
                 for r in self.registry.records()]
         stal = [s for s in stal if s is not None]
-        row = dict(asdict(rlog), scheme=self.cfg.scheme,
+        row = dict(asdict(rlog), schema=METRICS_SCHEMA,
+                   scheme=self.cfg.scheme,
                    seed=self.cfg.seed,
                    registered=len(self.registry.records()),
                    mean_staleness=(float(np.mean(stal)) if stal else None))

@@ -244,6 +244,7 @@ def test_registry_staleness_tracking():
 
 
 def test_metrics_jsonl(tmp_path):
+    from repro.serving.fl_server import METRICS_SCHEMA
     d = str(tmp_path / "m")
     FLServer(small_cfg(rounds=2), ckpt_dir=d,
              fault_plan="dup@r1:c*").serve()
@@ -251,8 +252,43 @@ def test_metrics_jsonl(tmp_path):
     assert [r["round"] for r in rows] == [1, 2]
     for key in ("arrived_final", "used_snapshot", "duplicates_rejected",
                 "stale_rejected", "corrupt_rejected", "retries",
-                "bytes_sent", "test_acc", "scheme", "registered"):
+                "bytes_sent", "test_acc", "scheme", "registered",
+                "backoff_s", "chunks_sent", "chunks_retransmitted",
+                "chunks_recovered", "transfers_incomplete", "parity_bytes"):
         assert key in rows[0], key
+    assert all(r["schema"] == METRICS_SCHEMA for r in rows)
+    # transport disabled: the chunk counters stay zero
+    assert all(r["chunks_sent"] == 0 for r in rows)
+
+
+def test_transport_metrics_and_summary(tmp_path):
+    from repro.core.transport import TransportConfig
+    d = str(tmp_path / "mt")
+    server = FLServer(small_cfg(rounds=2), ckpt_dir=d,
+                      transport=TransportConfig(chunk_bytes=2048))
+    server.serve()
+    rows = [json.loads(l) for l in open(os.path.join(d, "metrics.jsonl"))]
+    assert sum(r["chunks_sent"] for r in rows) > 0
+    assert sum(r["parity_bytes"] for r in rows) > 0
+    s = server.log.summary()
+    for key in ("chunks_sent", "chunks_retransmitted", "chunks_recovered",
+                "transfers_incomplete"):
+        assert key in s, key
+    assert s["chunks_sent"] == sum(r["chunks_sent"] for r in rows)
+
+
+def test_transport_crash_resume_round_trips_roundlog(tmp_path):
+    """The lossy-wire counters ride the checkpoint aux round-trip: a
+    crashed transport-enabled server must restore its RoundLog history
+    (new fields included) and finish the run."""
+    from repro.core.transport import TransportConfig
+    d = str(tmp_path / "tc")
+    server, restarts = run_with_restarts(
+        small_cfg(rounds=3), ckpt_dir=d, fault_plan="crash@r2:close",
+        transport=TransportConfig(chunk_bytes=2048))
+    assert restarts == 1
+    assert len(server.log.rounds) == 3
+    assert sum(r.chunks_sent for r in server.log.rounds) > 0
 
 
 # ---------------------------------------------------------------------------
@@ -311,6 +347,23 @@ def test_fault_plan_grammar_roundtrip():
         FaultPlan.parse("explode@r1")
     with pytest.raises(ValueError):
         FaultPlan.parse("crash@r1:sideways")
+
+
+def test_flip_partial_grammar_and_recoverability():
+    text = "flip@r2:c*x3;partial@r1:c0"
+    plan = FaultPlan.parse(text)
+    assert str(plan) == text
+    assert plan.count("flip", 2, 5) == 3
+    assert plan.count("partial", 1, 0) == 1
+    # flip perturbs the aggregate; partial x1 loses bytes on the legacy
+    # wire: neither is bitwise-recoverable there
+    assert not plan.recoverable
+    # ...but under chunked transport, partial x1 only costs the newest
+    # group's parity chunk — parity reassembles bit-identically
+    assert FaultPlan.parse("partial@r1:c0").parity_recoverable
+    assert not FaultPlan.parse("partial@r1:c0x2").parity_recoverable
+    assert not FaultPlan.parse("flip@r1:c0").parity_recoverable
+    assert FaultPlan.parse("dup@r1:c*; corrupt@r2:c0").parity_recoverable
 
 
 def test_fault_plan_random_is_seeded():

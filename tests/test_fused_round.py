@@ -48,16 +48,22 @@ def max_leaf_diff(a, b):
                                jax.tree_util.tree_leaves(b)))
 
 
-@pytest.mark.parametrize("scheme,b", [("opt", 2), ("discard", 1),
-                                      ("async", 1), ("sync", 1),
-                                      ("deadline", 2)])
-def test_fused_matches_host_trajectory(scheme, b):
+@pytest.mark.parametrize("scheme,b,tol", [
+    ("opt", 2, 1e-5), ("discard", 1, 1e-5), ("async", 1, 1e-5),
+    ("sync", 1, 1e-5), ("deadline", 2, 1e-5),
+    # Byzantine-robust aggregates: the host list path and the fused masked
+    # sort must agree on the same rounds.  opt_clip's global L2 norms
+    # reduce in a different order on K-slot vs stacked-list inputs, so its
+    # envelope matches the other reduction-order pins (~int4 codec class).
+    ("opt_trimmed", 2, 1e-5), ("opt_median", 2, 1e-5),
+    ("opt_clip", 2, 5e-4)])
+def test_fused_matches_host_trajectory(scheme, b, tol):
     host, p_host = run_traj(small_cfg(scheme=scheme, b=b,
                                       use_fused_round=False))
     fused, p_fused = run_traj(small_cfg(scheme=scheme, b=b,
                                         use_fused_round=True))
     assert host == fused, f"count/byte trajectories diverge:\n{host}\n{fused}"
-    assert max_leaf_diff(p_host, p_fused) < 1e-5
+    assert max_leaf_diff(p_host, p_fused) < tol
 
 
 def test_fused_matches_host_with_rescue():

@@ -332,3 +332,72 @@ def test_facade_rejects_bad_requests():
         frozen.with_scheme("deadline", b=2.0)
     with pytest.raises(ValueError, match="from_spec"):
         frozen.with_seeds(0, 1)
+
+
+# -- Byzantine-robust aggregates (PR 9) ---------------------------------------
+
+def test_robust_schemes_registered_as_opt_variants():
+    for name in ("opt_trimmed", "opt_median", "opt_clip"):
+        s = get_scheme(name)
+        assert s.name == name
+        # Alg. 2 semantics ride along: probes/rescue stay live
+        assert s.uses_probes and not s.carries_delayed
+
+
+def test_robust_primitives_hand_computed():
+    import jax.numpy as jnp
+
+    from repro.core.schemes import clipped_mean, masked_median, trimmed_mean
+
+    # 4 slots, 3 valid; values chosen so every statistic is exact
+    contrib = {"w": jnp.asarray([[1.0], [3.0], [2.0], [99.0]])}
+    weights = jnp.asarray([1.0, 1.0, 1.0, 0.0])     # slot 3 invalid
+    fb = {"w": jnp.asarray([-7.0])}
+    # m=3, trim 0.25 -> g=0: trimmed mean == masked mean (no trimming)
+    assert float(trimmed_mean(contrib, weights, fb)["w"][0]) == \
+        pytest.approx(2.0)
+    assert float(masked_median(contrib, weights, fb)["w"][0]) == 2.0
+    # m=4 even: median averages the two middle ranks
+    w4 = jnp.ones(4)
+    assert float(masked_median(contrib, w4, fb)["w"][0]) == \
+        pytest.approx(2.5)
+    # m=4, g=1: the 99.0 outlier and the 1.0 low end are trimmed
+    assert float(trimmed_mean(contrib, w4, fb)["w"][0]) == \
+        pytest.approx(2.5)
+    # m=0 falls back (never divides by zero)
+    z = jnp.zeros(4)
+    for fn in (trimmed_mean, masked_median, clipped_mean):
+        assert float(fn(contrib, z, fb)["w"][0]) == -7.0
+
+
+def test_robust_primitives_reject_huge_outlier():
+    import jax.numpy as jnp
+
+    from repro.core.schemes import clipped_mean, masked_median, trimmed_mean
+
+    # a flip-style 1e37 outlier in 1 of 5 slots must not leak through
+    contrib = {"w": jnp.asarray([[0.1], [0.2], [0.3], [1e37], [0.2]])}
+    weights = jnp.ones(5)
+    fb = {"w": jnp.zeros(1)}
+    for fn in (trimmed_mean, masked_median, clipped_mean):
+        out = float(fn(contrib, weights, fb)["w"][0])
+        assert np.isfinite(out) and abs(out) < 1.0, fn.__name__
+    # masked mean (the non-robust baseline) does leak it
+    from repro.core.schemes import masked_mean
+    assert float(masked_mean(contrib, weights, fb)["w"][0]) > 1e35
+
+
+def test_robust_scheme_runs_on_sweep_engine_zero_edits():
+    """The registry contract: a robust aggregate is just another Scheme —
+    the sweep engine runs it with no engine edits, and its arrivals match
+    opt's under common random numbers (selection/transport identical;
+    only the aggregation rule differs)."""
+    ex = Experiment(tiny()).with_seeds(0)
+    for s in ("opt", "opt_trimmed", "opt_median"):
+        ex = ex.with_scheme(s, b=2.0)
+    res = ex.run(engine="sweep", mesh=None)
+    by = {g.scheme: g.metrics for g in res.groups}
+    assert np.array_equal(by["opt"]["arrived"], by["opt_trimmed"]["arrived"])
+    assert np.array_equal(by["opt"]["arrived"], by["opt_median"]["arrived"])
+    for name in ("opt_trimmed", "opt_median"):
+        assert np.all(np.isfinite(by[name]["test_loss"]))

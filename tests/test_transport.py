@@ -1,0 +1,240 @@
+"""Lossy-wire transport primitives (core/transport).
+
+Pins the wire-format invariants the serving path leans on: chunk
+round-trips are bitwise, XOR parity rebuilds *any* single missing data
+chunk per group (k-of-(k+1) erasure), a BER=0 wire is bit-identical to
+the unchunked encode/decode path, and the eq. 14 budget split schedules
+exactly the hand-computed number of chunks per probe epoch.
+"""
+import zlib
+
+import numpy as np
+import pytest
+
+from repro.core.transport import (Chunk, ChunkAssembler, ChunkedUploader,
+                                  LossyWire, TransferLedger, TransportConfig,
+                                  epoch_chunk_budget, make_chunks, reassemble,
+                                  split_payload, xor_bytes)
+
+
+def _payload(n: int, seed: int = 0) -> bytes:
+    return np.random.default_rng(seed).integers(
+        0, 256, size=n, dtype=np.uint8).tobytes()
+
+
+# ---------------------------------------------------------------------------
+# chunking + reassembly round trip
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,chunk_bytes", [(0, 16), (1, 16), (16, 16),
+                                           (17, 16), (100, 16), (100, 7),
+                                           (4096, 512)])
+def test_chunk_round_trip(n, chunk_bytes):
+    cfg = TransportConfig(chunk_bytes=chunk_bytes, parity_k=3).validate()
+    payload = _payload(n)
+    chunks = make_chunks(payload, cfg)
+    data = {c.index: c.data for c in chunks if c.kind == "data"}
+    n_data = chunks[0].n_data
+    assert len(data) == n_data == len(split_payload(payload, chunk_bytes))
+    assert reassemble(data, n_data, len(payload),
+                      zlib.crc32(payload)) == payload
+    # every chunk carries a valid CRC and the content address
+    assert all(c.ok() and c.transfer_id == zlib.crc32(payload)
+               for c in chunks)
+
+
+def test_parity_layout_interleaved():
+    # 7 data chunks at k=3 -> groups (0,1,2), (3,4,5), (6): parity closes
+    # each group right after its last data chunk
+    cfg = TransportConfig(chunk_bytes=16, parity_k=3)
+    chunks = make_chunks(_payload(100), cfg)
+    keys = [c.key for c in chunks]
+    assert keys == [("data", 0), ("data", 1), ("data", 2), ("parity", 0),
+                    ("data", 3), ("data", 4), ("data", 5), ("parity", 1),
+                    ("data", 6), ("parity", 2)]
+    # parity is the XOR of its group (zero-padded to chunk length)
+    g0 = xor_bytes(chunks[0].data, chunks[1].data, chunks[2].data)
+    assert chunks[3].data == g0
+
+
+# ---------------------------------------------------------------------------
+# erasure rescue: any single missing data chunk per group rebuilds
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("parity_k", [1, 2, 3, 4])
+def test_every_single_drop_reconstructs(parity_k):
+    cfg = TransportConfig(chunk_bytes=16, parity_k=parity_k)
+    payload = _payload(100, seed=parity_k)
+    chunks = make_chunks(payload, cfg)
+    n_data = chunks[0].n_data
+    for drop in range(n_data):
+        asm = ChunkAssembler.for_chunk(chunks[0], cfg)
+        for c in chunks:
+            if c.key != ("data", drop):
+                assert asm.add(c) == "accepted"
+        assert not asm.complete()
+        assert asm.try_reconstruct() == 1
+        assert asm.complete() and asm.payload() == payload
+
+
+def test_one_drop_per_group_simultaneously():
+    # the maximal rescuable loss pattern: one data chunk out of *every*
+    # group missing at once
+    cfg = TransportConfig(chunk_bytes=16, parity_k=2)
+    payload = _payload(100)
+    chunks = make_chunks(payload, cfg)
+    groups = sorted({c.index for c in chunks if c.kind == "parity"})
+    dropped = {("data", g * cfg.parity_k) for g in groups
+               if g * cfg.parity_k < chunks[0].n_data}
+    asm = ChunkAssembler.for_chunk(chunks[0], cfg)
+    for c in chunks:
+        if c.key not in dropped:
+            asm.add(c)
+    assert asm.try_reconstruct() == len(dropped)
+    assert asm.payload() == payload
+
+
+def test_two_missing_in_one_group_is_unrecoverable():
+    cfg = TransportConfig(chunk_bytes=16, parity_k=3)
+    chunks = make_chunks(_payload(100), cfg)
+    asm = ChunkAssembler.for_chunk(chunks[0], cfg)
+    for c in chunks:
+        if c.key not in {("data", 0), ("data", 1)}:   # same group
+            asm.add(c)
+    assert asm.try_reconstruct() == 0
+    assert not asm.complete()
+
+
+def test_corrupt_chunk_detected_not_banked():
+    cfg = TransportConfig(chunk_bytes=16, parity_k=0)
+    chunks = make_chunks(_payload(64), cfg)
+    bad = Chunk(chunks[0].transfer_id, 0, "data", chunks[0].n_data,
+                64, b"X" * 16, chunks[0].crc)
+    asm = ChunkAssembler.for_chunk(chunks[0], cfg)
+    assert asm.add(bad) == "corrupt"
+    assert asm.add(chunks[0]) == "accepted"
+    assert asm.add(chunks[0]) == "duplicate"
+
+
+# ---------------------------------------------------------------------------
+# BER=0 wire is bit-identical to the unchunked path
+# ---------------------------------------------------------------------------
+
+def test_ber0_bit_identity_to_unchunked_tree_codec():
+    import jax.numpy as jnp
+
+    from repro.serving.fl_server import decode_tree, encode_tree
+
+    tree = {"w": jnp.arange(300, dtype=jnp.float32).reshape(30, 10),
+            "b": jnp.ones((10,), jnp.float32) * 0.25}
+    raw = encode_tree(tree)
+    cfg = TransportConfig(chunk_bytes=128, parity_k=4)
+    wire = LossyWire(cfg, np.random.default_rng(0))
+    asm = None
+    for c in make_chunks(raw, cfg):
+        rx = wire.transmit(c)
+        assert rx.data == c.data            # BER=0: the wire is a no-op
+        if asm is None:
+            asm = ChunkAssembler.for_chunk(rx, cfg)
+        asm.add(rx)
+    assert asm.complete() and asm.payload() == raw
+    out = decode_tree(asm.payload(), tree)
+    assert all((np.asarray(a) == np.asarray(b)).all()
+               for a, b in zip([out["w"], out["b"]], [tree["w"], tree["b"]]))
+
+
+def test_lossy_wire_corrupts_and_crc_detects():
+    cfg = TransportConfig(chunk_bytes=64, parity_k=0, ber_bad=0.02,
+                          wire_outage_prob=1.0, wire_persistence=1.0)
+    wire = LossyWire(cfg, np.random.default_rng(1))
+    chunks = make_chunks(_payload(1024), cfg)
+    seen_corrupt = sum(not wire.transmit(c).ok() for c in chunks)
+    assert seen_corrupt > 0                 # always-bad wire at 2% BER
+    assert wire.corrupted == seen_corrupt   # CRC catches every flip
+
+
+# ---------------------------------------------------------------------------
+# budget-driven scheduling
+# ---------------------------------------------------------------------------
+
+def test_epoch_chunk_budget_hand_cases():
+    # 0.5 s at 1024 bps = 512 bits = 64 B -> four 16 B chunks
+    assert epoch_chunk_budget(0.5, 1024, 16) == 4
+    assert epoch_chunk_budget(0.5, 1024, 64) == 1
+    assert epoch_chunk_budget(0.5, 1024, 65) == 0
+    assert epoch_chunk_budget(0.0, 1024, 16) == 0
+    assert epoch_chunk_budget(0.5, 0.0, 16) == 0
+
+
+def test_uploader_budget_schedule_matches_hand_computation():
+    # tau_extra = 1 s over 2 probes -> tau_share = 0.5 s; at 1024 bps and
+    # 16 B chunks each probe affords 4 chunks, charged at true airtime
+    cfg = TransportConfig(chunk_bytes=16, parity_k=0)
+    up = ChunkedUploader(cfg, tau_extra=1.0, n_probes=2)
+    up.begin(_payload(100))                 # 7 data chunks
+    assert len(up.chunks) == 7
+    first = up.take_epoch(1024.0)
+    assert [c.index for c in first] == [0, 1, 2, 3]
+    # 64 B sent = 0.5 s airtime; 0.5 s allowance remains
+    assert up.tau_left == pytest.approx(0.5)
+    assert not up.idle                      # resumes next probe
+    second = up.take_epoch(1024.0)
+    assert [c.index for c in second] == [4, 5, 6]
+    assert up.idle
+    # spent airtime: 100 B * 8 / 1024 bps
+    assert up.tau_left == pytest.approx(1.0 - 100 * 8 / 1024.0)
+
+
+def test_uploader_rejects_overlapping_begin():
+    cfg = TransportConfig(chunk_bytes=16, parity_k=0)
+    up = ChunkedUploader(cfg, tau_extra=1e-9, n_probes=1)
+    up.begin(_payload(100))
+    up.take_epoch(1024.0)                   # budget affords nothing
+    with pytest.raises(RuntimeError):
+        up.begin(_payload(50))
+    up.finish()
+    up.begin(_payload(50))                  # idle again after finish
+
+
+# ---------------------------------------------------------------------------
+# ledger: cross-round resume
+# ---------------------------------------------------------------------------
+
+def test_ledger_resume_only_missing_chunks():
+    cfg = TransportConfig(chunk_bytes=16, parity_k=0)
+    payload = _payload(100)
+    chunks = make_chunks(payload, cfg)
+    led = TransferLedger()
+    asm = led.assembler(7, chunks[0], cfg)
+    for c in chunks[:4]:                    # round t: partial upload
+        asm.add(c)
+    # round t+1: same content -> same transfer_id -> same assembler
+    asm2 = led.assembler(7, chunks[0], cfg)
+    assert asm2 is asm
+    missing = [c for c in chunks if c.key not in asm2.have()]
+    assert [c.index for c in missing] == [4, 5, 6]
+    for c in missing:
+        asm2.add(c)
+    assert asm2.payload() == payload
+    led.pop(7, chunks[0].transfer_id)
+    assert led.get(7, chunks[0].transfer_id) is None
+
+
+def test_ledger_fifo_bound():
+    cfg = TransportConfig(chunk_bytes=16, parity_k=0)
+    led = TransferLedger(max_entries=2)
+    firsts = [make_chunks(_payload(40, seed=s), cfg)[0] for s in range(3)]
+    for ch in firsts:
+        led.assembler(0, ch, cfg)
+    assert len(led) == 2
+    assert led.get(0, firsts[0].transfer_id) is None   # oldest evicted
+
+
+def test_transport_config_validation():
+    with pytest.raises(ValueError):
+        TransportConfig(chunk_bytes=0).validate()
+    with pytest.raises(ValueError):
+        TransportConfig(parity_k=-1).validate()
+    with pytest.raises(ValueError):
+        TransportConfig(ber_bad=1.5).validate()
+    TransportConfig().validate()            # defaults are valid
