@@ -1,9 +1,12 @@
 """CLI: ``python -m repro.analysis [paths...]``.
 
 Runs the AST lint rules and the eval_shape contract sweep over the repo
-tree, prints ``path:line:col: [rule] message`` findings and exits non-zero
-if any finding is neither pragma'd (``# analysis: ok=<rule>``) nor listed
-in the baseline file (``analysis_baseline.txt``) with a justification.
+tree — and, with ``--ir``, the IR-level auditors (jaxpr liveness walk,
+donation/alias verification, K-scaling gate).  Prints
+``path:line:col: [rule] message`` findings (``--format`` switches to
+GitHub annotations or SARIF) and exits non-zero if any finding is
+neither pragma'd (``# analysis: ok=<rule>``) nor listed in the baseline
+file (``analysis_baseline.txt``) with a justification.
 """
 from __future__ import annotations
 
@@ -11,11 +14,20 @@ import argparse
 import sys
 from pathlib import Path
 
-from repro.analysis.findings import Baseline, filter_findings
+from repro.analysis.findings import RENDERERS, Baseline, filter_findings
 from repro.analysis.lint import all_rules, lint_paths
 
 DEFAULT_PATHS = ("src/repro", "benchmarks", "examples")
 DEFAULT_BASELINE = "analysis_baseline.txt"
+DEFAULT_SCALING = "analysis_scaling.json"
+
+# program-level IR rules (no AST Rule object to describe them)
+IR_RULE_DESCRIPTIONS = {
+    "ir-trace": "engine program failed to trace to a jaxpr",
+    "ir-dtype": "f32 tensor minted from bf16 operands in a bf16 program",
+    "ir-alias": "declared donation silently dropped by XLA",
+    "ir-scaling": "buffer scales past its declared O(K) budget",
+}
 
 
 def find_repo_root(start: Path) -> Path:
@@ -25,22 +37,51 @@ def find_repo_root(start: Path) -> Path:
     return start
 
 
+def run_ir(root: Path, scaling_file: str):
+    """The IR sweep: walker + alias audit + scaling gate. Lazy imports —
+    this pulls in jax and every engine."""
+    from repro.analysis.ir import (run_alias_audit, run_jaxpr_audit,
+                                   run_scaling_gate)
+    findings, _audits = run_jaxpr_audit()
+    alias_findings, _records = run_alias_audit()
+    findings.extend(alias_findings)
+    scaling_findings, _report = run_scaling_gate(
+        committed=root / scaling_file)
+    findings.extend(scaling_findings)
+    return findings
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
-        description="repo-specific static analysis (lint + contracts)")
+        description="repo-specific static analysis (lint + contracts "
+                    "+ IR audit)")
     ap.add_argument("paths", nargs="*", default=None,
                     help=f"files/dirs to lint (default: {DEFAULT_PATHS})")
     ap.add_argument("--root", type=Path, default=None,
                     help="repo root (default: auto-detected)")
     ap.add_argument("--baseline", default=DEFAULT_BASELINE,
                     help="baseline file, relative to the root")
+    ap.add_argument("--scaling-file", default=DEFAULT_SCALING,
+                    help="committed scaling record, relative to the root")
     ap.add_argument("--no-contracts", action="store_true",
                     help="skip the eval_shape contract sweep (lint only)")
     ap.add_argument("--no-lint", action="store_true",
                     help="skip the AST lint rules (contracts only)")
+    ap.add_argument("--ir", action="store_true",
+                    help="run the IR auditors (jaxpr walk, donation "
+                         "verification, K-scaling gate)")
+    ap.add_argument("--format", choices=sorted(RENDERERS), default="text",
+                    help="finding output format (default: text)")
     ap.add_argument("--write-baseline", action="store_true",
                     help="print a baseline covering the current findings")
+    ap.add_argument("--prune-baseline", action="store_true",
+                    help="rewrite the baseline file dropping entries that "
+                         "matched nothing this run")
+    ap.add_argument("--strict-baseline", action="store_true",
+                    help="fail (exit 1) on stale baseline entries")
+    ap.add_argument("--write-scaling", action="store_true",
+                    help="regenerate the committed scaling record and exit")
     ap.add_argument("--list-rules", action="store_true")
     args = ap.parse_args(argv)
 
@@ -50,6 +91,15 @@ def main(argv=None) -> int:
     if args.list_rules:
         for rule in all_rules():
             print(f"{rule.name:15s} {rule.description}")
+        for name, desc in sorted(IR_RULE_DESCRIPTIONS.items()):
+            print(f"{name:15s} {desc} (--ir)")
+        return 0
+
+    if args.write_scaling:
+        from repro.analysis.ir import scaling_report, write_scaling_json
+        out = root / args.scaling_file
+        write_scaling_json(out, scaling_report())
+        print(f"wrote {out}")
         return 0
 
     findings, sources = [], {}
@@ -59,17 +109,41 @@ def main(argv=None) -> int:
         # imported lazily: the contract sweep imports every engine
         from repro.analysis.contracts import run_contracts
         findings.extend(run_contracts(repo_root=root))
+    if args.ir:
+        findings.extend(run_ir(root, args.scaling_file))
+        # IR findings carry real source sites; load those files so the
+        # inline-pragma layer applies to them like any lint finding
+        for f in findings:
+            fpath = root / f.path
+            if f.path not in sources and fpath.is_file():
+                sources[f.path] = fpath.read_text().splitlines()
 
-    baseline = Baseline.load(root / args.baseline)
+    baseline_path = root / args.baseline
+    baseline = Baseline.load(baseline_path)
     live = filter_findings(findings, baseline, sources)
 
     if args.write_baseline:
         sys.stdout.write(Baseline.render(live))
         return 0
 
-    for f in live:
-        print(f.format())
-    for key in baseline.stale():
+    stale = baseline.stale()
+    if args.prune_baseline and stale:
+        kept = [f for key, why in baseline.entries.items()
+                if key in baseline.hits
+                for f in [_entry_line(key, why)]]
+        header = ["# repro.analysis baseline — reviewed exceptions.",
+                  "# Format: path :: rule :: offending source line "
+                  ":: justification."]
+        baseline_path.write_text("\n".join(header + kept) + "\n")
+        print(f"pruned {len(stale)} stale baseline entr"
+              f"{'y' if len(stale) == 1 else 'ies'} from {args.baseline}",
+              file=sys.stderr)
+        stale = []
+
+    rendered = RENDERERS[args.format](live)
+    if rendered:
+        print(rendered)
+    for key in stale:
         print(f"note: stale baseline entry (matched nothing): "
               f"{' :: '.join(key)}", file=sys.stderr)
     if live:
@@ -77,9 +151,24 @@ def main(argv=None) -> int:
               f"(# analysis: ok=<rule>) or baseline with a justification "
               f"in {args.baseline}.", file=sys.stderr)
         return 1
-    suffix = "" if args.no_contracts else " (lint + contracts)"
-    print(f"repro.analysis: clean{suffix}")
+    if stale and args.strict_baseline:
+        print(f"{len(stale)} stale baseline entr"
+              f"{'y' if len(stale) == 1 else 'ies'} — remove them or run "
+              f"--prune-baseline.", file=sys.stderr)
+        return 1
+    if args.format == "text":
+        parts = [] if args.no_lint else ["lint"]
+        if not args.no_contracts:
+            parts.append("contracts")
+        if args.ir:
+            parts.append("ir")
+        print(f"repro.analysis: clean ({' + '.join(parts)})"
+              if parts else "repro.analysis: clean")
     return 0
+
+
+def _entry_line(key, why) -> str:
+    return " :: ".join((*key, why))
 
 
 if __name__ == "__main__":

@@ -23,6 +23,7 @@ re-review, which is the point.
 from __future__ import annotations
 
 import dataclasses
+import json
 import re
 from pathlib import Path
 from typing import Dict, Iterable, List, Sequence, Tuple
@@ -122,6 +123,65 @@ class Baseline:
         for f in sorted(set(findings), key=lambda f: f.key()):
             lines.append(_SEP.join((f.path, f.rule, f.snippet, why)))
         return "\n".join(lines) + "\n"
+
+
+def render_text(findings: Sequence[Finding]) -> str:
+    return "\n".join(f.format() for f in findings)
+
+
+def render_github(findings: Sequence[Finding]) -> str:
+    """GitHub Actions workflow-command annotations (one per finding).
+
+    Annotation messages are single-line by protocol; newlines are
+    escaped the way Actions expects (%0A)."""
+    out = []
+    for f in findings:
+        msg = f"[{f.rule}] {f.message}".replace("%", "%25") \
+            .replace("\r", "%0D").replace("\n", "%0A")
+        out.append(f"::error file={f.path},line={max(1, f.line)},"
+                   f"col={max(1, f.col)}::{msg}")
+    return "\n".join(out)
+
+
+def render_sarif(findings: Sequence[Finding],
+                 rule_descriptions: Dict[str, str] | None = None) -> str:
+    """Minimal SARIF 2.1.0 document for code-scanning upload."""
+    descriptions = rule_descriptions or {}
+    rule_ids = sorted({f.rule for f in findings})
+    doc = {
+        "$schema": "https://json.schemastore.org/sarif-2.1.0.json",
+        "version": "2.1.0",
+        "runs": [{
+            "tool": {"driver": {
+                "name": "repro.analysis",
+                "informationUri":
+                    "https://example.invalid/repro-analysis",
+                "rules": [
+                    {"id": rid,
+                     "shortDescription": {
+                         "text": descriptions.get(rid, rid)}}
+                    for rid in rule_ids],
+            }},
+            "results": [{
+                "ruleId": f.rule,
+                "level": "error",
+                "message": {"text": f.message},
+                "locations": [{"physicalLocation": {
+                    "artifactLocation": {"uri": f.path},
+                    "region": {"startLine": max(1, f.line),
+                               "startColumn": max(1, f.col)},
+                }}],
+            } for f in findings],
+        }],
+    }
+    return json.dumps(doc, indent=2, sort_keys=True)
+
+
+RENDERERS = {
+    "text": render_text,
+    "github": render_github,
+    "sarif": render_sarif,
+}
 
 
 def filter_findings(findings: Iterable[Finding], baseline: Baseline,

@@ -16,6 +16,11 @@ managers prove the *dispatch-time* invariants the engines advertise:
   intended sync boundary, so the default guards only host→device.
 - ``leak_check`` — ``jax.checking_leaks()``: no tracer escapes a traced
   scope (the runtime twin of the lint host-sync rule).
+- ``memory_budget`` — caps the per-program compiled memory footprint
+  (arguments + outputs + temps − aliased) of every program compiled in
+  the block, the runtime twin of the IR walker's liveness estimate: the
+  static walk bounds what the program *asks for*, this checks what XLA
+  actually *reserved*.
 """
 from __future__ import annotations
 
@@ -125,6 +130,67 @@ def leak_check() -> Iterator[None]:
     """Raise if a tracer leaks out of any traced scope in the block."""
     with jax.checking_leaks():
         yield
+
+
+class MemoryBudgetExceeded(AssertionError):
+    pass
+
+
+@contextlib.contextmanager
+def memory_budget(limit_bytes: int, match: Optional[str] = None
+                  ) -> Iterator[List]:
+    """Fail if any program compiled in the block reserves more than
+    ``limit_bytes`` (optionally only programs whose name matches
+    ``match``).
+
+    Hooks ``pxla.MeshComputation.compile`` — the single chokepoint both
+    dispatch paths go through (eager jit calls and AOT
+    ``lower().compile()``, including the sweep engine's background-thread
+    compiles) — and reads the executable's compiled memory stats.  The
+    measured footprint is ``argument + output + temp − alias`` bytes: what
+    one dispatch of the program actually reserves, with donation credited.
+    Programs whose backend reports no stats are skipped, not failed.
+
+    Violations are raised together on block exit (background-thread
+    compiles can't raise usefully into the caller mid-block); yields the
+    live ``[(name, bytes)]`` record list for inspection."""
+    from jax._src.interpreters import pxla
+
+    records: List = []
+    violations: List = []
+    lock = threading.Lock()
+    orig = pxla.MeshComputation.compile
+
+    def patched(self, *a, **kw):
+        ex = orig(self, *a, **kw)
+        name = str(getattr(self, "_name", "<unnamed>"))
+        if match is not None and not re.search(match, name):
+            return ex
+        try:
+            stats = ex.xla_executable.get_compiled_memory_stats()
+            used = (stats.argument_size_in_bytes
+                    + stats.output_size_in_bytes
+                    + stats.temp_size_in_bytes
+                    - stats.alias_size_in_bytes)
+        except Exception:
+            return ex
+        with lock:
+            records.append((name, used))
+            if used > limit_bytes:
+                violations.append((name, used))
+        return ex
+
+    pxla.MeshComputation.compile = patched
+    try:
+        yield records
+    finally:
+        pxla.MeshComputation.compile = orig
+    if violations:
+        detail = ", ".join(f"{n}: {b / 1e6:.2f} MB" for n, b in violations)
+        raise MemoryBudgetExceeded(
+            f"{len(violations)} program(s) over the "
+            f"{limit_bytes / 1e6:.2f} MB memory budget"
+            f"{f' (match={match!r})' if match else ''}: {detail}")
 
 
 @contextlib.contextmanager

@@ -1,0 +1,33 @@
+"""IR-level program auditor — the jaxpr/HLO half of ``repro.analysis``.
+
+The PR-8 layers see source text (AST lint) and output signatures
+(eval_shape contracts).  This subpackage operates on the traced program
+itself:
+
+- ``ir.programs``   — the K-parameterized registry of engine programs
+  (every registered scheme through both round builders, every kernel
+  twin), so the walkers below sweep exactly what the repo ships;
+- ``ir.jaxpr_audit`` — liveness-based peak-memory estimation with
+  per-buffer provenance, plus the bf16→f32 silent-promotion audit;
+- ``ir.alias_audit`` — lower+compile each jitted entry point and verify
+  the donation the source claims against the compiled
+  ``input_output_alias`` map (a dropped donation is a 2x memory surprise);
+- ``ir.scaling``     — trace each program at K ∈ {4, 16, 64, 256}, fit
+  per-buffer and total-peak scaling exponents in K, and gate any buffer
+  that scales past its declared budget (``analysis_scaling.json``).
+
+Everything funnels into the standard ``Finding`` stream, so the CLI's
+pragma + baseline machinery applies unchanged.
+"""
+from repro.analysis.ir.alias_audit import audit_donation, run_alias_audit
+from repro.analysis.ir.jaxpr_audit import (ProgramAudit, audit_program,
+                                           run_jaxpr_audit)
+from repro.analysis.ir.programs import EngineProgram, engine_programs
+from repro.analysis.ir.scaling import (K_VALUES, run_scaling_gate,
+                                       scaling_report, write_scaling_json)
+
+__all__ = [
+    "EngineProgram", "engine_programs", "ProgramAudit", "audit_program",
+    "run_jaxpr_audit", "audit_donation", "run_alias_audit", "K_VALUES",
+    "scaling_report", "run_scaling_gate", "write_scaling_json",
+]

@@ -1,0 +1,229 @@
+"""K-scaling gate: fit per-buffer memory exponents in K and gate them.
+
+The engines are *designed* to be O(K) in memory on the user axis: stacked
+user batches, codec snapshots, per-UAV channel traces — one row per user.
+Anything super-linear (a K×K gram matrix from a badly-ordered einsum, a
+broadcast that materializes) is exactly the class of bug that is
+invisible at the test sizes (K=4) and fatal at fleet scale (K=256+).
+
+``scaling_report`` traces every registry program at K ∈ ``K_VALUES``,
+reuses the jaxpr walker's per-site ``site_max_bytes``, and fits a
+log-log least-squares exponent per source site plus one for the total
+liveness peak.  ``run_scaling_gate`` then applies the declared budgets:
+
+- sites in engine/kernel modules (and program arguments) are *declared*
+  O(K) — the data model says one row per user;
+- undeclared sites get a strict O(1) cap, so an undeclared buffer that
+  grows with K at all is a finding, with the same ``path:line``
+  provenance the walker gives every buffer.
+
+The fitted report is committed as ``analysis_scaling.json``
+(``--write-scaling`` regenerates it); the gate also flags drift — a
+program whose total-peak exponent moved materially from the committed
+record — so a regression shows up as a diff *and* a finding.
+"""
+from __future__ import annotations
+
+import json
+import math
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from repro.analysis.findings import Finding
+from repro.analysis.ir.jaxpr_audit import audit_program, trace_program
+
+K_VALUES: Tuple[int, ...] = (4, 16, 64, 256)
+
+# path-prefix -> declared exponent budget (first match wins).  The engine
+# data model is one-row-per-user, so engine/kernel modules and the program
+# arguments are declared O(K); jax-internal frames inherit the same budget
+# (they are minted on behalf of engine code).
+DECLARED_BUDGETS: Tuple[Tuple[str, float], ...] = (
+    ("<argument>", 1.0),
+    ("<jax-internal>", 1.0),
+    ("src/repro/core/", 1.0),
+    ("src/repro/kernels/", 1.0),
+    ("src/repro/models/", 1.0),
+    ("src/repro/", 1.0),
+    ("site-packages/", 1.0),
+    ("/jax/", 1.0),
+)
+DEFAULT_CAP = 0.0        # undeclared sites: O(1) or it's a finding
+TOLERANCE = 0.35         # fit slack: cap is budget + TOLERANCE
+TOTAL_PEAK_CAP = 1.0     # the whole program must stay linear in K
+DRIFT_TOLERANCE = 0.25   # vs the committed analysis_scaling.json
+_REPORT_SITES = 12       # top sites recorded per program (violators always)
+
+
+def declared_budget(path: str) -> Optional[float]:
+    """The exponent budget for a source path, or None if undeclared."""
+    for prefix, cap in DECLARED_BUDGETS:
+        if path.startswith(prefix) or prefix in path:
+            return cap
+    return None
+
+
+def fit_exponent(ks: Sequence[int], byts: Sequence[int]) -> Optional[float]:
+    """Least-squares slope of log(bytes) against log(K).
+
+    Returns None when the series can't be fit (a zero-byte point)."""
+    pts = [(math.log(k), math.log(b)) for k, b in zip(ks, byts) if b > 0]
+    if len(pts) < 2:
+        return None
+    xbar = sum(x for x, _ in pts) / len(pts)
+    ybar = sum(y for _, y in pts) / len(pts)
+    den = sum((x - xbar) ** 2 for x, _ in pts)
+    if den == 0:
+        return None
+    return sum((x - xbar) * (y - ybar) for x, y in pts) / den
+
+
+def _fit_program(prog, k_values: Sequence[int]) -> Dict[str, Any]:
+    """Trace one program across K and fit every site + the total peak."""
+    per_k: Dict[int, Any] = {}
+    for k in k_values:
+        per_k[k] = audit_program(prog, k, closed=trace_program(prog, k))
+    sites = sorted({s for a in per_k.values() for s in a.site_max_bytes},
+                   key=lambda s: (s.path, s.line, s.primitive))
+    site_rows: List[Dict[str, Any]] = []
+    for site in sites:
+        byts = [per_k[k].site_max_bytes.get(site, 0) for k in k_values]
+        exp = fit_exponent(k_values, byts)
+        budget = declared_budget(site.path)
+        site_rows.append({
+            "site": site.label(),
+            "path": site.path,
+            "line": site.line,
+            "bytes": {str(k): b for k, b in zip(k_values, byts)},
+            "exponent": None if exp is None else round(exp, 3),
+            "budget": budget,
+            "declared": budget is not None,
+        })
+    totals = [per_k[k].peak_bytes for k in k_values]
+    return {
+        "path": prog.path,
+        "family": prog.family,
+        "peak_bytes": {str(k): b for k, b in zip(k_values, totals)},
+        "total_exponent": (lambda e: None if e is None else round(e, 3))(
+            fit_exponent(k_values, totals)),
+        "sites": site_rows,
+    }
+
+
+def _site_violations(row: Dict[str, Any]) -> Optional[str]:
+    exp = row["exponent"]
+    if exp is None:
+        return None
+    cap = (row["budget"] if row["declared"] else DEFAULT_CAP) + TOLERANCE
+    if exp <= cap:
+        return None
+    biggest = max(int(b) for b in row["bytes"].values())
+    if row["declared"]:
+        return (f"buffer scales ~O(K^{exp:.2f}) but its module is declared "
+                f"O(K^{row['budget']:.0f}) (cap {cap:.2f}; "
+                f"largest {biggest / 1e6:.2f} MB)")
+    return (f"undeclared buffer scales ~O(K^{exp:.2f}) in the user count "
+            f"(cap {cap:.2f}; largest {biggest / 1e6:.2f} MB) — declare a "
+            f"budget in analysis/ir/scaling.py or fix the allocation")
+
+
+def scaling_report(programs=None,
+                   k_values: Sequence[int] = K_VALUES) -> Dict[str, Any]:
+    """Fit exponents for every registry program; JSON-able.
+
+    Per program the committed record keeps the total-peak series plus the
+    top ``_REPORT_SITES`` sites by size and every violating site; the
+    gate itself evaluates *all* sites before truncation."""
+    from repro.analysis.ir.programs import engine_programs
+    report: Dict[str, Any] = {
+        "k_values": list(k_values),
+        "tolerance": TOLERANCE,
+        "default_cap": DEFAULT_CAP,
+        "programs": {},
+    }
+    for prog in (programs if programs is not None else engine_programs()):
+        try:
+            fitted = _fit_program(prog, k_values)
+        except Exception as exc:
+            report["programs"][prog.name] = {
+                "path": prog.path, "family": prog.family,
+                "error": f"{type(exc).__name__}: {exc}"}
+            continue
+        for row in fitted["sites"]:
+            msg = _site_violations(row)
+            if msg:
+                row["violation"] = msg
+        keep = [r for r in fitted["sites"] if "violation" in r]
+        rest = sorted((r for r in fitted["sites"] if "violation" not in r),
+                      key=lambda r: -max(int(b) for b in r["bytes"].values()))
+        dropped = max(0, len(rest) - _REPORT_SITES)
+        fitted["sites"] = keep + rest[:_REPORT_SITES]
+        fitted["sites_omitted"] = dropped
+        report["programs"][prog.name] = fitted
+    return report
+
+
+def run_scaling_gate(programs=None, k_values: Sequence[int] = K_VALUES,
+                     committed: Optional[Path] = None,
+                     report: Optional[Dict[str, Any]] = None
+                     ) -> Tuple[List[Finding], Dict[str, Any]]:
+    """Apply the budgets (and drift vs the committed record) as findings."""
+    if report is None:
+        report = scaling_report(programs, k_values)
+    findings: List[Finding] = []
+    for name, rec in report["programs"].items():
+        if "error" in rec:
+            findings.append(Finding(
+                rec["path"], 1, 0, "ir-scaling",
+                f"{name}: scaling sweep failed: {rec['error']}"))
+            continue
+        for row in rec["sites"]:
+            if "violation" in row:
+                findings.append(Finding(
+                    row["path"] if row["line"] else rec["path"],
+                    row["line"] or 1, 0, "ir-scaling",
+                    f"{name}: {row['site']}: {row['violation']}"))
+        texp = rec["total_exponent"]
+        if texp is not None and texp > TOTAL_PEAK_CAP + TOLERANCE:
+            findings.append(Finding(
+                rec["path"], 1, 0, "ir-scaling",
+                f"{name}: total liveness peak scales ~O(K^{texp:.2f}) "
+                f"(cap {TOTAL_PEAK_CAP + TOLERANCE:.2f}) — the program is "
+                f"super-linear in the user count"))
+    if committed is not None:
+        findings.extend(_drift_findings(report, committed))
+    return findings, report
+
+
+def _drift_findings(report: Dict[str, Any],
+                    committed_path: Path) -> List[Finding]:
+    try:
+        committed = json.loads(Path(committed_path).read_text())
+    except FileNotFoundError:
+        return [Finding(
+            str(committed_path), 1, 0, "ir-scaling",
+            "committed scaling record missing — run "
+            "`python -m repro.analysis --write-scaling` and commit it")]
+    except Exception as exc:
+        return [Finding(str(committed_path), 1, 0, "ir-scaling",
+                        f"committed scaling record unreadable: {exc}")]
+    out: List[Finding] = []
+    old = committed.get("programs", {})
+    for name, rec in report["programs"].items():
+        texp, prev = rec.get("total_exponent"), old.get(name, {})
+        pexp = prev.get("total_exponent")
+        if texp is None or pexp is None:
+            continue
+        if abs(texp - pexp) > DRIFT_TOLERANCE:
+            out.append(Finding(
+                rec["path"], 1, 0, "ir-scaling",
+                f"{name}: total-peak exponent drifted "
+                f"{pexp:.2f} -> {texp:.2f} vs committed "
+                f"analysis_scaling.json (tolerance {DRIFT_TOLERANCE}) — "
+                f"regenerate with --write-scaling if intentional"))
+    return out
+
+
+def write_scaling_json(path: Path, report: Dict[str, Any]) -> None:
+    Path(path).write_text(
+        json.dumps(report, indent=2, sort_keys=True) + "\n")

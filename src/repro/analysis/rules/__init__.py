@@ -1,4 +1,4 @@
 """Lint rules — importing this package registers every rule."""
-from repro.analysis.rules import (dtype_policy, host_sync, jit_donate,
-                                  numpy_hot, rng_discipline,
+from repro.analysis.rules import (dtype_policy, except_swallow, host_sync,
+                                  jit_donate, numpy_hot, rng_discipline,
                                   scheme_strings)  # noqa: F401

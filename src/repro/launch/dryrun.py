@@ -35,7 +35,7 @@ from repro.models.inputs import input_specs
 from repro.optim import adamw
 from repro.sharding import rules
 from repro.training import create_train_state, make_prefill_step, make_train_step
-from repro.utils.hlo import collective_stats
+from repro.utils.hlo import collective_stats, compiled_memory_stats
 
 DRYRUN_OPTS = {"impl": "xla", "moe_dispatch": "scatter", "remat": "none"}
 
@@ -156,7 +156,7 @@ def _compile_stats(cfg, shape, mesh, multi_pod, opts) -> Dict[str, Any]:
     with mesh:
         lowered = fn.lower(*args)
         compiled = lowered.compile()
-    mem = compiled.memory_analysis()
+    mem = compiled_memory_stats(compiled)
     cost = compiled.cost_analysis()
     cost = cost[0] if isinstance(cost, (list, tuple)) else cost
     hlo = compiled.as_text()
@@ -166,7 +166,7 @@ def _compile_stats(cfg, shape, mesh, multi_pod, opts) -> Dict[str, Any]:
         "bytes": float(cost.get("bytes accessed", 0.0)),
         "coll": coll,
         "coll_bytes": sum(v["bytes"] for v in coll.values()),
-        "memory": {k: int(getattr(mem, k, 0)) for k in
+        "memory": {k: mem[k] for k in
                    ("argument_size_in_bytes", "output_size_in_bytes",
                     "temp_size_in_bytes", "peak_memory_in_bytes")},
     }

@@ -1,15 +1,22 @@
-"""HLO text analysis for the roofline: collective bytes + remat duplication.
+"""HLO text analysis: collective bytes, remat duplication, buffer aliasing.
 
 ``collective_bytes`` parses lowered/compiled HLO text and sums operand sizes
 of all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
 ops.  cost_analysis() does not report these, so the §Roofline collective term
 comes from here (see the brief's ROOFLINE ANALYSIS).
+
+``input_output_aliases`` parses the ``input_output_alias={...}`` annotation
+off the compiled module header — the ground truth of which donated argument
+buffers XLA actually reuses (``analysis/ir/alias_audit`` compares it against
+the donation the source claims).  ``compiled_memory_stats`` normalizes
+``Compiled.memory_analysis()`` into a plain dict (shared by
+``launch/dryrun.py`` and the IR auditor).
 """
 from __future__ import annotations
 
 import re
 from collections import Counter
-from typing import Dict
+from typing import Any, Dict, List, Tuple
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
@@ -68,3 +75,59 @@ def duplicate_op_counts(hlo_text: str, top: int = 10) -> Counter:
     """Fusion-name histogram — a quick remat/recompute smell test."""
     names = re.findall(r"%([a-zA-Z0-9_.\-]+?)(?:\.\d+)?\s*=", hlo_text)
     return Counter(names).most_common(top)
+
+
+# ---------------------------------------------------------------------------
+# buffer aliasing + compiled memory stats (IR auditor / dryrun plumbing)
+# ---------------------------------------------------------------------------
+
+# module-header annotation, e.g.
+#   input_output_alias={ {0}: (0, {}, may-alias), {1}: (2, {}, must-alias) }
+_ALIAS_BLOCK_RE = re.compile(r"input_output_alias=\{(.*?)\}\s*(?:,|$)")
+_ALIAS_ENTRY_RE = re.compile(
+    r"\{\s*([0-9, ]*)\s*\}\s*:\s*\(\s*(\d+)\s*,\s*\{[0-9, ]*\}\s*,\s*"
+    r"(may-alias|must-alias)\s*\)")
+
+
+def input_output_aliases(hlo_text: str) -> List[Dict[str, Any]]:
+    """Parsed ``input_output_alias`` entries from a compiled module header.
+
+    Each entry is ``{"output_index": (..) , "parameter": int, "kind": str}``;
+    an empty list means XLA aliases nothing — every donated buffer was
+    silently dropped."""
+    out: List[Dict[str, Any]] = []
+    for line in hlo_text.splitlines():
+        if "input_output_alias=" not in line:
+            continue
+        block = _ALIAS_BLOCK_RE.search(line)
+        if not block:
+            continue
+        for oidx, param, kind in _ALIAS_ENTRY_RE.findall(line):
+            out.append({
+                "output_index": tuple(int(x) for x in oidx.split(",")
+                                      if x.strip()),
+                "parameter": int(param),
+                "kind": kind,
+            })
+        break                     # the annotation appears once, on the header
+    return out
+
+
+def aliased_parameters(hlo_text: str) -> Tuple[int, ...]:
+    """Sorted parameter numbers that alias some output buffer."""
+    return tuple(sorted({e["parameter"]
+                         for e in input_output_aliases(hlo_text)}))
+
+
+_MEMORY_FIELDS = ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes", "peak_memory_in_bytes")
+
+
+def compiled_memory_stats(compiled: Any) -> Dict[str, int]:
+    """``Compiled.memory_analysis()`` as a plain dict (absent fields -> 0).
+
+    Some backends return None (no memory analysis); that maps to all-zero
+    so callers can always do arithmetic on the result."""
+    mem = compiled.memory_analysis()
+    return {k: int(getattr(mem, k, 0) or 0) for k in _MEMORY_FIELDS}

@@ -34,7 +34,7 @@ def findings_for(src, relpath, rule=None):
 def test_rule_registry_nonempty():
     names = {r.name for r in all_rules()}
     assert {"scheme-branch", "host-sync", "rng-reuse", "jit-donate",
-            "dtype-thread", "np-hot"} <= names
+            "dtype-thread", "np-hot", "except-swallow"} <= names
 
 
 # ---------------------------------------------------------------------------
@@ -500,3 +500,146 @@ def test_full_contract_sweep_clean():
     from repro.analysis.contracts import run_contracts
 
     assert run_contracts(repo_root=REPO) == []
+
+
+# ---------------------------------------------------------------------------
+# except-swallow
+# ---------------------------------------------------------------------------
+
+SWALLOW = """
+def recv(sock):
+    for _ in range(3):
+        try:
+            return sock.read()
+        except Exception:
+            continue
+    try:
+        sock.close()
+    except:
+        pass
+"""
+
+SERVE = "src/repro/serving/fl_server.py"
+
+
+def test_except_swallow_fires_in_serving():
+    got = findings_for(SWALLOW, SERVE, "except-swallow")
+    assert len(got) == 2
+    assert {f.line for f in got} == {6, 10}
+
+
+def test_except_swallow_fires_in_transport_and_faults():
+    for path in ("src/repro/core/transport.py", "src/repro/core/faults.py"):
+        assert findings_for(SWALLOW, path, "except-swallow")
+
+
+def test_except_swallow_silent_outside_scope():
+    assert not findings_for(SWALLOW, CORE, "except-swallow")
+    assert not findings_for(SWALLOW, KERN, "except-swallow")
+
+
+def test_except_swallow_allows_handlers_that_act():
+    src = """
+    def recv(sock, log):
+        try:
+            return sock.read()
+        except TimeoutError:
+            pass                      # narrow type: deliberate retry
+        except Exception as exc:
+            log.warning("recv failed: %s", exc)
+    """
+    assert not findings_for(src, SERVE, "except-swallow")
+
+
+def test_except_swallow_pragma_suppresses():
+    src = ("def close(s):\n"
+           "    try:\n"
+           "        s.close()\n"
+           "    except Exception:  # analysis: ok=except-swallow\n"
+           "        pass\n")
+    live = findings_for(src, SERVE, "except-swallow")
+    assert live
+    kept = filter_findings(live, Baseline(), {SERVE: src.splitlines()})
+    assert kept == []
+
+
+# ---------------------------------------------------------------------------
+# output formats (github / sarif)
+# ---------------------------------------------------------------------------
+
+def test_render_github_annotations():
+    from repro.analysis.findings import render_github
+    fs = [Finding("src/a.py", 3, 1, "np-hot", "first\nsecond % line")]
+    out = render_github(fs)
+    assert out.startswith("::error file=src/a.py,line=3,col=1::")
+    assert "%0A" in out and "%25" in out and "\n" not in out.strip()
+
+
+def test_render_sarif_structure():
+    import json
+
+    from repro.analysis.findings import render_sarif
+    fs = [Finding("src/a.py", 3, 1, "np-hot", "msg"),
+          Finding("src/b.py", 0, 0, "ir-alias", "dropped")]
+    doc = json.loads(render_sarif(fs, {"np-hot": "numpy in hot path"}))
+    assert doc["version"] == "2.1.0"
+    run = doc["runs"][0]
+    assert {r["id"] for r in run["tool"]["driver"]["rules"]} == \
+        {"np-hot", "ir-alias"}
+    res = run["results"]
+    assert res[0]["ruleId"] == "np-hot"
+    loc = res[1]["locations"][0]["physicalLocation"]
+    assert loc["region"]["startLine"] == 1       # clamped from 0
+
+
+def test_cli_format_github(tmp_tree):
+    res = _run_cli(tmp_tree, "--format", "github", "src/repro")
+    assert res.returncode == 1
+    assert "::error file=src/repro/core/bad.py,line=4" in res.stdout
+
+
+def test_cli_format_sarif(tmp_tree):
+    import json
+
+    res = _run_cli(tmp_tree, "--format", "sarif", "src/repro")
+    assert res.returncode == 1
+    doc = json.loads(res.stdout)
+    assert doc["runs"][0]["results"][0]["ruleId"] == "jit-donate"
+
+
+# ---------------------------------------------------------------------------
+# stale-baseline lifecycle: --strict-baseline and --prune-baseline
+# ---------------------------------------------------------------------------
+
+STALE_ENTRY = ("src/repro/core/gone.py :: jit-donate :: return jax.jit(f) "
+               ":: was reviewed, file since deleted\n")
+
+
+def test_cli_strict_baseline_fails_on_stale(tmp_tree):
+    (tmp_tree / "src" / "repro" / "core" / "bad.py").write_text(
+        "import jax\n\ndef build(f):\n"
+        "    return jax.jit(f, donate_argnums=(0,))\n")
+    (tmp_tree / "analysis_baseline.txt").write_text(STALE_ENTRY)
+    res = _run_cli(tmp_tree, "src/repro")
+    assert res.returncode == 0               # stale is a note by default
+    assert "stale baseline entry" in res.stderr
+    res = _run_cli(tmp_tree, "--strict-baseline", "src/repro")
+    assert res.returncode == 1
+    assert "stale" in res.stderr
+
+
+def test_cli_prune_baseline_rewrites_file(tmp_tree):
+    res = _run_cli(tmp_tree, "--write-baseline", "src/repro")
+    live_entries = res.stdout.replace("TODO: one-line justification",
+                                      "reviewed")
+    (tmp_tree / "analysis_baseline.txt").write_text(
+        live_entries + STALE_ENTRY)
+    res = _run_cli(tmp_tree, "--prune-baseline", "--strict-baseline",
+                   "src/repro")
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert "pruned 1 stale" in res.stderr
+    kept = (tmp_tree / "analysis_baseline.txt").read_text()
+    assert "gone.py" not in kept
+    assert "bad.py" in kept                  # live entry survives the prune
+    res = _run_cli(tmp_tree, "--strict-baseline", "src/repro")
+    assert res.returncode == 0, res.stdout + res.stderr

@@ -14,7 +14,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.analysis.guards import (CompileBudgetExceeded, CompileCounter,
-                                   compile_budget, engine_guard, leak_check,
+                                   MemoryBudgetExceeded, compile_budget,
+                                   engine_guard, leak_check, memory_budget,
                                    no_implicit_transfers)
 from repro.core.hsfl import HSFLConfig, HSFLSimulation
 from repro.core.sweep import SweepSpec, run_sweep
@@ -156,4 +157,56 @@ def test_fused_async_carry_clean_under_guard():
     with no_implicit_transfers():
         for t in (1, 2):
             log, delayed = sim.run_round(t, delayed)
+    assert log.selected == 3
+
+
+# ---------------------------------------------------------------------------
+# memory_budget — the compiled-footprint cap
+# ---------------------------------------------------------------------------
+
+def _mm(x):
+    return x @ x.T
+
+
+def test_memory_budget_under_limit_passes():
+    with memory_budget(64 * 2**20) as records:
+        jax.jit(_mm)(jnp.ones((64, 64))).block_until_ready()
+    assert any("_mm" in name for name, _ in records)
+
+
+def test_memory_budget_overrun_raises_with_name():
+    with pytest.raises(MemoryBudgetExceeded, match="_mm"):
+        with memory_budget(1024, match="_mm"):
+            jax.jit(_mm)(jnp.ones((128, 128))).block_until_ready()
+
+
+def test_memory_budget_match_filters_programs():
+    with memory_budget(1024, match="no_such_program") as records:
+        jax.jit(_mm)(jnp.ones((128, 128))).block_until_ready()
+    assert records == []
+
+
+def test_memory_budget_credits_donation():
+    """A donated in-place update reserves ~one buffer, not two."""
+    n = 256 * 256          # 256 kB per f32 buffer
+    fn = jax.jit(lambda x: x * 2.0, donate_argnums=(0,))
+    # budget fits arg+out with aliasing credited, not without
+    with memory_budget(int(n * 4 * 1.5), match="lambda"):
+        fn(jnp.ones((n,))).block_until_ready()
+
+
+def test_memory_budget_restores_compile_path():
+    from jax._src.interpreters import pxla
+    before = pxla.MeshComputation.compile
+    with memory_budget(2**30):
+        pass
+    assert pxla.MeshComputation.compile is before
+
+
+def test_fused_engine_round_fits_memory_budget():
+    """The fused round at test scale stays under a generous cap — the
+    runtime twin of the IR walker's liveness estimate."""
+    sim = HSFLSimulation(tiny_base())
+    with memory_budget(512 * 2**20):
+        log, _ = sim.run_round(1, None)
     assert log.selected == 3

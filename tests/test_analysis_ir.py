@@ -1,0 +1,349 @@
+"""IR auditor tests: walker, donation verifier, scaling gate, CLI wiring.
+
+The acceptance fixtures mirror the two defect classes the auditors exist
+for: an *undeclared O(K²) buffer* (a gram matrix materialized on the user
+axis) and a *silently dropped donation* (a donated argument XLA cannot
+alias).  Both must drive ``python -m repro.analysis --ir`` to exit 1 with
+``path:line`` provenance.  The coverage tests pin the registry to the
+live scheme registry and the on-disk kernel twins, so a new scheme or
+kernel cannot ship without entering the IR sweep.
+"""
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis.ir import alias_audit, jaxpr_audit, scaling
+from repro.analysis.ir.programs import (EngineProgram, covered_kernel_twins,
+                                        covered_schemes, engine_programs,
+                                        program_names)
+
+REPO = Path(__file__).resolve().parents[1]
+HERE = "tests/test_analysis_ir.py"
+
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+# ---------------------------------------------------------------------------
+# fixture programs
+# ---------------------------------------------------------------------------
+
+def _gram(x):
+    g = x @ x.T            # materializes a K x K gram matrix
+    return g.sum()
+
+
+def quadratic_prog():
+    """Undeclared O(K^2) buffer on the user axis."""
+    return EngineProgram(
+        name="fixture[gram]", family="fixture", path=HERE,
+        build=lambda k: (_gram, (_sds((k, 8)),)))
+
+
+def _rowsum(x):
+    y = x * 2.0
+    return y.sum(axis=1)
+
+
+def linear_prog():
+    return EngineProgram(
+        name="fixture[rowsum]", family="fixture", path=HERE,
+        build=lambda k: (_rowsum, (_sds((k, 8)),)))
+
+
+def dropped_donation_prog():
+    """Donated (2K,) input that can't alias the (K,) output."""
+    def build(k):
+        fn = jax.jit(lambda a, b: a[:k] + b, donate_argnums=(0,))
+        return fn, (_sds((2 * k,)), _sds((k,)))
+    return EngineProgram(
+        name="fixture[drop]", family="fused_round", path=HERE,
+        build=build, donate_argnums=(0,))
+
+
+def kept_donation_prog():
+    def build(k):
+        fn = jax.jit(lambda a, b: a + b, donate_argnums=(0,))
+        return fn, (_sds((k,)), _sds((k,)))
+    return EngineProgram(
+        name="fixture[keep]", family="fused_round", path=HERE,
+        build=build, donate_argnums=(0,))
+
+
+def _leaky(x, s):
+    return x * s
+
+
+def _explicit(x, s):
+    return x.astype(jnp.float32) * s
+
+
+def _bf16_prog(fn, name):
+    return EngineProgram(
+        name=name, family="kernel", path=HERE,
+        build=lambda k: (fn, (_sds((k, 8), jnp.bfloat16), _sds((8,)))),
+        compute_dtype="bf16")
+
+
+# ---------------------------------------------------------------------------
+# registry coverage: every scheme, both builders; every kernel twin
+# ---------------------------------------------------------------------------
+
+def test_registry_covers_every_registered_scheme():
+    from repro.core.schemes import registered_schemes
+    cov = covered_schemes()
+    missing_fused = set(registered_schemes()) - cov["fused_round"]
+    missing_device = set(registered_schemes()) - cov["device_round"]
+    assert not missing_fused, f"schemes without fused IR: {missing_fused}"
+    assert not missing_device, f"schemes without device IR: {missing_device}"
+
+
+def test_registry_covers_every_kernel_twin():
+    from repro.analysis.contracts import kernel_twin_packages
+    on_disk = set(kernel_twin_packages(REPO))
+    assert on_disk, "expected kernel twin packages on disk"
+    assert on_disk <= covered_kernel_twins()
+
+
+def test_registry_builds_avals_only():
+    names = program_names()
+    assert len(names) == len(set(names))
+    for prog in engine_programs():
+        fn, args = prog.build(4)
+        assert callable(fn), prog.name
+        for leaf in jax.tree_util.tree_leaves(args):
+            assert isinstance(leaf, jax.ShapeDtypeStruct), prog.name
+
+
+def test_committed_scaling_record_in_sync_with_registry():
+    """analysis_scaling.json covers exactly the current registry."""
+    committed = json.loads((REPO / "analysis_scaling.json").read_text())
+    assert set(committed["programs"]) == set(program_names())
+    assert committed["k_values"] == list(scaling.K_VALUES)
+    for name, rec in committed["programs"].items():
+        assert "error" not in rec, f"{name}: {rec.get('error')}"
+        assert rec["total_exponent"] is not None, name
+
+
+# ---------------------------------------------------------------------------
+# jaxpr walker
+# ---------------------------------------------------------------------------
+
+def test_walker_peak_covers_known_buffer():
+    audit = jaxpr_audit.audit_program(quadratic_prog(), k=64)
+    assert audit.peak_bytes >= 64 * 64 * 4     # the gram matrix itself
+    top = audit.top_buffers(3)
+    assert any(b.site.path == HERE for b in top), \
+        "peak provenance should anchor to this test file"
+
+
+def test_walker_liveness_frees_dead_buffers():
+    def two_temps(x):
+        a = (x * 2.0).sum()
+        b = (x * 3.0).sum()
+        return a + b
+
+    prog = EngineProgram(name="fixture[temps]", family="fixture",
+                         path=HERE,
+                         build=lambda k: (two_temps, (_sds((k,)),)))
+    audit = jaxpr_audit.audit_program(prog, k=4096)
+    # input + ONE temp live at a time (plus scalars), never both temps
+    assert audit.peak_bytes < 2.5 * 4096 * 4
+
+
+def test_walker_recurses_into_scan():
+    def scanned(x):
+        def body(c, _):
+            return c, (c @ c.T).sum()
+        return jax.lax.scan(body, x, None, length=3)
+
+    prog = EngineProgram(name="fixture[scan]", family="fixture",
+                         path=HERE,
+                         build=lambda k: (scanned, (_sds((k, 8)),)))
+    audit = jaxpr_audit.audit_program(prog, k=64)
+    assert audit.peak_bytes >= 64 * 64 * 4     # gram inside the scan body
+
+
+def test_trace_failure_is_a_finding():
+    def boom(x):
+        raise ValueError("builder exploded")
+
+    prog = EngineProgram(name="fixture[boom]", family="fixture",
+                         path=HERE, build=lambda k: (boom, (_sds((k,)),)))
+    findings, audits = jaxpr_audit.run_jaxpr_audit([prog])
+    assert audits == []
+    assert len(findings) == 1 and findings[0].rule == "ir-trace"
+    assert "exploded" in findings[0].message
+
+
+# ---------------------------------------------------------------------------
+# dtype promotion audit
+# ---------------------------------------------------------------------------
+
+def test_implicit_bf16_promotion_fires():
+    fs = jaxpr_audit.dtype_promotions(_bf16_prog(_leaky, "fixture[leak]"))
+    assert fs and all(f.rule == "ir-dtype" for f in fs)
+    assert fs[0].path == HERE and fs[0].line > 0
+
+
+def test_visible_cast_is_exempt():
+    assert jaxpr_audit.dtype_promotions(
+        _bf16_prog(_explicit, "fixture[cast]")) == []
+
+
+def test_f32_program_skips_dtype_audit():
+    prog = EngineProgram(
+        name="fixture[f32]", family="kernel", path=HERE,
+        build=lambda k: (_leaky, (_sds((k, 8), jnp.bfloat16), _sds((8,)))))
+    assert jaxpr_audit.dtype_promotions(prog) == []
+
+
+# ---------------------------------------------------------------------------
+# donation/alias verifier
+# ---------------------------------------------------------------------------
+
+def test_dropped_donation_is_a_finding():
+    findings, rec = alias_audit.audit_donation(dropped_donation_prog())
+    assert len(findings) == 1 and findings[0].rule == "ir-alias"
+    assert "dropped flat parameter" in findings[0].message
+    assert rec["missing"] == [0]
+
+
+def test_kept_donation_is_clean():
+    findings, rec = alias_audit.audit_donation(kept_donation_prog())
+    assert findings == []
+    assert rec["missing"] == [] and rec["aliased"] == [0]
+
+
+def test_donated_flat_indices_pytrees():
+    tree = {"a": _sds((4,)), "b": [_sds((2,)), _sds((3,))]}
+    got = alias_audit.donated_flat_indices((tree, _sds((5,))), (1,))
+    assert got == [3]
+    got = alias_audit.donated_flat_indices((tree, _sds((5,))), (0,))
+    assert got == [0, 1, 2]
+
+
+def test_alias_audit_skips_undonated_programs():
+    findings, rec = alias_audit.audit_donation(quadratic_prog())
+    assert findings == [] and "skipped" in rec
+
+
+# ---------------------------------------------------------------------------
+# K-scaling gate
+# ---------------------------------------------------------------------------
+
+def test_fit_exponent_recovers_powers():
+    ks = (4, 16, 64, 256)
+    assert scaling.fit_exponent(ks, [k * 7 for k in ks]) == \
+        pytest.approx(1.0)
+    assert scaling.fit_exponent(ks, [k * k for k in ks]) == \
+        pytest.approx(2.0)
+    assert scaling.fit_exponent(ks, [1024] * 4) == pytest.approx(0.0)
+    assert scaling.fit_exponent(ks, [0, 0, 0, 0]) is None
+
+
+def test_declared_budget_patterns():
+    assert scaling.declared_budget("src/repro/core/fused_round.py") == 1.0
+    assert scaling.declared_budget("<argument>") == 1.0
+    assert scaling.declared_budget("tests/somewhere.py") is None
+
+
+def test_gate_flags_undeclared_quadratic_buffer():
+    findings, report = scaling.run_scaling_gate([quadratic_prog()])
+    gram = [f for f in findings if f.rule == "ir-scaling"
+            and "undeclared" in f.message and "O(K^2" in f.message]
+    assert gram, [f.message for f in findings]
+    assert gram[0].path == HERE and gram[0].line > 0
+
+
+def test_gate_passes_declared_linear_buffer(monkeypatch):
+    monkeypatch.setattr(
+        scaling, "DECLARED_BUDGETS",
+        scaling.DECLARED_BUDGETS + (("tests/", 1.0),))
+    findings, report = scaling.run_scaling_gate([linear_prog()])
+    assert findings == []
+    rec = report["programs"]["fixture[rowsum]"]
+    assert rec["total_exponent"] == pytest.approx(1.0, abs=0.1)
+
+
+def test_gate_flags_drift_against_committed(tmp_path):
+    _, report = scaling.run_scaling_gate([linear_prog()])
+    committed = tmp_path / "analysis_scaling.json"
+    stale = json.loads(json.dumps(report))
+    stale["programs"]["fixture[rowsum]"]["total_exponent"] = 2.0
+    committed.write_text(json.dumps(stale))
+    drift = scaling._drift_findings(report, committed)
+    assert len(drift) == 1 and "drifted" in drift[0].message
+
+
+def test_gate_missing_committed_record_is_a_finding(tmp_path):
+    _, report = scaling.run_scaling_gate([linear_prog()])
+    drift = scaling._drift_findings(report, tmp_path / "nope.json")
+    assert len(drift) == 1 and "--write-scaling" in drift[0].message
+
+
+# ---------------------------------------------------------------------------
+# CLI acceptance: fixtures must exit 1 with provenance
+# ---------------------------------------------------------------------------
+
+def _main_ir(monkeypatch, progs, *extra):
+    from repro.analysis.__main__ import main
+    monkeypatch.setattr("repro.analysis.ir.programs.engine_programs",
+                        lambda: progs)
+    return main(["--root", str(REPO), "--no-lint", "--no-contracts",
+                 "--ir", "--baseline", "no_such_baseline.txt", *extra])
+
+
+def test_cli_ir_quadratic_fixture_exits_1(monkeypatch, capsys):
+    rc = _main_ir(monkeypatch, [quadratic_prog()])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "[ir-scaling]" in out
+    assert f"{HERE}:" in out            # path:line provenance
+
+
+def test_cli_ir_dropped_donation_exits_1(monkeypatch, capsys):
+    rc = _main_ir(monkeypatch, [dropped_donation_prog()])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "[ir-alias]" in out
+    assert "dropped flat parameter" in out
+    assert HERE in out
+
+
+def test_cli_ir_clean_fixture_exits_0(monkeypatch, capsys):
+    monkeypatch.setattr(
+        scaling, "DECLARED_BUDGETS",
+        scaling.DECLARED_BUDGETS + (("tests/", 1.0),))
+    rc = _main_ir(monkeypatch, [linear_prog(), kept_donation_prog()])
+    out = capsys.readouterr().out
+    assert rc == 0, out
+    assert "clean" in out
+
+
+def test_cli_write_scaling_round_trip(monkeypatch, capsys, tmp_path):
+    from repro.analysis.__main__ import main
+    monkeypatch.setattr(
+        scaling, "DECLARED_BUDGETS",
+        scaling.DECLARED_BUDGETS + (("tests/", 1.0),))
+    monkeypatch.setattr("repro.analysis.ir.programs.engine_programs",
+                        lambda: [linear_prog()])
+    scaling_file = tmp_path / "scaling.json"
+    rc = main(["--root", str(REPO), "--write-scaling",
+               "--scaling-file", str(scaling_file)])
+    assert rc == 0 and scaling_file.exists()
+    rec = json.loads(scaling_file.read_text())
+    assert "fixture[rowsum]" in rec["programs"]
+    rc = main(["--root", str(REPO), "--no-lint", "--no-contracts", "--ir",
+               "--baseline", "no_such_baseline.txt",
+               "--scaling-file", str(scaling_file)])
+    capsys.readouterr()
+    assert rc == 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(pytest.main([__file__, "-q"]))

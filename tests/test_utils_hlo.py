@@ -1,0 +1,139 @@
+"""utils/hlo.py text-analysis tests: collectives, dup ops, aliasing, stats.
+
+The collective fixtures use the tuple-typed async form (``-start`` whose
+result is a ``(operand, result)`` tuple consumed by ``-done``) that real
+compiled HLO emits for overlapped collectives — the parser must count
+each async pair once, off the ``-start`` line.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.utils.hlo import (aliased_parameters, collective_bytes,
+                             collective_stats, compiled_memory_stats,
+                             duplicate_op_counts, input_output_aliases)
+
+ASYNC_HLO = """\
+HloModule jit_round
+
+ENTRY %main (p0: f32[16,128], p1: f32[128]) -> f32[64,128] {
+  %p0 = f32[16,128]{1,0} parameter(0)
+  %p1 = f32[128]{0} parameter(1)
+  %ag-start = (f32[16,128]{1,0}, f32[64,128]{1,0}) all-gather-start(f32[16,128]{1,0} %p0), dimensions={0}
+  %ag-done = f32[64,128]{1,0} all-gather-done((f32[16,128]{1,0}, f32[64,128]{1,0}) %ag-start)
+  %ar-start = (f32[128]{0}, f32[128]{0}) all-reduce-start(f32[128]{0} %p1), to_apply=%add
+  %ar-done = f32[128]{0} all-reduce-done((f32[128]{0}, f32[128]{0}) %ar-start)
+  %rs = bf16[32,64]{1,0} reduce-scatter(bf16[128,64]{1,0} %x), dimensions={0}
+}
+"""
+
+
+def test_collective_stats_counts_async_pairs_once():
+    stats = collective_stats(ASYNC_HLO)
+    assert stats["all-gather"]["count"] == 1
+    assert stats["all-reduce"]["count"] == 1
+    assert stats["reduce-scatter"]["count"] == 1
+    assert stats["all-to-all"]["count"] == 0
+
+
+def test_collective_bytes_tuple_types():
+    stats = collective_stats(ASYNC_HLO)
+    # the -start result type is the (operand, result) tuple: both shapes
+    assert stats["all-gather"]["bytes"] == (16 * 128 + 64 * 128) * 4
+    assert stats["all-reduce"]["bytes"] == 2 * 128 * 4
+    assert stats["reduce-scatter"]["bytes"] == 32 * 64 * 2  # bf16 output
+    assert collective_bytes(ASYNC_HLO) == sum(
+        v["bytes"] for v in stats.values())
+
+
+def test_collective_stats_empty_on_pure_compute():
+    hlo = "ENTRY %main {\n  %d = f32[8,8]{1,0} dot(%a, %b)\n}\n"
+    assert collective_bytes(hlo) == 0.0
+
+
+def test_duplicate_op_counts_folds_ssa_suffixes():
+    hlo = ("%fusion = f32[8]{0} fusion(%a)\n"
+           "%fusion.1 = f32[8]{0} fusion(%b)\n"
+           "%fusion.2 = f32[8]{0} fusion(%c)\n"
+           "%dot.3 = f32[8]{0} dot(%d, %e)\n")
+    top = dict(duplicate_op_counts(hlo))
+    assert top["fusion"] == 3
+    assert top["dot"] == 1
+
+
+# ---------------------------------------------------------------------------
+# input_output_alias header parsing
+# ---------------------------------------------------------------------------
+
+ALIAS_HEADER = ("HloModule jit_step, "
+                "input_output_alias={ {0}: (0, {}, may-alias), "
+                "{1}: (2, {}, must-alias) }, "
+                "entry_computation_layout={(f32[4]{0})->f32[4]{0}}")
+
+
+def test_input_output_aliases_parses_header():
+    entries = input_output_aliases(ALIAS_HEADER)
+    assert entries == [
+        {"output_index": (0,), "parameter": 0, "kind": "may-alias"},
+        {"output_index": (1,), "parameter": 2, "kind": "must-alias"},
+    ]
+    assert aliased_parameters(ALIAS_HEADER) == (0, 2)
+
+
+def test_input_output_aliases_absent_means_all_dropped():
+    assert input_output_aliases("HloModule jit_step\nENTRY %main {}") == []
+    assert aliased_parameters("HloModule jit_step") == ()
+
+
+def test_input_output_aliases_nested_output_index():
+    hdr = "HloModule m, input_output_alias={ {1, 0}: (3, {}, may-alias) }"
+    entries = input_output_aliases(hdr)
+    assert entries == [
+        {"output_index": (1, 0), "parameter": 3, "kind": "may-alias"}]
+
+
+def test_aliases_round_trip_through_real_compile():
+    fn = jax.jit(lambda x: x + 1.0, donate_argnums=(0,))
+    compiled = fn.lower(jnp.ones((32,))).compile()
+    assert aliased_parameters(compiled.as_text()) == (0,)
+
+
+# ---------------------------------------------------------------------------
+# compiled_memory_stats normalization
+# ---------------------------------------------------------------------------
+
+def test_compiled_memory_stats_real_compile():
+    compiled = jax.jit(lambda x: x * 2.0).lower(jnp.ones((64,))).compile()
+    mem = compiled_memory_stats(compiled)
+    assert mem["argument_size_in_bytes"] >= 64 * 4
+    assert mem["output_size_in_bytes"] >= 64 * 4
+    assert all(isinstance(v, int) for v in mem.values())
+    # absent fields (e.g. peak on CPU) normalize to 0, not AttributeError
+    assert mem["peak_memory_in_bytes"] >= 0
+
+
+def test_compiled_memory_stats_handles_none():
+    class NoAnalysis:
+        def memory_analysis(self):
+            return None
+
+    mem = compiled_memory_stats(NoAnalysis())
+    assert set(mem.values()) == {0}
+
+
+def test_compiled_memory_stats_partial_fields():
+    class Partial:
+        def memory_analysis(self):
+            class S:
+                argument_size_in_bytes = 128
+                temp_size_in_bytes = 7
+            return S()
+
+    mem = compiled_memory_stats(Partial())
+    assert mem["argument_size_in_bytes"] == 128
+    assert mem["temp_size_in_bytes"] == 7
+    assert mem["output_size_in_bytes"] == 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(pytest.main([__file__, "-q"]))
